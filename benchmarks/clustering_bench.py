@@ -1,0 +1,33 @@
+"""Paper Fig. 12: clustering + silhouette cost vs (r, k).
+
+Measured on one device; the complexity claims under test are
+O(k^2 r n / sqrt(p) log r) for clustering and O(r^2 k^2 n / sqrt(p)) for
+silhouettes — both linear in n, so the measured n-trend is the checkable
+part (communication costs are covered by the roofline table).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.clustering import custom_cluster
+from repro.core.silhouette import silhouettes
+
+from .common import Report, time_fn
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("clustering")
+    key = jax.random.PRNGKey(0)
+    for (r, n, k) in [(4, 256, 4), (8, 256, 4), (8, 1024, 4),
+                      (8, 1024, 16), (16, 1024, 16)]:
+        A_ens = jax.random.uniform(key, (r, n, k), minval=0.05, maxval=1.0)
+        R_ens = jax.random.uniform(key, (r, 3, k, k))
+        t_clus = time_fn(lambda: custom_cluster(A_ens, R_ens), iters=2)
+        t_sil = time_fn(lambda: silhouettes(A_ens), iters=2)
+        report.add(f"clustering/r{r}_n{n}_k{k}", seconds=t_clus,
+                   silhouette_s=round(t_sil, 4))
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

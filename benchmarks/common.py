@@ -1,0 +1,51 @@
+"""Benchmark plumbing: timing, CSV rows, artifact IO."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (blocks on jax async dispatch)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+class Report:
+    """Collects rows; prints the required `name,us_per_call,derived` CSV."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[dict] = []
+
+    def add(self, name: str, seconds: float | None = None, **derived):
+        row = {"name": name,
+               "us_per_call": None if seconds is None else seconds * 1e6}
+        row.update(derived)
+        self.rows.append(row)
+
+    def print_csv(self):
+        for r in self.rows:
+            us = "" if r["us_per_call"] is None else f"{r['us_per_call']:.1f}"
+            derived = ";".join(f"{k}={v}" for k, v in r.items()
+                               if k not in ("name", "us_per_call"))
+            print(f"{r['name']},{us},{derived}")
+
+    def save(self):
+        out_dir = os.path.join(ARTIFACTS, "bench")
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{self.name}.json"), "w") as f:
+            json.dump(self.rows, f, indent=1, default=str)

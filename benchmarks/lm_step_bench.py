@@ -1,0 +1,48 @@
+"""Single-device LM step microbenchmarks (reduced configs, CPU).
+
+Not a paper figure — framework regression numbers: wall time of one train
+step / decode step per reduced architecture, so substrate changes show up
+as CSV diffs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import REDUCED_ARCHS
+from repro.data import TokenStreamConfig, batch_at
+from repro.models import transformer
+from repro.optim import AdamW
+from repro.train import init_state, make_serve_step, make_train_step
+
+from .common import Report, time_fn
+
+ARCH_SUBSET = ["llama3.2-1b", "deepseek-moe-16b", "mamba2-1.3b",
+               "hymba-1.5b", "minicpm3-4b"]
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("lm_step")
+    key = jax.random.PRNGKey(0)
+    for name in ARCH_SUBSET:
+        cfg = REDUCED_ARCHS[name]
+        opt = AdamW()
+        state = init_state(key, cfg, opt)
+        ds = TokenStreamConfig(vocab=cfg.vocab, batch=2, seq=32)
+        step = make_train_step(cfg, None, optimizer=opt, remat=False,
+                               moe_impl="dense", donate=False)
+        t_train = time_fn(step, state, batch_at(ds, 0), warmup=1, iters=3)
+        report.add(f"lm_step/train/{name}", seconds=t_train)
+
+        params = state.params
+        cache = transformer.init_cache(cfg, 2, 32)
+        serve = make_serve_step(cfg, None, moe_impl="dense", donate=False)
+        tok = jnp.zeros((2, 1), jnp.int32)
+        t_dec = time_fn(serve, params, cache, tok, jnp.int32(0),
+                        warmup=1, iters=3)
+        report.add(f"lm_step/decode/{name}", seconds=t_dec)
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,91 @@
+"""§Perf: hypothesis -> change -> re-lower -> validate, per variant.
+
+Each VARIANT row re-lowers a hillclimb cell with one knob changed and
+reports the three roofline terms, so EXPERIMENTS.md §Perf can show the
+paper-faithful baseline and every optimization step side by side.
+
+Variants are run in subprocesses (dryrun needs the 512-device override
+before jax init) and cached under artifacts/perf/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import ARTIFACTS, Report
+
+PERF_DIR = os.path.join(ARTIFACTS, "perf")
+
+# (tag, arch, shape, extra dryrun args)
+VARIANTS = [
+    # --- the paper's technique: explicit 2D-grid RESCAL schedules ---
+    ("rescal3tb/paper_sliced", "rescal-dense-3tb", "mu_iter",
+     ["--rescal-schedule", "sliced"]),
+    ("rescal3tb/batched", "rescal-dense-3tb", "mu_iter",
+     ["--rescal-schedule", "batched"]),
+    ("rescal3tb/batched_bf16comm", "rescal-dense-3tb", "mu_iter",
+     ["--rescal-schedule", "batched", "--rescal-comm-dtype", "bfloat16"]),
+    ("rescal_eb/paper_sliced", "rescal-sparse-eb", "mu_iter",
+     ["--rescal-schedule", "sliced"]),
+    ("rescal_eb/sliced_bf16comm", "rescal-sparse-eb", "mu_iter",
+     ["--rescal-schedule", "sliced", "--rescal-comm-dtype", "bfloat16"]),
+    # --- LM hillclimb cells ---
+    ("moe_train/scatter_baseline", "granite-moe-3b-a800m", "train_4k",
+     ["--moe-impl", "scatter"]),
+    ("moe_train/einsum", "granite-moe-3b-a800m", "train_4k",
+     ["--moe-impl", "einsum"]),
+    ("llama_train/no_remat", "llama3.2-1b", "train_4k", ["--no-remat"]),
+    ("llama_train/remat", "llama3.2-1b", "train_4k", []),
+    # hillclimb cell 1: worst roofline fraction
+    ("minicpm_prefill/post_L8", "minicpm3-4b", "prefill_32k", []),
+    # hillclimb cell 2: was most collective-bound (pre-L7: 1.24e13 wire B)
+    ("moe_prefill/post_L7", "granite-moe-3b-a800m", "prefill_32k", []),
+    ("whisper_prefill/post_L7", "whisper-large-v3", "prefill_32k", []),
+]
+
+
+def _run_variant(tag, arch, shape, extra, timeout=2400):
+    os.makedirs(PERF_DIR, exist_ok=True)
+    out = os.path.join(PERF_DIR, tag.replace("/", "__") + ".json")
+    if os.path.exists(out):
+        return json.load(open(out))
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out] + extra
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+    if r.returncode != 0:
+        return {"error": r.stderr[-1500:]}
+    return json.load(open(out))
+
+
+def terms(cell):
+    t_c = cell["flops_per_device"] / PEAK_FLOPS_BF16
+    t_m = cell["bytes_per_device"] / HBM_BW
+    t_x = cell["collectives"]["total"]["wire_bytes"] / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    return t_c, t_m, t_x, dom[0]
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("perf_iterations")
+    for tag, arch, shape, extra in VARIANTS:
+        cell = _run_variant(tag, arch, shape, extra)
+        if "error" in cell:
+            report.add(f"perf/{tag}", error=cell["error"][:160])
+            continue
+        t_c, t_m, t_x, dom = terms(cell)
+        report.add(
+            f"perf/{tag}", seconds=max(t_c, t_m, t_x),
+            compute_s=round(t_c, 4), memory_s=round(t_m, 4),
+            collective_s=round(t_x, 4), dominant=dom,
+            colls=int(cell["collectives"]["total"]["count"]),
+            mem_gib=round(cell["memory"]["total"] / 2 ** 30, 2))
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

@@ -1,0 +1,92 @@
+"""§Roofline: the three-term analysis over the dry-run artifacts.
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective = wire_bytes / (chips x 50 GB/s ICI)
+
+All numerators are per-device already (the dry-run records per-device
+numbers from the partitioned module, loop-trip corrected), so the formulas
+divide only by the per-chip rates.  For every cell we report the dominant
+term, the roofline-limited step time (max of the three), the achievable
+fraction MODEL_FLOPS/(chips*peak)/t_roofline, and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs x chips) — the remat/redundancy detector.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+from .common import ARTIFACTS, Report
+
+
+def roofline_terms(cell: dict) -> dict:
+    chips = cell["devices"]
+    t_compute = cell["flops_per_device"] / PEAK_FLOPS_BF16
+    t_memory = cell["bytes_per_device"] / HBM_BW
+    t_coll = cell["collectives"]["total"]["wire_bytes"] / ICI_BW
+    t_roof = max(t_compute, t_memory, t_coll)
+    dominant = {t_compute: "compute", t_memory: "memory",
+                t_coll: "collective"}[t_roof]
+    model_fl = cell.get("model_flops_global", 0.0)
+    t_model_ideal = model_fl / (chips * PEAK_FLOPS_BF16)
+    useful = model_fl / max(cell["flops_per_device"] * chips, 1.0)
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "t_roofline_s": t_roof,
+        "dominant": dominant,
+        "useful_compute_ratio": useful,           # MODEL / HLO flops
+        "roofline_mfu": t_model_ideal / t_roof if t_roof else 0.0,
+        "mem_gib": cell["memory"]["total"] / 2 ** 30,
+        "fits": cell["memory"]["fits_16gib"],
+    }
+
+
+def load_cells(mesh_tag: str = "pod") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(
+            os.path.join(ARTIFACTS, "dryrun", mesh_tag, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("skipped") or "error" in cell:
+            continue
+        rows.append(roofline_terms(cell))
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | useful | roofline-MFU | GiB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"**{r['dominant']}** | {r['useful_compute_ratio']:.2f} | "
+            f"{r['roofline_mfu']:.3f} | {r['mem_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("roofline")
+    for tag in ("pod", "multipod"):
+        for r in load_cells(tag):
+            report.add(f"roofline/{tag}/{r['arch']}/{r['shape']}",
+                       seconds=r["t_roofline_s"],
+                       dominant=r["dominant"],
+                       compute_s=round(r["t_compute_s"], 5),
+                       memory_s=round(r["t_memory_s"], 5),
+                       collective_s=round(r["t_collective_s"], 5),
+                       useful=round(r["useful_compute_ratio"], 3),
+                       mfu=round(r["roofline_mfu"], 4),
+                       gib=round(r["mem_gib"], 2))
+    return report
+
+
+if __name__ == "__main__":
+    rows = load_cells("pod")
+    print(markdown_table(rows))

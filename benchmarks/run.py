@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV rows and writes JSON artifacts to
+artifacts/bench/.  The roofline module reads the dry-run artifacts — run
+`python -m repro.launch.dryrun --all --both-meshes` first for the full
+table (it degrades gracefully to whatever cells exist).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (clustering_bench, lm_step_bench, model_selection,
+               perf_iterations, roofline, scaling, sparse_bench)
+
+MODULES = {
+    "model_selection": model_selection,   # paper Fig. 5 / SS6.2
+    "scaling": scaling,                   # paper Figs. 7, 8, 11
+    "clustering": clustering_bench,       # paper Fig. 12
+    "sparse": sparse_bench,               # paper Figs. 10 / 13b
+    "roofline": roofline,                 # SSRoofline over dry-run cells
+    "lm_step": lm_step_bench,             # framework regression numbers
+    "perf": perf_iterations,              # SSPerf variant lowerings
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(MODULES), default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else list(MODULES)
+    failed = []
+    for name in names:
+        print(f"# === {name} ===", flush=True)
+        try:
+            report = MODULES[name].run()
+            report.print_csv()
+            report.save()
+        except Exception:                       # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 10/13b: sparse vs dense MU cost and the sparsity sweep.
+
+Measures the BCSR sparse MU step across block densities on one device —
+the paper's observation (compute drops with density, communication
+constant) maps here to: local FLOPs scale with stored blocks while the
+collective payloads (dense factors) are density-independent, which the
+dry-run collective table confirms at scale.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import sparse as sp
+from repro.core.rescal import init_factors, mu_step_batched
+
+from .common import Report, time_fn
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("sparse")
+    key = jax.random.PRNGKey(0)
+    n, m, k, bs = 1024, 3, 8, 64
+
+    X_dense = jax.random.uniform(key, (m, n, n))
+    st = init_factors(key, n, m, k)
+    t_dense = time_fn(jax.jit(lambda X, s: mu_step_batched(X, s)),
+                      X_dense, st, iters=2)
+    report.add("sparse/dense_baseline_mu", seconds=t_dense)
+
+    for density in (0.4, 0.1, 0.02):
+        spt = sp.random_bcsr(key, m, n, bs=bs, block_density=density)
+        fn = jax.jit(lambda d, A, R: sp.sparse_mu_step(
+            sp.BCSR(data=d, block_rows=spt.block_rows,
+                    block_cols=spt.block_cols, n=n), A, R))
+        t = time_fn(fn, spt.data, st.A, st.R, iters=2)
+        report.add(f"sparse/mu_block_density_{density}", seconds=t,
+                   nnzb=int(spt.nnzb),
+                   speedup_vs_dense=round(t_dense / t, 2))
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

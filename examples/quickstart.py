@@ -1,0 +1,33 @@
+"""Quickstart: non-negative RESCAL with automatic model selection on a
+synthetic knowledge-graph tensor — the 60-second tour of the public API.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core import RescalkConfig, rescal, rescalk
+from repro.data.synthetic import synthetic_rescal
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    # a relational tensor with 4 planted latent communities
+    X, A_true, R_true = synthetic_rescal(key, n=48, m=3, k=4, noise=0.01)
+    print(f"tensor: {X.shape}  (entities x entities x relations)")
+
+    # --- plain factorization at a known rank ---
+    state, err = rescal(X, k=4, key=key, iters=300)
+    print(f"RESCAL @ k=4: rel_err={float(err):.4f}  A{state.A.shape} "
+          f"R{state.R.shape}")
+
+    # --- automatic model selection (the paper's contribution) ---
+    cfg = RescalkConfig(k_min=2, k_max=6, n_perturbations=4,
+                        rescal_iters=250)
+    res = rescalk(X, cfg, verbose=True)
+    print(res.summary())
+    print(f"\nplanted k=4, selected k_opt={res.k_opt}")
+    assert res.k_opt == 4
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Paper §6.2.2 analogue: latent-community discovery in Trade/Nations-style
+relational data, with the interpretability readout of Fig. 6.
+
+The IMF Direction-of-Trade and UCI Nations datasets are not redistributable
+here, so `repro.data.trade_like` generates a tensor with the same
+structure: k economic blocs whose pairwise flows grow over the time slices.
+The pipeline (perturb -> factorize -> cluster -> silhouette -> select k)
+and the community/interaction readout are exactly the paper's.
+
+    PYTHONPATH=src python examples/trade_nations.py
+"""
+import jax
+import numpy as np
+
+from repro.core import RescalkConfig, rescalk
+from repro.data.synthetic import trade_like
+
+NATIONS = ["USA", "Canada", "Mexico", "Brazil", "UK", "France", "Germany",
+           "Italy", "Spain", "Netherlands", "China", "Japan", "Korea",
+           "India", "Indonesia", "Australia", "Singapore", "Thailand",
+           "Egypt", "Israel", "Poland", "Sweden", "Denmark", "Ireland"]
+
+
+def main():
+    key = jax.random.PRNGKey(7)
+    n, m, k_true = 24, 12, 3
+    X, _, _ = trade_like(key, n=n, m=m, k=k_true)
+    print(f"trade tensor: {X.shape} (nations x nations x months)\n")
+
+    cfg = RescalkConfig(k_min=2, k_max=5, n_perturbations=4,
+                        rescal_iters=300, regress_iters=60, seed=0)
+    res = rescalk(X, cfg, verbose=True)
+    print("\n" + res.summary())
+    k = res.k_opt
+    print(f"\nselected k_opt = {k} latent communities\n")
+
+    # --- community membership (columns of the robust A), Fig. 6c/6d ---
+    A = res.per_k[k].A_median
+    member = np.argmax(A, axis=1)
+    for c in range(k):
+        names = [NATIONS[i] for i in range(n) if member[i] == c]
+        print(f"community-{c + 1}: {', '.join(names)}")
+
+    # --- interactions between communities (slices of R), Fig. 6e/6f ---
+    R = res.per_k[k].R_regress
+    for month in (0, m // 2, m - 1):
+        Rt = R[month]
+        print(f"\nmonth {month + 1}: strongest flows "
+              f"(community -> community, weight):")
+        flat = [(Rt[i, j], i, j) for i in range(k) for j in range(k)]
+        for w, i, j in sorted(flat, reverse=True)[:3]:
+            print(f"  {i + 1} -> {j + 1}: {w:.3f}")
+    # trade grows over time in this data; the recovered R should too
+    assert float(R[-1].sum()) > float(R[0].sum())
+    print("\ninteraction mass grows over months, as constructed — OK")
+
+
+if __name__ == "__main__":
+    main()

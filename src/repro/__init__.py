@@ -1,0 +1,9 @@
+"""repro — pyDRESCALk in JAX.
+
+Distributed non-negative RESCAL with automatic model selection
+(Bhattarai et al., 2022), rebuilt as a production multi-pod JAX framework
+with Pallas TPU kernels for the compute hot spots, plus an LM-architecture
+zoo sharing the same distributed runtime.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""Atomic, grid-agnostic checkpointing (elastic restore)."""
+from .checkpoint import latest_step, restore, save, save_async
+
+__all__ = ["latest_step", "restore", "save", "save_async"]

@@ -1,0 +1,127 @@
+"""Grid-agnostic checkpointing with atomic writes and elastic restore.
+
+Checkpoints store every leaf in *global* layout (device_get assembles the
+global array regardless of the mesh it lived on), keyed by its tree path.
+Restoring onto a different mesh — or a different mesh *shape* after an
+elastic resize — is therefore a plain `device_put` with the new shardings:
+partitioning is pure block-slicing, exactly the property DESIGN.md §4
+relies on for fault tolerance.
+
+Layout on disk:
+    <dir>/step_<n>.npz        one array per flattened tree path
+    <dir>/step_<n>.json       manifest: step, paths, shapes, dtypes
+    <dir>/LATEST              text file with the newest step number
+
+Writes are atomic (tmp file + os.replace) so a crash mid-save never
+corrupts the restore point.  `save_async` moves serialization off the
+training thread (device_get happens synchronously to snapshot the values,
+the file write happens in the background).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = _flatten(tree)
+    manifest = {"step": step,
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in arrays.items()}}
+    base = os.path.join(ckpt_dir, f"step_{step}")
+    tmp_npz, tmp_json = base + ".npz.tmp", base + ".json.tmp"
+    with open(tmp_npz, "wb") as f:
+        np.savez(f, **arrays)
+    with open(tmp_json, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp_npz, base + ".npz")
+    os.replace(tmp_json, base + ".json")
+    tmp_latest = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(tmp_latest, "w") as f:
+        f.write(str(step))
+    os.replace(tmp_latest, os.path.join(ckpt_dir, "LATEST"))
+    return base + ".npz"
+
+
+def save_async(ckpt_dir: str, step: int, tree) -> threading.Thread:
+    """Snapshot now (device_get), write in the background."""
+    arrays = _flatten(tree)   # synchronous snapshot
+
+    def _write():
+        os.makedirs(ckpt_dir, exist_ok=True)
+        manifest = {"step": step,
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in arrays.items()}}
+        base = os.path.join(ckpt_dir, f"step_{step}")
+        with open(base + ".npz.tmp", "wb") as f:
+            np.savez(f, **arrays)
+        with open(base + ".json.tmp", "w") as f:
+            json.dump(manifest, f)
+        os.replace(base + ".npz.tmp", base + ".npz")
+        os.replace(base + ".json.tmp", base + ".json")
+        with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+                   os.path.join(ckpt_dir, "LATEST"))
+
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip())
+
+
+def restore(ckpt_dir: str, like, step: int | None = None,
+            shardings=None) -> tuple[Any, int]:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`, if given, is a matching pytree of
+    NamedSharding — this is the elastic-reshard path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
+                                                       leaf.shape)
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
+                # npz stores ml_dtypes (bf16, fp8) as raw void — view back
+                arr = arr.view(want)
+            else:
+                arr = arr.astype(want)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, step

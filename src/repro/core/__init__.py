@@ -1,0 +1,31 @@
+"""Core: the paper's contribution — distributed non-negative RESCAL with
+automatic model selection (pyDRESCALk)."""
+from .rescal import (EPS_DEFAULT, RescalState, init_factors, mu_step_batched,
+                     mu_step_sliced, normalize, reconstruct, rel_error,
+                     rescal)
+from .rescal_dist import (DistRescalConfig, dist_rescal, make_dist_error,
+                          make_dist_step, make_dist_step_sparse,
+                          make_ensemble_step, make_ensemble_step_sparse,
+                          make_gspmd_step)
+from .rescalk import KResult, RescalkConfig, RescalkResult, rescalk, select_k
+from .perturb import ensemble_keys, perturb, perturb_shard
+from .clustering import ClusterResult, custom_cluster
+from .silhouette import SilhouetteResult, silhouettes
+from .regression import regress_R
+from .nndsvd import nndsvd_init_A, nndsvd_init_A_randomized
+from .lsa import linear_sum_assignment, max_similarity_assignment
+from . import sparse
+
+__all__ = [
+    "EPS_DEFAULT", "RescalState", "init_factors", "mu_step_batched",
+    "mu_step_sliced", "normalize", "reconstruct", "rel_error", "rescal",
+    "DistRescalConfig", "dist_rescal", "make_dist_error", "make_dist_step",
+    "make_ensemble_step", "make_ensemble_step_sparse",
+    "make_dist_step_sparse", "make_gspmd_step",
+    "KResult", "RescalkConfig", "RescalkResult", "rescalk", "select_k",
+    "ensemble_keys", "perturb", "perturb_shard",
+    "ClusterResult", "custom_cluster",
+    "SilhouetteResult", "silhouettes",
+    "regress_R", "nndsvd_init_A", "nndsvd_init_A_randomized",
+    "linear_sum_assignment", "max_similarity_assignment", "sparse",
+]

@@ -1,0 +1,78 @@
+"""Custom clustering of RESCAL ensemble solutions (paper Alg. 5).
+
+Given the ensemble A-tensor (r perturbations, each an (n, k) factor), align
+the k columns of every member to a common ordering so that "cluster q" holds
+exactly one column from each member (the paper's equal-cluster-size
+constraint).  Alignment is a k-medians loop:
+
+  1. medoid M <- member 0
+  2. for each member q: similarity G_q = M_hat^T A_hat_q (cosine; hat =
+     column-normalized); permute member q's columns by the LSA that
+     maximizes trace(G_q[perm])
+  3. M <- elementwise median over members; repeat until permutations fixed.
+
+The similarity computation is the only distributed part (an all_reduce over
+row shards of the n axis — paper Alg. 5 line 6).  Here it is an einsum over
+the global n axis: under pjit with A sharded P("data", None, None) XLA emits
+exactly that psum.  The k x k x r similarity tensor is tiny and the LSA runs
+on host (O(k^3), paper §5.2.1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .lsa import max_similarity_assignment
+
+
+class ClusterResult(NamedTuple):
+    A_aligned: jax.Array      # (r, n, k) columns reordered per member
+    R_aligned: jax.Array      # (r, m, k, k) rows+cols reordered consistently
+    A_median: jax.Array       # (n, k) medoid (cluster medians)
+    perms: np.ndarray         # (r, k) the permutation applied to each member
+    n_sweeps: int
+
+
+def _colnorm(A: jax.Array, eps: float = 1e-12) -> jax.Array:
+    return A / (jnp.linalg.norm(A, axis=-2, keepdims=True) + eps)
+
+
+@jax.jit
+def _similarity(M: jax.Array, A_ens: jax.Array) -> jax.Array:
+    """sim[q, a, b] = <M_hat[:, a], A_hat_q[:, b]> — (r, k, k).
+    The contraction over n is the distributed all_reduce."""
+    return jnp.einsum("na,qnb->qab", _colnorm(M), _colnorm(A_ens))
+
+
+@jax.jit
+def _apply_perms(A_ens: jax.Array, R_ens: jax.Array, perms: jax.Array):
+    """Reorder columns of each A_q and (rows, cols) of each R_q[t]."""
+    A2 = jnp.take_along_axis(A_ens, perms[:, None, :], axis=2)
+    R2 = jnp.take_along_axis(R_ens, perms[:, None, :, None], axis=2)
+    R2 = jnp.take_along_axis(R2, perms[:, None, None, :], axis=3)
+    return A2, R2
+
+
+def custom_cluster(A_ens: jax.Array, R_ens: jax.Array,
+                   max_sweeps: int = 50) -> ClusterResult:
+    """Align ensemble members.  A_ens: (r, n, k); R_ens: (r, m, k, k)."""
+    r, n, k = A_ens.shape
+    total_perm = np.tile(np.arange(k), (r, 1))
+    M = A_ens[0]
+    sweeps = 0
+    for sweeps in range(1, max_sweeps + 1):
+        sim = np.asarray(_similarity(M, A_ens))       # (r, k, k) host-side
+        # perms[q][a] = member column assigned to medoid slot a
+        perms = np.stack([max_similarity_assignment(sim[q])
+                          for q in range(r)])
+        changed = bool(np.any(perms != np.arange(k)[None, :]))
+        A_ens, R_ens = _apply_perms(A_ens, R_ens, jnp.asarray(perms))
+        total_perm = np.take_along_axis(total_perm, perms, axis=1)
+        M = jnp.median(A_ens, axis=0)                  # cluster medians
+        if not changed:
+            break
+    return ClusterResult(A_aligned=A_ens, R_aligned=R_ens, A_median=M,
+                         perms=total_perm, n_sweeps=sweeps)

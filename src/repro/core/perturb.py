@@ -1,0 +1,38 @@
+"""Distributed resampling (paper Alg. 4).
+
+X'_{ijk} = X_{ijk} * delta, delta ~ Uniform[1 - d, 1 + d], so that the
+*mean* over the ensemble equals X.  No communication: each shard perturbs
+its own block with a seed folded from the perturbation id (and, under
+shard_map, from the device's grid coordinates, mirroring the paper's
+"unique seed as a function of MPI rank").
+
+For sparse (BCSR) tensors only the stored nonzero blocks are perturbed,
+preserving the sparsity pattern (paper §4.2 last paragraph).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def perturb(key: jax.Array, X: jax.Array, delta: float = 0.02) -> jax.Array:
+    """Multiplicative uniform perturbation of a dense tensor."""
+    noise = jax.random.uniform(
+        key, X.shape, dtype=X.dtype, minval=1.0 - delta, maxval=1.0 + delta)
+    return X * noise
+
+
+def perturb_shard(key: jax.Array, X_local: jax.Array, q: int | jax.Array,
+                  grid_linear_index: jax.Array, delta: float = 0.02
+                  ) -> jax.Array:
+    """Shard-local perturbation: fold the perturbation id q and the shard's
+    linear grid index into the key so every (member, shard) sees independent
+    noise — the paper's per-rank seeding discipline."""
+    key = jax.random.fold_in(key, q)
+    key = jax.random.fold_in(key, grid_linear_index)
+    return perturb(key, X_local, delta)
+
+
+def ensemble_keys(key: jax.Array, r: int) -> jax.Array:
+    """r independent keys, one per ensemble member."""
+    return jax.random.split(key, r)

@@ -1,0 +1,35 @@
+"""R regression given a fixed A (paper Alg. 1 line 9).
+
+After clustering produces the robust median factor A~, the matching core
+tensor R~ is obtained by minimizing ||X_t - A~ R_t A~^T||_F^2 over R_t >= 0
+only — i.e. MU updates on R with A frozen (paper §6.1.3: "utilize R update
+steps from Algorithm 3").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .rescal import EPS_DEFAULT, gram, update_R
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "eps"))
+def regress_R(X: jax.Array, A: jax.Array, *, iters: int = 100,
+              eps: float = EPS_DEFAULT, key: jax.Array | None = None
+              ) -> jax.Array:
+    """Solve for R (m, k, k) >= 0 with A fixed.  MU on R is a convex-ish
+    monotone scheme here since the A-blocks are constant."""
+    m = X.shape[0]
+    k = A.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(17)
+    R = jax.random.uniform(key, (m, k, k), dtype=X.dtype,
+                           minval=0.05, maxval=1.0)
+    G = gram(A)
+
+    def body(_, R):
+        return update_R(X, A, R, G, eps)
+
+    return jax.lax.fori_loop(0, iters, body, R)

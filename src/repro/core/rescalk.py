@@ -1,0 +1,158 @@
+"""RESCALk — RESCAL with automatic model selection (paper Alg. 1).
+
+For each candidate rank k in [k_min, k_max]:
+  1. build r perturbed copies of X (perturb.py, Alg. 4)
+  2. factorize each (rescal.py / rescal_dist.py, Alg. 3)
+  3. align the r solutions with custom clustering (clustering.py, Alg. 5)
+  4. cluster stability via silhouettes (silhouette.py, Alg. 6)
+  5. robust A~ = cluster medians; R~ by regression (regression.py)
+  6. relative reconstruction error of (A~, R~)
+k_opt = largest k whose clusters are stable (high min-silhouette) with low
+reconstruction error (paper §3.3, selection criteria of [63]).
+
+The r factorizations are *independent* — the natural scale-out axis.  The
+driver exposes them through `member_runner` so callers can map members onto
+pods (launch/rescalk_run.py), a process pool, or a simple Python loop.
+Per-(k, q) results are checkpointable: a failed member is recomputed alone
+(fault-tolerance story in DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .clustering import ClusterResult, custom_cluster
+from .perturb import ensemble_keys, perturb
+from .regression import regress_R
+from .rescal import RescalState, rel_error, rescal
+from .silhouette import SilhouetteResult, silhouettes
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalkConfig:
+    k_min: int = 2
+    k_max: int = 8
+    n_perturbations: int = 10          # r
+    perturbation_delta: float = 0.02   # noise half-width (paper: [0.005, .03])
+    rescal_iters: int = 1000   # paper SS6.2.1 uses 1000
+    regress_iters: int = 100
+    init: str = "random"               # "random" | "nndsvd" (paper SS6.1.3)
+    schedule: str = "batched"          # "batched" | "sliced" (paper-faithful)
+    seed: int = 0
+    sil_threshold: float = 0.75        # stability bar for k selection
+
+
+@dataclasses.dataclass
+class KResult:
+    k: int
+    s_min: float
+    s_mean: float
+    rel_err: float
+    A_median: np.ndarray               # (n, k)
+    R_regress: np.ndarray              # (m, k, k)
+    member_errors: np.ndarray          # (r,)
+
+
+@dataclasses.dataclass
+class RescalkResult:
+    ks: np.ndarray
+    s_min: np.ndarray                  # stability per k
+    s_mean: np.ndarray
+    rel_err: np.ndarray                # reconstruction error per k
+    k_opt: int
+    per_k: dict[int, KResult]
+
+    def summary(self) -> str:
+        lines = ["  k   s_min   s_mean  rel_err"]
+        for i, k in enumerate(self.ks):
+            mark = " <== k_opt" if k == self.k_opt else ""
+            lines.append(f"{k:3d}  {self.s_min[i]:6.3f}  {self.s_mean[i]:6.3f}"
+                         f"  {self.rel_err[i]:7.4f}{mark}")
+        return "\n".join(lines)
+
+
+def default_member_runner(X_q: jax.Array, k: int, key: jax.Array,
+                          cfg: RescalkConfig) -> RescalState:
+    """Factorize one perturbed tensor.  Swappable for a distributed runner.
+
+    init="nndsvd" (paper SS6.1.3 option 2) anchors every ensemble member in
+    the same basin — with few perturbations this is what keeps the k_true
+    clusters stable (a single random-init member converging elsewhere
+    drags min-silhouette below the selection bar)."""
+    init = None
+    if cfg.init == "nndsvd":
+        from .nndsvd import nndsvd_init_A
+        from .rescal import init_factors
+        base = init_factors(key, X_q.shape[1], X_q.shape[0], k,
+                            dtype=X_q.dtype)
+        A0 = nndsvd_init_A(X_q, k).astype(X_q.dtype)
+        init = RescalState(A=A0, R=base.R, step=base.step)
+    state, _ = rescal(X_q, k, key=key, iters=cfg.rescal_iters,
+                      schedule=cfg.schedule, init=init)
+    return state
+
+
+def select_k(ks: Sequence[int], s_min: np.ndarray, rel_err: np.ndarray,
+             sil_threshold: float = 0.75) -> int:
+    """Paper §3.3 / [63]: the largest k with stable clusters and good fit.
+
+    Stable = min silhouette above threshold.  Among stable ks, reconstruction
+    error decreases with k, so "largest stable k" implements "maximum number
+    of stable clusters corresponding to a good accuracy".  If nothing clears
+    the bar (pathological data), fall back to the best stability*fit score.
+    """
+    ks = np.asarray(ks)
+    stable = s_min >= sil_threshold
+    if stable.any():
+        return int(ks[stable][-1])
+    score = s_min - rel_err
+    return int(ks[int(np.argmax(score))])
+
+
+def rescalk(X: jax.Array, cfg: RescalkConfig,
+            member_runner: Callable = default_member_runner,
+            verbose: bool = False) -> RescalkResult:
+    """Run the full model-selection sweep on tensor X (m, n, n)."""
+    m, n, _ = X.shape
+    root = jax.random.PRNGKey(cfg.seed)
+    ks = list(range(cfg.k_min, cfg.k_max + 1))
+    per_k: dict[int, KResult] = {}
+
+    for k in ks:
+        kkey = jax.random.fold_in(root, k)
+        keys = ensemble_keys(kkey, cfg.n_perturbations)
+        A_list, R_list, errs = [], [], []
+        for q in range(cfg.n_perturbations):
+            pkey, fkey = jax.random.split(keys[q])
+            X_q = perturb(pkey, X, cfg.perturbation_delta)
+            state = member_runner(X_q, k, fkey, cfg)
+            A_list.append(state.A)
+            R_list.append(state.R)
+            errs.append(float(rel_error(X, state.A, state.R)))
+        A_ens = jnp.stack(A_list)            # (r, n, k)
+        R_ens = jnp.stack(R_list)            # (r, m, k, k)
+
+        clus: ClusterResult = custom_cluster(A_ens, R_ens)
+        sil: SilhouetteResult = silhouettes(clus.A_aligned)
+        R_reg = regress_R(X, clus.A_median, iters=cfg.regress_iters)
+        err = float(rel_error(X, clus.A_median, R_reg))
+
+        per_k[k] = KResult(
+            k=k, s_min=float(sil.s_min), s_mean=float(sil.s_mean),
+            rel_err=err, A_median=np.asarray(clus.A_median),
+            R_regress=np.asarray(R_reg), member_errors=np.asarray(errs))
+        if verbose:
+            r = per_k[k]
+            print(f"[rescalk] k={k:3d} s_min={r.s_min:6.3f} "
+                  f"s_mean={r.s_mean:6.3f} err={r.rel_err:7.4f}")
+
+    s_min = np.array([per_k[k].s_min for k in ks])
+    s_mean = np.array([per_k[k].s_mean for k in ks])
+    rel = np.array([per_k[k].rel_err for k in ks])
+    k_opt = select_k(ks, s_min, rel, cfg.sil_threshold)
+    return RescalkResult(ks=np.asarray(ks), s_min=s_min, s_mean=s_mean,
+                         rel_err=rel, k_opt=k_opt, per_k=per_k)

@@ -1,0 +1,166 @@
+"""Block-sparse (BCSR) relational tensors — the TPU adaptation of the
+paper's CSR sparse path (DESIGN.md §2).
+
+GPU CSR SpMM relies on fine-grained gather/scatter; TPUs want dense,
+MXU-aligned tiles.  We therefore store the sparse adjacency tensor as
+128x128 (configurable) dense blocks with a shared coordinate list across
+the m relation slices:
+
+  data        : (m, nnzb, bs, bs)   stored blocks (dense)
+  block_rows  : (nnzb,) int32       block-row of each stored block
+  block_cols  : (nnzb,) int32       block-col of each stored block
+
+The element density delta maps to a block density delta_b >= delta; for the
+paper's power-law-ish relational data most blocks stay empty and SpMM work
+scales with nnzb, recovering the paper's O(m * delta * n^2 * k / p) compute
+bound.  All products below are segment-sum matmuls — exactly the pattern
+the Pallas kernel `kernels/bcsr_spmm.py` implements with explicit VMEM
+tiling; these jnp versions are its oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .rescal import EPS_DEFAULT
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BCSR:
+    data: jax.Array         # (m, nnzb, bs, bs)
+    block_rows: jax.Array   # (nnzb,)
+    block_cols: jax.Array   # (nnzb,)
+    n: int = dataclasses.field(metadata=dict(static=True))  # global entities
+
+    def _replace(self, **kw) -> "BCSR":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def m(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def bs(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def nnzb(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def nblocks(self) -> int:
+        return self.n // self.bs
+
+
+def from_dense(X: jax.Array, bs: int = 128, threshold: float = 0.0) -> BCSR:
+    """Blockify a dense (m, n, n) tensor, keeping blocks where any slice has
+    |x| > threshold.  Pattern is shared across slices (superset)."""
+    m, n, _ = X.shape
+    assert n % bs == 0, "n must be divisible by the block size"
+    nb = n // bs
+    Xb = X.reshape(m, nb, bs, nb, bs).transpose(1, 3, 0, 2, 4)  # (nb,nb,m,bs,bs)
+    keep = jnp.abs(Xb).max(axis=(2, 3, 4)) > threshold          # (nb, nb)
+    rows, cols = jnp.nonzero(keep)
+    data = Xb[rows, cols].transpose(1, 0, 2, 3)                 # (m,nnzb,bs,bs)
+    return BCSR(data=data, block_rows=rows.astype(jnp.int32),
+                block_cols=cols.astype(jnp.int32), n=n)
+
+
+def to_dense(sp: BCSR) -> jax.Array:
+    nb, bs, m = sp.nblocks, sp.bs, sp.m
+    out = jnp.zeros((m, nb, nb, bs, bs), sp.data.dtype)
+    out = out.at[:, sp.block_rows, sp.block_cols].set(sp.data)
+    return out.transpose(0, 1, 3, 2, 4).reshape(m, nb * bs, nb * bs)
+
+
+def random_bcsr(key: jax.Array, m: int, n: int, bs: int = 128,
+                block_density: float = 0.05, dtype=jnp.float32) -> BCSR:
+    """Random non-negative BCSR tensor with ~block_density stored blocks
+    (diagonal always stored so every entity has support)."""
+    nb = n // bs
+    kp, kv = jax.random.split(key)
+    keep = jax.random.uniform(kp, (nb, nb)) < block_density
+    keep = keep | jnp.eye(nb, dtype=bool)
+    rows, cols = jnp.nonzero(keep)
+    nnzb = rows.shape[0]
+    data = jax.random.uniform(kv, (m, nnzb, bs, bs), dtype, 0.0, 1.0)
+    return BCSR(data=data, block_rows=rows.astype(jnp.int32),
+                block_cols=cols.astype(jnp.int32), n=n)
+
+
+def perturb_bcsr(key: jax.Array, sp: BCSR, delta: float = 0.02) -> BCSR:
+    """Alg. 4 for sparse data: only stored blocks are perturbed, preserving
+    the sparsity pattern (paper §4.2)."""
+    noise = jax.random.uniform(key, sp.data.shape, sp.data.dtype,
+                               1.0 - delta, 1.0 + delta)
+    return sp._replace(data=sp.data * noise)
+
+
+# ---------------------------------------------------------------------------
+# SpMM products (oracles for kernels/bcsr_spmm.py)
+# ---------------------------------------------------------------------------
+
+def spmm(sp: BCSR, B: jax.Array) -> jax.Array:
+    """X_t @ B for all t.  B: (n, k) -> (m, n, k)."""
+    nb, bs = sp.nblocks, sp.bs
+    k = B.shape[1]
+    Bb = B.reshape(nb, bs, k)[sp.block_cols]             # (nnzb, bs, k)
+    prod = jnp.einsum("mzab,zbk->mzak", sp.data, Bb)     # (m, nnzb, bs, k)
+    out = jax.ops.segment_sum(prod.swapaxes(0, 1), sp.block_rows,
+                              num_segments=nb)           # (nb, m, bs, k)
+    return out.transpose(1, 0, 2, 3).reshape(sp.m, sp.n, k)
+
+
+def spmm_t(sp: BCSR, B: jax.Array) -> jax.Array:
+    """X_t^T @ B for all t (block transpose = swap row/col + transpose tiles).
+    B may be (n, k) or (m, n, k) (per-slice operand, used for X^T(A R_t))."""
+    nb, bs = sp.nblocks, sp.bs
+    if B.ndim == 2:
+        Bb = B.reshape(nb, bs, -1)[sp.block_rows]         # (nnzb, bs, k)
+        prod = jnp.einsum("mzab,zak->mzbk", sp.data, Bb)
+    else:
+        k = B.shape[-1]
+        Bb = B.reshape(sp.m, nb, bs, k)[:, sp.block_rows]  # (m, nnzb, bs, k)
+        prod = jnp.einsum("mzab,mzak->mzbk", sp.data, Bb)
+    out = jax.ops.segment_sum(prod.swapaxes(0, 1), sp.block_cols,
+                              num_segments=nb)
+    return out.transpose(1, 0, 2, 3).reshape(sp.m, sp.n, -1)
+
+
+def sqnorm(sp: BCSR) -> jax.Array:
+    return jnp.vdot(sp.data, sp.data)
+
+
+# ---------------------------------------------------------------------------
+# Sparse MU step (local; mirrors rescal.mu_step_batched)
+# ---------------------------------------------------------------------------
+
+def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
+                   eps: float = EPS_DEFAULT):
+    """One batched MU iteration on a BCSR tensor.  Identical math to the
+    dense step; only the X products change."""
+    G = A.T @ A
+    XA = spmm(sp, A)                                      # (m, n, k)
+    XTA = spmm_t(sp, A)                                   # (m, n, k)
+    ATXA = jnp.einsum("ia,mib->mab", A, XA)
+    R = R * ATXA / (jnp.einsum("ab,mbc,cd->mad", G, R, G) + eps)
+    num = (jnp.einsum("mia,msa->is", XA, R)
+           + jnp.einsum("mia,mas->is", XTA, R))
+    S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
+         + jnp.einsum("mba,bc,mcd->ad", R, G, R))
+    A = A * num / (A @ S + eps)
+    return A, R
+
+
+def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array) -> jax.Array:
+    G = A.T @ A
+    XA = spmm(sp, A)
+    ATXA = jnp.einsum("ia,mib->mab", A, XA)
+    x2 = sqnorm(sp)
+    cross = jnp.vdot(ATXA, R)
+    fit2 = jnp.einsum("ab,mac,cd,mbd->", G, R, G, R)
+    err2 = jnp.maximum(x2 - 2.0 * cross + fit2, 0.0)
+    return jnp.sqrt(err2) / jnp.sqrt(x2)

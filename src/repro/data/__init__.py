@@ -1,0 +1,7 @@
+"""Data pipelines: synthetic relational tensors (the paper's generator)
+and deterministic token streams for the LM workloads."""
+from .synthetic import gaussian_features, synthetic_rescal, trade_like
+from .tokens import TokenStreamConfig, batch_at, shard_batch_at, stream
+
+__all__ = ["gaussian_features", "synthetic_rescal", "trade_like",
+           "TokenStreamConfig", "batch_at", "shard_batch_at", "stream"]

@@ -1,0 +1,80 @@
+"""Block-sparse SpMM Pallas kernel — the TPU adaptation of the paper's
+CSR sparse path (DESIGN.md §2, "Sparse = block-sparse").
+
+Computes  out_t = X_t @ B  where X is a BCSR tensor (core/sparse.py):
+MXU-aligned (bs x bs) stored blocks with row/col coordinates sorted
+row-major.  The coordinate lists ride in scalar-prefetch SMEM so the block
+index maps can chase them (the canonical Pallas sparse pattern); compute
+scales with the number of *stored* blocks, recovering the paper's
+O(m * delta * n^2 * k) sparse bound on hardware that hates gather/scatter.
+
+Grid: (m, nnzb).  Per step (t, z):
+    data : (bs, bs)  stored block z of slice t
+    b    : (bs, k)   row-block `cols[z]` of B       (gathered via prefetch)
+    out  : (bs, k)   row-block `rows[z]` of out_t   (accumulated; rows are
+                     sorted so identical output windows are consecutive)
+
+Requirement: every block-row owns >= 1 stored block (guaranteed by the
+generators in core/sparse.py, which always store the diagonal) — otherwise
+untouched output rows would be left undefined.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.sparse import BCSR
+
+
+def _kernel(rows_ref, cols_ref, data_ref, b_ref, out_ref):
+    z = pl.program_id(1)
+    row = rows_ref[z]
+    prev_row = rows_ref[jnp.maximum(z - 1, 0)]
+    is_new = jnp.logical_or(z == 0, row != prev_row)
+
+    part = jnp.dot(data_ref[0, 0], b_ref[0],
+                   preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+    @pl.when(is_new)
+    def _():
+        out_ref[0, 0] = part
+
+    @pl.when(jnp.logical_not(is_new))
+    def _():
+        out_ref[0, 0] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcsr_spmm(sp: BCSR, B: jax.Array, *, interpret: bool = False
+              ) -> jax.Array:
+    """sp: BCSR (m, nnzb, bs, bs) with row-major-sorted blocks; B: (n, k)
+    -> (m, n, k)."""
+    m, nnzb, bs, _ = sp.data.shape
+    nb = sp.n // bs
+    k = B.shape[1]
+    Bb = B.reshape(nb, bs, k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m, nnzb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda t, z, rows, cols: (t, z, 0, 0)),
+            pl.BlockSpec((1, bs, k), lambda t, z, rows, cols: (cols[z], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, bs, k), lambda t, z, rows, cols: (t, rows[z], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb, bs, k), B.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="bcsr_spmm",
+    )(sp.block_rows, sp.block_cols, sp.data, Bb)
+    return out.reshape(m, sp.n, k)

@@ -1,0 +1,88 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+impl selection:
+  "auto"      — Pallas on TPU, jnp oracle elsewhere (CPU container, dry-run)
+  "pallas"    — compiled Pallas (TPU)
+  "interpret" — Pallas interpret mode (CPU validation of the kernel body)
+  "ref"       — pure-jnp oracle
+
+`fused_xa_xtb` additionally panelizes the n2 axis so the kernel's xtb VMEM
+window (n2_panel * k * 4B, double-buffered) stays under the budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import BCSR
+from . import ref as _ref
+from .fused_bilinear import fused_xa_xtb as _fused_pallas
+from .mu_ratio import mu_update_a as _mu_pallas
+from .bcsr_spmm import bcsr_spmm as _bcsr_pallas
+from .flash_attention import flash_attention as _flash_pallas
+
+VMEM_PANEL_BYTES = 4 * 1024 * 1024   # xtb window budget (pre double-buffer)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def fused_xa_xtb(X, B1, B2, *, impl: str = "auto", bm: int = 256,
+                 bn: int = 256):
+    """One-pass (X_t @ B1, X_t^T @ B2_t).  X: (m, n1, n2)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_fused_xa_xtb(X, B1, B2)
+    interpret = impl == "interpret"
+    m, n1, n2 = X.shape
+    k = B1.shape[1]
+    panel = max(bn, (VMEM_PANEL_BYTES // max(k * 4, 1)) // bn * bn)
+    if n2 <= panel:
+        return _fused_pallas(X, B1, B2, bm=bm, bn=bn, interpret=interpret)
+    # panelize columns: XA sums partials, XTB concatenates panels
+    xa = jnp.zeros((m, n1, k), X.dtype)
+    xtb_panels = []
+    for c0 in range(0, n2, panel):
+        Xp = jax.lax.slice_in_dim(X, c0, c0 + panel, axis=2)
+        B1p = jax.lax.slice_in_dim(B1, c0, c0 + panel, axis=0)
+        xa_p, xtb_p = _fused_pallas(Xp, B1p, B2, bm=bm, bn=bn,
+                                    interpret=interpret)
+        xa = xa + xa_p
+        xtb_panels.append(xtb_p)
+    return xa, jnp.concatenate(xtb_panels, axis=1)
+
+
+def mu_update_a(A, Num, S, eps: float = 1e-16, *, impl: str = "auto",
+                bm: int = 512):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_mu_update_a(A, Num, S, eps)
+    return _mu_pallas(A, Num, S, eps, bm=bm, interpret=impl == "interpret")
+
+
+def bcsr_spmm(sp: BCSR, B, *, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_bcsr_spmm(sp, B)
+    return _bcsr_pallas(sp, B, interpret=impl == "interpret")
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    sm_scale: float | None = None, impl: str = "auto",
+                    bq: int = 256, bk: int = 256):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ref_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                  sm_scale=sm_scale)
+    return _flash_pallas(q, k, v, causal=causal, q_offset=q_offset,
+                         sm_scale=sm_scale, bq=bq, bk=bk,
+                         interpret=impl == "interpret")

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ref_* implements the same contract as its kernel with plain einsums.
+Tests sweep shapes x dtypes asserting allclose(kernel(interpret=True),
+ref(...)); ops.py uses these as the CPU execution path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sparse import BCSR, spmm as _spmm
+
+
+def ref_fused_xa_xtb(X: jax.Array, B1: jax.Array, B2: jax.Array):
+    """X: (m, n1, n2), B1: (n2, k), B2: (m, n1, k)."""
+    XA = jnp.einsum("mij,jk->mik", X, B1)
+    XTB = jnp.einsum("mij,mik->mjk", X, B2)
+    return XA, XTB
+
+
+def ref_mu_update_a(A: jax.Array, Num: jax.Array, S: jax.Array,
+                    eps: float = 1e-16) -> jax.Array:
+    return A * Num / (A @ S + eps)
+
+
+def ref_bcsr_spmm(sp: BCSR, B: jax.Array) -> jax.Array:
+    return _spmm(sp, B)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0,
+                  sm_scale: float | None = None) -> jax.Array:
+    """Exact softmax attention with GQA broadcast.  q: (b, hq, sq, d)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * sm_scale
+    if causal:
+        q_ids = q_offset + jnp.arange(sq)[:, None]
+        k_ids = jnp.arange(skv)[None, :]
+        s = jnp.where(q_ids >= k_ids, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32)
+                      ).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Post-optimization HLO parsing: collective bytes for the roofline.
+
+`compiled.cost_analysis()` has no collective accounting, so we parse the
+partitioned HLO text and sum, per collective op, the bytes a device moves
+over ICI under the standard ring algorithms:
+
+    all-reduce          2 * S * (g-1)/g      (S = result bytes)
+    all-gather          S * (g-1)/g          (S = gathered result bytes)
+    reduce-scatter      S * (g-1)            (S = scattered result bytes;
+                                              input is g*S)
+    all-to-all          S * (g-1)/g
+    collective-permute  S
+
+g = replica-group size, parsed from `replica_groups={{...}}` or the iota
+form `replica_groups=[G,g]<=[...]`.  Async pairs are counted at -start;
+-done lines are skipped.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|[a-z0-9\[\],{}]+)\s+"
+    r"(?P<op>" + "|".join(_OPS) + r")(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(op: str, result_bytes: int, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if op == "all-gather":
+        return result_bytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(result_bytes) * (g - 1)
+    if op == "all-to-all":
+        return result_bytes * (g - 1) / g
+    if op == "collective-permute":
+        return float(result_bytes)
+    raise ValueError(op)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-type counts / result bytes / estimated wire bytes per device,
+    plus the total."""
+    stats: dict[str, dict] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if f"{op}-done" in line:
+            continue
+        rb = _shape_bytes(m.group("shapes"))
+        g = _group_size(line)
+        s = stats[op]
+        s["count"] += 1
+        s["result_bytes"] += rb
+        s["wire_bytes"] += _wire_bytes(op, rb, g)
+    out = dict(stats)
+    out["total"] = {
+        "count": sum(s["count"] for s in stats.values()),
+        "result_bytes": sum(s["result_bytes"] for s in stats.values()),
+        "wire_bytes": sum(s["wire_bytes"] for s in stats.values()),
+    }
+    return out
+
+
+def op_histogram(hlo_text: str, kinds=("dot", "convolution", "fusion",
+                                       "dynamic-update-slice", "scatter",
+                                       "gather", "reshape", "transpose",
+                                       "copy")) -> dict[str, int]:
+    """Quick structural profile of the lowered module (perf-iteration aid:
+    duplicate-dot counting exposes remat recompute; copies expose layout
+    mismatches)."""
+    hist: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        for k in kinds:
+            if re.search(rf"=\s*\S+\s+{k}\(", line):
+                hist[k] += 1
+    return dict(hist)

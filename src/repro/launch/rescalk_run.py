@@ -1,0 +1,80 @@
+"""Distributed RESCALk CLI — the paper's full pipeline as a launcher.
+
+Runs model selection (Alg. 1) with the distributed MU kernel when a mesh
+is available (or requested) and per-(k, member) checkpointing so a failed
+ensemble member is recomputed alone (DESIGN.md §4 fault-tolerance story).
+
+    PYTHONPATH=src python -m repro.launch.rescalk_run \
+        --n 256 --m 4 --k-true 5 --k-min 2 --k-max 7 --iters 300
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.core import RescalkConfig, RescalState, rescalk
+from repro.data.synthetic import synthetic_rescal
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--m", type=int, default=4)
+    ap.add_argument("--k-true", type=int, default=5)
+    ap.add_argument("--k-min", type=int, default=2)
+    ap.add_argument("--k-max", type=int, default=7)
+    ap.add_argument("--r", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--schedule", default="batched",
+                    choices=("batched", "sliced"))
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="per-(k,member) checkpoint directory")
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    X, A_true, _ = synthetic_rescal(key, n=args.n, m=args.m, k=args.k_true)
+    print(f"tensor {X.shape}, planted k={args.k_true}, "
+          f"schedule={args.schedule}")
+
+    cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
+                        n_perturbations=args.r, rescal_iters=args.iters,
+                        schedule=args.schedule)
+
+    member_runner = None
+    if args.ckpt_dir:
+        from repro.core.rescalk import default_member_runner
+
+        def member_runner(X_q, k, fkey, rcfg):
+            tag = os.path.join(args.ckpt_dir,
+                               f"k{k}_q{int(fkey[-1]) & 0xffff}")
+            if ckpt.latest_step(tag) is not None:
+                like = jax.eval_shape(
+                    lambda: default_member_runner(X_q, k, fkey, rcfg))
+                state, _ = ckpt.restore(tag, like)
+                print(f"  [ckpt] reused member {tag}")
+                return state
+            state = default_member_runner(X_q, k, fkey, rcfg)
+            ckpt.save(tag, 0, state)
+            return state
+
+    res = rescalk(X, cfg, verbose=True,
+                  **({"member_runner": member_runner} if member_runner
+                     else {}))
+    print("\n" + res.summary())
+    print(f"\nselected k_opt = {res.k_opt} (planted {args.k_true})")
+    med = res.per_k[res.k_opt].A_median
+    A = np.asarray(A_true)
+    if res.k_opt == args.k_true:
+        corrs = [max(abs(np.corrcoef(A[:, c], med[:, j])[0, 1])
+                     for j in range(med.shape[1]))
+                 for c in range(args.k_true)]
+        print(f"feature correlation vs ground truth: "
+              f"min={min(corrs):.3f} mean={np.mean(corrs):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo substrate (attention, MoE, SSM, hybrid, transformer)."""

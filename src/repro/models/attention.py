@@ -1,0 +1,370 @@
+"""Attention variants: GQA (chunked online-softmax), sliding-window, MLA
+(multi-head latent attention, MiniCPM3/DeepSeek-V2 style), cross-attention,
+and KV-cache decode paths including a sequence-sharded decode combine for
+long contexts.
+
+Memory discipline: prefill never materializes the (Sq, Skv) score matrix —
+`chunked_attention` scans KV chunks with running (max, normalizer, acc)
+statistics (same math as kernels/flash_attention.py, which is the TPU
+execution path; this is the XLA/dry-run path and the kernel's oracle).
+
+Layouts: activations (B, S, H, D); caches (B, S, Hkv, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core chunked attention (prefill / training)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, q_offset: int = 0,
+                      chunk: int = 1024, q_chunk: int = 256,
+                      sm_scale: float | None = None) -> jax.Array:
+    """Flash-structured attention in pure XLA: BOTH the query and the KV
+    axes are tiled, so the live score block is (q_chunk x chunk) per
+    (batch, head); the backward recomputes one tile at a time
+    (checkpointed body) instead of stacking O(Sq x Skv) residuals.
+
+    Head layout is FLAT: GQA K/V are repeated to Hq up front (transient,
+    Megatron-style) so the head axis shards cleanly over "model"; keeping
+    the grouped (Hkv, g) reshape makes sharding propagation contract over
+    a sharded dim — one all-reduce per score tile (§Perf L7).  When Hq
+    does not divide the TP axis, queries fall back to sequence sharding
+    with replicated K/V (context parallelism).
+
+    Mixed precision follows the TPU flash kernel: scores accumulate in
+    f32 via preferred_element_type, P is cast to the value dtype for the
+    PV product.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, Dv); Hq % Hkv == 0.
+    """
+    from repro.dist.sharding import constrain_heads
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]                      # MLA: value dim may differ from D
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = sm_scale if sm_scale is not None else D ** -0.5
+    q = constrain_heads(q * jnp.asarray(scale, q.dtype), "q")
+    k = constrain_heads(k, "kv")
+    v = constrain_heads(v, "kv")
+    chunk = min(chunk, Skv)
+    q_chunk = min(q_chunk, Sq)
+    assert Skv % chunk == 0 and Sq % q_chunk == 0
+    nq, nk = Sq // q_chunk, Skv // chunk
+    f32 = jnp.float32
+
+    qs = q.reshape(B, nq, q_chunk, Hq, D)
+    kc = k.reshape(B, nk, chunk, Hq, D)
+    vc = v.reshape(B, nk, chunk, Hq, Dv)
+
+    @jax.checkpoint
+    def one_q_chunk(carry, q_in):
+        qi, iq = q_in                     # (B, qc, Hq, D), scalar
+        q_ids = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+
+        def inner(st, kv):
+            m_prev, l_prev, acc = st
+            kj, vj, j = kv
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                           preferred_element_type=f32)
+            if causal:
+                k_ids = j * chunk + jnp.arange(chunk)
+                mask = q_ids[:, None] >= k_ids[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, s.max(-1))
+            alpha = jnp.exp(m_prev - m_cur)
+            p = jnp.exp(s - m_cur[..., None])
+            l_cur = l_prev * alpha + p.sum(-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=f32)
+            return (m_cur, l_cur, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((B, Hq, q_chunk), NEG_INF, f32)
+        l0 = jnp.zeros((B, Hq, q_chunk), f32)
+        a0 = jnp.zeros((B, Hq, q_chunk, Dv), f32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out.swapaxes(1, 2).astype(q.dtype)  # (B, qc, Hq, Dv)
+
+    _, outs = jax.lax.scan(one_q_chunk, None,
+                           (qs.swapaxes(0, 1), jnp.arange(nq)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, Dv)
+
+
+def sliding_window_attention(q, k, v, *, window: int, q_offset: int = 0,
+                             chunk: int = 256) -> jax.Array:
+    """Banded causal attention: each query chunk attends to its local band
+    [chunk_start - window, chunk_end).  Compute O(S * (window + chunk)) —
+    this is what makes the hybrid arch sub-quadratic at long context.
+    Flat head layout + the same sharding discipline as chunked_attention
+    (§Perf L7)."""
+    from repro.dist.sharding import constrain_heads
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    if Hkv != Hq:
+        rep = Hq // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = D ** -0.5
+    q = constrain_heads(q * jnp.asarray(scale, q.dtype), "q")
+    k = constrain_heads(k, "kv")
+    v = constrain_heads(v, "kv")
+    chunk = min(chunk, Sq)
+    assert Sq % chunk == 0
+    band = ((window + chunk - 1) // chunk + 1) * chunk   # static band length
+    pad = band - chunk
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    qs = q.reshape(B, Sq // chunk, chunk, Hq, D)
+
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        qi, i = inp                                  # (B, chunk, Hq, D)
+        k_i = jax.lax.dynamic_slice_in_dim(kp, i * chunk, band, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, i * chunk, band, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k_i,
+                       preferred_element_type=jnp.float32)
+        q_ids = jnp.arange(chunk)[:, None]
+        k_ids = jnp.arange(band)[None, :] - pad
+        mask = (q_ids >= k_ids) & (q_ids - k_ids < window)
+        valid = (i * chunk + k_ids) >= 0             # zero-padding mask
+        s = jnp.where((mask & valid)[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_i.dtype), v_i,
+                       preferred_element_type=jnp.float32)
+        return carry, o.swapaxes(1, 2).astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, None,
+                           (qs.swapaxes(0, 1), jnp.arange(Sq // chunk)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, Hq, D)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (q_len == 1 against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None,
+                     axis_name: str | None = None) -> jax.Array:
+    """q: (B, 1, Hq, D); caches: (B, S, Hkv, D); `pos` = current length.
+
+    With `axis_name`, the cache's S axis is sharded over that mesh axis
+    (sequence parallelism for long-context decode): each device attends to
+    its local KV shard and partial (m, l, acc) statistics are combined with
+    a flash-style psum — DESIGN.md §4 / beyond-paper SP-decode.
+    Inside shard_map the caller passes the local cache shard and the
+    device's sequence offset via `window`-free masking on global ids.
+    """
+    B, _, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    # no wholesale f32 cast of the cache: the cache is the dominant HBM
+    # tenant at 32k+ context; accumulate in f32 via the dot instead
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Hkv, g, D)
+
+    if axis_name is None:
+        k_ids = jnp.arange(S)
+        base = 0
+    else:
+        idx = jax.lax.axis_index(axis_name)
+        base = idx * S
+        k_ids = base + jnp.arange(S)
+
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    mask = k_ids[None, None, None, :] < pos
+    if window is not None:
+        mask = mask & (k_ids[None, None, None, :] >= pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+
+    if axis_name is not None:
+        m_g = jax.lax.pmax(m, axis_name)
+        w = jnp.exp(m - m_g)
+        l = jax.lax.psum(l * w, axis_name)
+        acc = jax.lax.psum(acc * w, axis_name)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (params + apply)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(kk, d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(kv, d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def gqa_qkv(p, x, positions, n_heads, n_kv, head_dim, rope_theta=10000.0,
+            use_rope=True):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(B, S, n_kv, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — MiniCPM3 / DeepSeek-V2 family
+# ---------------------------------------------------------------------------
+
+def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             d_nope: int, d_rope: int, d_v: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_down": dense_init(ks[0], d_model, q_lora, dtype),
+        "q_norm": rmsnorm_init(q_lora, dtype),
+        "wq_up": dense_init(ks[1], q_lora, n_heads * (d_nope + d_rope), dtype),
+        "wkv_down": dense_init(ks[2], d_model, kv_lora + d_rope, dtype),
+        "kv_norm": rmsnorm_init(kv_lora, dtype),
+        "wkv_up": dense_init(ks[3], kv_lora, n_heads * (d_nope + d_v), dtype),
+        "wo": dense_init(ks[4], n_heads * d_v, d_model, dtype),
+    }
+
+
+def mla_latents(p, x, positions, *, kv_lora: int, d_rope: int,
+                rope_theta=10000.0):
+    """The compressed KV-cache payload: (c_kv (B,S,kv_lora), k_rope (B,S,dr)).
+    This is what MLA stores instead of full K/V — the serving memory win."""
+    B, S, _ = x.shape
+    down = x @ p["wkv_down"]
+    c_kv = rmsnorm(down[..., :kv_lora], p["kv_norm"])
+    k_rope = down[..., kv_lora:].reshape(B, S, 1, d_rope)
+    k_rope = apply_rope(k_rope, positions, rope_theta).reshape(B, S, d_rope)
+    return c_kv, k_rope
+
+
+def mla_queries(p, x, positions, *, n_heads: int, d_nope: int, d_rope: int,
+                rope_theta=10000.0):
+    B, S, _ = x.shape
+    cq = rmsnorm(x @ p["wq_down"], p["q_norm"])
+    q = (cq @ p["wq_up"]).reshape(B, S, n_heads, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_prefill(p, x, positions, *, n_heads, kv_lora, d_nope, d_rope, d_v,
+                rope_theta=10000.0, chunk=1024, q_chunk=256):
+    """Training/prefill MLA: decompress K/V and run chunked attention.
+    Returns (out, (c_kv, k_rope)) — latents for the cache."""
+    B, S, _ = x.shape
+    c_kv, k_rope = mla_latents(p, x, positions, kv_lora=kv_lora,
+                               d_rope=d_rope, rope_theta=rope_theta)
+    q_nope, q_rope = mla_queries(p, x, positions, n_heads=n_heads,
+                                 d_nope=d_nope, d_rope=d_rope,
+                                 rope_theta=rope_theta)
+    kv = (c_kv @ p["wkv_up"]).reshape(B, S, n_heads, d_nope + d_v)
+    k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, S, n_heads, d_rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (d_nope + d_rope) ** -0.5
+    out = chunked_attention(q, k, v, causal=True, chunk=chunk,
+                            q_chunk=q_chunk, sm_scale=scale)
+    out = out.reshape(B, S, n_heads * d_v) @ p["wo"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, x, pos, cache, *, n_heads, kv_lora, d_nope, d_rope, d_v,
+               rope_theta=10000.0):
+    """Absorbed-matmul MLA decode: queries are mapped into the latent space
+    so attention runs directly against the compressed cache — per-step cost
+    O(S * kv_lora) instead of O(S * H * (dn + dv)).  x: (B, 1, d)."""
+    B = x.shape[0]
+    c_cache, r_cache = cache                 # (B, S, kv_lora), (B, S, d_rope)
+    S = c_cache.shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    c_new, r_new = mla_latents(p, x, positions, kv_lora=kv_lora,
+                               d_rope=d_rope, rope_theta=rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, 1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, r_new, pos, 1)
+
+    q_nope, q_rope = mla_queries(p, x, positions, n_heads=n_heads,
+                                 d_nope=d_nope, d_rope=d_rope,
+                                 rope_theta=rope_theta)
+    w_up = p["wkv_up"].reshape(kv_lora, n_heads, d_nope + d_v)
+    wk, wv = w_up[..., :d_nope], w_up[..., d_nope:]
+    # absorb: q_lat[b,h,l] = sum_dn q_nope * wk  -> score via latent cache
+    q_lat = jnp.einsum("bohd,lhd->bohl", q_nope, wk)[:, 0]      # (B,H,kv_lora)
+    scale = (d_nope + d_rope) ** -0.5
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat.astype(jnp.float32),
+                    c_cache.astype(jnp.float32))
+         + jnp.einsum("bohr,bsr->bhs", q_rope.astype(jnp.float32),
+                      r_cache.astype(jnp.float32))) * scale
+    mask = jnp.arange(S)[None, None, :] <= pos
+    s = jnp.where(mask, s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", pr, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhd->bhd", o_lat, wv.astype(jnp.float32))
+    out = out.reshape(B, 1, n_heads * d_v).astype(x.dtype) @ p["wo"]
+    return out, (c_cache, r_cache)
+
+
+def ring_decode_attention(q, k_ring, v_ring, pos, window: int) -> jax.Array:
+    """Decode against a ring-buffer sliding-window cache.
+
+    q: (B, 1, Hq, D); k_ring/v_ring: (B, W, Hkv, D) where slot j holds the
+    key of the *most recent* global position p with p % W == j (W = window).
+    Validity: slot j's global position is p_j = pos - ((pos - j) mod W);
+    entries with p_j < 0 (warm-up) are masked.  Keys are stored with RoPE at
+    their true global positions, so no re-rotation is needed.
+    """
+    B, _, Hq, D = q.shape
+    _, W, Hkv, _ = k_ring.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    qg = (q * jnp.asarray(scale, q.dtype)).reshape(B, Hkv, g, D)
+    slots = jnp.arange(W)
+    p_slot = pos - jnp.mod(pos - slots, W)          # global pos per slot
+    valid = p_slot >= 0                              # warm-up mask
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_ring,
+                   preferred_element_type=jnp.float32)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_ring.dtype), v_ring,
+                     preferred_element_type=jnp.float32)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec / whisper)
+# ---------------------------------------------------------------------------
+
+def cross_attention(q, k, v):
+    """Non-causal attention of decoder queries over (precomputed) encoder
+    K/V.  q: (B, Sq, H, D); k, v: (B, Senc, H, D)."""
+    return chunked_attention(q, k, v, causal=False,
+                             chunk=min(1024, k.shape[1]))

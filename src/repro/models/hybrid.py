@@ -1,0 +1,103 @@
+"""Hymba-style hybrid mixer: parallel attention + Mamba2 heads in every
+layer (arXiv:2411.13676).
+
+The defining Hymba feature is kept exactly: *within one layer* the same
+normalized input feeds both a (sliding-window, GQA) attention path and an
+SSD/Mamba2 path; the two outputs are each RMS-normalized and averaged.
+
+TPU-uniformity adaptation (recorded in DESIGN.md §Arch-applicability):
+Hymba designates 3 of its 32 layers as full-attention and the rest as
+sliding-window.  A `lax.scan` layer stack requires a uniform cache shape,
+so we implement *all* layers as sliding-window + SSM — the SSM path is the
+long-range channel (Hymba's own thesis), and the arch stays sub-quadratic,
+which is what qualifies it for the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ssm
+from .attention import (gqa_init, gqa_qkv, ring_decode_attention,
+                        sliding_window_attention)
+from .layers import rmsnorm, rmsnorm_init
+
+
+def hymba_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+               *, ssm_state: int, ssm_headdim: int = 64, ssm_expand: int = 2,
+               ssm_groups: int = 1, dtype=jnp.float32):
+    ka, km = jax.random.split(key)
+    return {
+        "attn": gqa_init(ka, d_model, n_heads, n_kv, head_dim, dtype),
+        "mamba": ssm.mamba2_init(km, d_model, state=ssm_state,
+                                 expand=ssm_expand, headdim=ssm_headdim,
+                                 groups=ssm_groups, dtype=dtype),
+        "ln_a": rmsnorm_init(d_model, dtype),
+        "ln_m": rmsnorm_init(d_model, dtype),
+    }
+
+
+def hymba_apply(p, h, positions, *, n_heads: int, n_kv: int, head_dim: int,
+                window: int, ssm_state: int, ssm_headdim: int = 64,
+                ssm_expand: int = 2, ssm_groups: int = 1,
+                rope_theta: float = 10000.0, chunk: int = 1024,
+                return_state: bool = False):
+    """Full-sequence (train / prefill) hybrid mixer.  h: (B, S, d) is the
+    *already-normalized* layer input."""
+    B, S, d = h.shape
+    q, k, v = gqa_qkv(p["attn"], h, positions, n_heads, n_kv, head_dim,
+                      rope_theta)
+    o = sliding_window_attention(q, k, v, window=window,
+                                 chunk=min(256, S))
+    attn_out = o.reshape(B, S, n_heads * head_dim) @ p["attn"]["wo"]
+
+    if return_state:
+        m_out, (h_last, conv_tail) = ssm.mamba2_apply(
+            p["mamba"], h, state=ssm_state, expand=ssm_expand,
+            headdim=ssm_headdim, groups=ssm_groups, chunk=min(256, S),
+            return_state=True)
+    else:
+        m_out = ssm.mamba2_apply(
+            p["mamba"], h, state=ssm_state, expand=ssm_expand,
+            headdim=ssm_headdim, groups=ssm_groups, chunk=min(256, S))
+
+    out = 0.5 * (rmsnorm(attn_out, p["ln_a"]) + rmsnorm(m_out, p["ln_m"]))
+    if return_state:
+        W = window
+        # ring cache from the tail of the sequence; S % W == 0 keeps slot
+        # alignment (slot of global position t is t % W)
+        if S >= W:
+            k_ring = jax.lax.slice_in_dim(k, S - W, S, axis=1)
+            v_ring = jax.lax.slice_in_dim(v, S - W, S, axis=1)
+        else:
+            pad = W - S
+            k_ring = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v_ring = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return out, {"k": k_ring, "v": v_ring, "ssm": h_last,
+                     "conv": conv_tail}
+    return out
+
+
+def hymba_step(p, h, cache, pos, *, n_heads: int, n_kv: int, head_dim: int,
+               window: int, ssm_state: int, ssm_headdim: int = 64,
+               ssm_expand: int = 2, ssm_groups: int = 1,
+               rope_theta: float = 10000.0):
+    """Single-token decode.  h: (B, 1, d) normalized input; cache carries
+    {"k","v" (B,W,Hkv,D) ring, "ssm" (B,H,P,N), "conv" (B,K-1,conv_dim)}."""
+    B = h.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = gqa_qkv(p["attn"], h, positions, n_heads, n_kv, head_dim,
+                      rope_theta)
+    W = window
+    slot = jnp.mod(pos, W)
+    k_ring = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    v_ring = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    o = ring_decode_attention(q, k_ring, v_ring, pos, W)
+    attn_out = o.reshape(B, 1, n_heads * head_dim) @ p["attn"]["wo"]
+
+    m_out, ssm_new, conv_new = ssm.mamba2_step(
+        p["mamba"], h, cache["ssm"], cache["conv"], state=ssm_state,
+        expand=ssm_expand, headdim=ssm_headdim, groups=ssm_groups)
+
+    out = 0.5 * (rmsnorm(attn_out, p["ln_a"]) + rmsnorm(m_out, p["ln_m"]))
+    return out, {"k": k_ring, "v": v_ring, "ssm": ssm_new, "conv": conv_new}

@@ -1,0 +1,101 @@
+"""Shared transformer building blocks (pure-JAX, functional params).
+
+Params are plain nested dicts; init_* functions build them, apply functions
+consume them.  Per-layer parameter stacks carry a leading n_layers axis so
+the decoder can `lax.scan` over layers — essential to keep dry-run HLO
+small (one layer body lowered once regardless of depth).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), dtype) * scale)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,s,1,d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype),
+        "wo": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p, x: jax.Array) -> jax.Array:
+    from repro.dist.sharding import BATCH, MODEL, constrain
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    h = constrain(h, BATCH, None, MODEL)     # keep the ff dim TP-sharded
+    return h @ p["wo"]
+
+
+def mlp2_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    """2-matrix GELU MLP (whisper-style)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype),
+        "wo": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def mlp2_apply(p, x: jax.Array) -> jax.Array:
+    from repro.dist.sharding import BATCH, MODEL, constrain
+    h = constrain(jax.nn.gelu(x @ p["wi"]), BATCH, None, MODEL)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d_model), dtype) * 0.02}
+
+
+def embed_apply(p, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def unembed_apply(p, x: jax.Array) -> jax.Array:
+    """Tied unembedding: logits = x @ table^T."""
+    return jnp.einsum("...d,vd->...v", x, p["table"])

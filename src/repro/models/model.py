@@ -1,0 +1,132 @@
+"""Model-level glue: losses, parameter/FLOP accounting.
+
+`MODEL_FLOPS` here is the roofline's *useful work* definition:
+6·N·D for training (N = params in the active compute path, D = tokens) and
+2·N·D for forward-only serving steps.  For MoE, N counts only active
+experts (top_k + shared) — the §Roofline "useful compute" numerator.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import BATCH, MODEL, constrain
+from . import transformer
+from .ssm import mamba2_dims
+
+IGNORE = -1
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int):
+    """Padded-vocab causal CE.  logits: (B, S, Vpad) — positions beyond the
+    real vocab are masked; labels == IGNORE are excluded.  Returns
+    (mean_loss, n_tokens)."""
+    Vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    mask_v = jnp.arange(Vp) < vocab
+    logits = jnp.where(mask_v, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    lbl = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    tok_mask = labels != IGNORE
+    nll = jnp.where(tok_mask, lse - picked, 0.0)
+    n = jnp.maximum(tok_mask.sum(), 1)
+    return nll.sum() / n, n
+
+
+def loss_fn(params, cfg, batch, *, moe_impl: str = "einsum",
+            remat: bool = False, aux_weight: float = 0.01):
+    """Training loss.  batch must carry "labels" aligned with the *token*
+    positions (VLM patch positions carry no loss)."""
+    logits, aux = transformer.forward(params, cfg, batch, moe_impl=moe_impl,
+                                      remat=remat)
+    labels = batch["labels"]
+    S_lbl = labels.shape[1]
+    if logits.shape[1] != S_lbl:         # vlm: strip patch positions
+        logits = logits[:, -S_lbl:]
+    ce, n = cross_entropy(logits, labels, cfg.vocab)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": n}
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def count_params(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree_util.tree_leaves(params))
+
+
+def count_params_analytic(cfg) -> dict:
+    """Parameter counts straight from the config (no allocation).
+    Returns {"total": N, "active": N_active} — active differs for MoE."""
+    d, L = cfg.d_model, cfg.n_layers
+    D = transformer.head_dim(cfg) if cfg.n_heads else 0
+    embed = transformer.padded_vocab(cfg) * d
+
+    def attn_params():
+        if cfg.attn_impl == "mla":
+            return (d * cfg.q_lora
+                    + cfg.q_lora * cfg.n_heads * (cfg.d_nope + cfg.d_rope)
+                    + d * (cfg.kv_lora + cfg.d_rope)
+                    + cfg.kv_lora * cfg.n_heads * (cfg.d_nope + cfg.d_v)
+                    + cfg.n_heads * cfg.d_v * d)
+        return d * cfg.n_heads * D + 2 * d * cfg.n_kv * D + cfg.n_heads * D * d
+
+    def mamba_params():
+        d_in, H, conv_dim = mamba2_dims(d, cfg.ssm_expand, cfg.ssm_headdim,
+                                        cfg.ssm_groups, cfg.ssm_state)
+        d_proj = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + H
+        return (d * d_proj + cfg.ssm_conv * conv_dim + conv_dim
+                + 3 * H + d_in + d_in * d)
+
+    def ffn_params(active: bool):
+        if not cfg.n_experts:
+            mult = 2 if cfg.mlp == "gelu" else 3
+            return mult * d * cfg.d_ff
+        e = (cfg.top_k if active else cfg.n_experts)
+        per_expert = 3 * d * cfg.d_ff
+        shared = 3 * d * (cfg.n_shared * cfg.d_ff) if cfg.n_shared else 0
+        router = d * cfg.n_experts
+        return e * per_expert + shared + router
+
+    per_layer_total, per_layer_active = 0, 0
+    fam = cfg.family
+    if fam == "ssm":
+        per_layer_total = per_layer_active = mamba_params()
+    else:
+        a = attn_params()
+        if fam == "hybrid":
+            a += mamba_params()
+        per_layer_total = a + ffn_params(False)
+        per_layer_active = a + ffn_params(True)
+
+    total = embed + L * per_layer_total
+    active = embed + L * per_layer_active
+    if fam == "encdec":
+        enc = cfg.n_enc_layers * (attn_params()
+                                  + (2 if cfg.mlp == "gelu" else 3)
+                                  * d * cfg.d_ff)
+        xattn = L * attn_params()
+        total += enc + xattn
+        active += enc + xattn
+    return {"total": int(total), "active": int(active)}
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful-model-FLOPs for one step of `shape` (6·N·D train, 2·N·D
+    serve) using active params.  D = processed tokens."""
+    n_active = count_params_analytic(cfg)["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    """argmax over the real vocab (padded ids are -1e30-masked upstream)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

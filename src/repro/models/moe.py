@@ -1,0 +1,198 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Two execution paths sharing the same parameters and router math:
+
+  * "scatter" — production path.  Tokens are routed via argsort into
+    per-expert capacity buffers (E, C, d), expert FFNs run as one grouped
+    einsum, results scatter-add back with gate weighting.  Under GSPMD with
+    experts sharded over "model" and tokens over "data" the scatters lower
+    to all-to-all-style exchanges (expert parallelism).  Tokens beyond
+    capacity are dropped (standard drop-token discipline; capacity_factor
+    controls the slack).
+
+  * "dense" — O(T * E) reference path for smoke tests and tiny models;
+    computes every expert on every token and masks.  Exact (no drops), so
+    tests compare scatter == dense on under-capacity batches.
+
+Shared experts (DeepSeekMoE) are fused into a single always-on MLP of width
+n_shared * d_ff.  A switch-style load-balance auxiliary loss is returned to
+the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, d_model: int, d_ff: int, n_experts: int,
+             n_shared: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, dtype,
+                             scale=0.02),
+        "wi": jax.random.normal(ks[1], (n_experts, d_model, d_ff), dtype)
+              * (1.0 / d_model) ** 0.5,
+        "wg": jax.random.normal(ks[2], (n_experts, d_model, d_ff), dtype)
+              * (1.0 / d_model) ** 0.5,
+        "wo": jax.random.normal(ks[3], (n_experts, d_ff, d_model), dtype)
+              * (1.0 / d_ff) ** 0.5,
+    }
+    if n_shared:
+        p["shared"] = mlp_init(ks[4], d_model, n_shared * d_ff, dtype)
+    return p
+
+
+def _router(p, x2d, top_k: int):
+    """x2d: (T, d) -> gate values (T, k), expert ids (T, k), aux loss."""
+    logits = (x2d @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gvals, gids = jax.lax.top_k(probs, top_k)
+    gvals = gvals / jnp.maximum(gvals.sum(-1, keepdims=True), 1e-9)
+    # switch-style load balance: E * sum_e f_e * p_e
+    E = p["router"].shape[1]
+    me = probs.mean(0)
+    one_hot = jax.nn.one_hot(gids[:, 0], E, dtype=jnp.float32)
+    fe = one_hot.mean(0)
+    aux = E * jnp.sum(fe * me)
+    return gvals.astype(x2d.dtype), gids, aux
+
+
+def _expert_ffn(p, buf):
+    """buf: (E, C, d) -> (E, C, d), SwiGLU per expert."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    return jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+
+def moe_apply_scatter(p, x: jax.Array, top_k: int,
+                      capacity_factor: float = 1.25):
+    """x: (B, S, d).  Returns (out, aux_loss)."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    x2d = x.reshape(T, d)
+    gvals, gids, aux = _router(p, x2d, top_k)
+
+    flat_e = gids.reshape(-1)                        # (T*k,)
+    flat_g = gvals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok = order // top_k
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * top_k) - starts[e_sorted]
+    C = max(int(T * top_k / E * capacity_factor), 8)
+    keep = pos < C
+    pos_c = jnp.clip(pos, 0, C - 1)
+
+    src = jnp.where(keep[:, None], x2d[tok], 0.0)
+    buf = jnp.zeros((E, C, d), x.dtype).at[e_sorted, pos_c].add(src)
+    out_buf = _expert_ffn(p, buf)
+    contrib = out_buf[e_sorted, pos_c] * (flat_g[order] * keep)[:, None]
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(contrib)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x2d)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_dense(p, x: jax.Array, top_k: int):
+    """Exact reference path: every expert on every token, gate-masked."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    x2d = x.reshape(B * S, d)
+    gvals, gids, aux = _router(p, x2d, top_k)
+    gate_full = jnp.zeros((B * S, E), x.dtype)
+    gate_full = gate_full.at[jnp.arange(B * S)[:, None], gids].set(gvals)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x2d, p["wg"])) * \
+        jnp.einsum("td,edf->tef", x2d, p["wi"])
+    per_exp = jnp.einsum("tef,efd->ted", h, p["wo"])
+    y = jnp.einsum("ted,te->td", per_exp, gate_full)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x2d)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply_einsum(p, x: jax.Array, top_k: int,
+                     capacity_factor: float = 1.25, group_size: int = 256):
+    """GShard-style grouped one-hot einsum dispatch — the production path.
+
+    Why not "scatter" at scale: data-dependent argsort/scatter defeats the
+    SPMD partitioner, so the (E, C, d) buffers replicate per device (the
+    dry-run measured 350 GiB/device temp for granite-moe train_4k).  Here
+    tokens are reshaped into (G, s) groups (G inherits the batch sharding),
+    each group builds a dense (s, E, C) one-hot dispatch tensor, and
+    dispatch/expert/combine are plain einsums: experts shard over "model",
+    groups over the data axes, and the combine contraction reduces over the
+    expert shards with one psum.  Capacity C = s*top_k/E * capacity_factor
+    per group; overflow tokens drop (standard drop-token discipline).
+    """
+    from repro.dist.sharding import BATCH, EXPERT, constrain
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    gs = min(group_size, T)
+    while T % gs:
+        gs //= 2
+    G = T // gs
+    xg = x.reshape(G, gs, d)
+    f32 = jnp.float32
+
+    logits = (xg @ p["router"]).astype(f32)               # (G, s, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gvals, gids = jax.lax.top_k(probs, top_k)             # (G, s, k)
+    gvals = gvals / jnp.maximum(gvals.sum(-1, keepdims=True), 1e-9)
+    me = probs.reshape(T, E).mean(0)
+    fe = jax.nn.one_hot(gids[..., 0].reshape(T), E, dtype=f32).mean(0)
+    aux = E * jnp.sum(fe * me)
+
+    C = max(int(gs * top_k / E * capacity_factor), 8)
+    onehot_e = jax.nn.one_hot(gids, E, dtype=f32)         # (G, s, k, E)
+    flat = onehot_e.reshape(G, gs * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                 # (G, s*k, E)
+    pos_asn = jnp.sum(pos * flat, -1).reshape(G, gs, top_k)
+    keep = (pos_asn < C).astype(f32)
+    onehot_c = jax.nn.one_hot(jnp.minimum(pos_asn, C - 1).astype(jnp.int32),
+                              C, dtype=f32) * keep[..., None]
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot_e, onehot_c)
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c,
+                         gvals.astype(f32))
+    from repro.dist.sharding import MODEL
+    # EXPERT-else-capacity sharding: when E divides the model axis the
+    # expert dim shards (EP); otherwise (e.g. granite's 40 experts on a
+    # 16-way axis) the capacity dim takes it, keeping the (E, C, d)
+    # buffers 16x smaller either way
+    dispatch = constrain(dispatch.astype(x.dtype),
+                         BATCH, None, EXPERT, MODEL)
+    combine = constrain(combine.astype(x.dtype), BATCH, None, EXPERT, MODEL)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    expert_in = constrain(expert_in, BATCH, EXPERT, MODEL, None)
+    # single fused up/gate projection: expert_in feeds ONE dot, so its
+    # cotangent has one producer (the two-einsum form made XLA accumulate
+    # two f32 copies of the (E, C, d) gradient — 11 GiB at granite-moe
+    # shapes; EXPERIMENTS.md §Perf 'fused MoE up/gate')
+    wgi = jnp.concatenate([p["wg"], p["wi"]], axis=-1)
+    h2 = jnp.einsum("gecd,edf->gecf", expert_in, wgi)
+    h2 = constrain(h2, BATCH, EXPERT, MODEL, None)
+    gate, up = jnp.split(h2, 2, axis=-1)
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    out = constrain(out, BATCH, EXPERT, MODEL, None)
+    y = jnp.einsum("gsec,gecd->gsd", combine, out)
+    y = constrain(y, BATCH, None, None)
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], xg)
+    return y.reshape(B, S, d), aux
+
+
+def moe_apply(p, x, top_k: int, impl: str = "einsum",
+              capacity_factor: float = 1.25):
+    if impl == "dense":
+        return moe_apply_dense(p, x, top_k)
+    if impl == "scatter":
+        return moe_apply_scatter(p, x, top_k, capacity_factor)
+    return moe_apply_einsum(p, x, top_k, capacity_factor)

@@ -1,0 +1,208 @@
+"""Mamba2 SSD (state-space duality) mixer — arXiv:2405.21060.
+
+Chunked SSD for training/prefill (linear in sequence length) and an O(1)
+recurrent step for decode.  Layout: x (B, L, H, P) with H heads of headdim
+P; state (B, H, P, N) with state size N; B/C projections shared across
+`G` groups of heads.
+
+The chunk-scan algorithm:
+  within-chunk (diagonal) term via the masked decay matrix
+      L[i, j] = exp(sum_{t in (j, i]} dA_t),  i >= j
+  cross-chunk term via per-chunk input states and a sequential scan over
+  chunk boundaries (nchunks is small, lax.scan keeps HLO compact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) -> (..., Q, Q) with out[i, j] = sum_{t=j+1..i} dA_t for
+    i >= j, -inf otherwise."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 256, h0=None):
+    """SSD scan.  x: (B, L, H, P); dt: (B, L, H); A: (H,) negative;
+    Bm, Cm: (B, L, G, N).  Returns (y (B, L, H, P), h_last (B, H, P, N)).
+
+    Chunks are STREAMED through one lax.scan: only a single chunk's decay
+    matrix (B, H, Q, Q) and score block live at a time.  (The earlier
+    vectorized-over-chunks form materialized all nc chunks' (Q, Q) decay
+    and score tensors at once — several GiB/device at train shapes;
+    EXPERIMENTS.md §Perf iteration 'SSD chunk streaming'.)
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, L)
+    assert L % chunk == 0
+    nc = L // chunk
+    f32 = jnp.float32
+
+    xd = (x * dt[..., None]).astype(f32)                  # dt-scaled input
+    dA = (dt * A).astype(f32)                             # (B, L, H)
+
+    def csplit(t):
+        t = t.reshape(t.shape[0], nc, chunk, *t.shape[2:])
+        return t.swapaxes(0, 1)                           # (nc, B, Q, ...)
+
+    xc = csplit(xd)                                       # (nc,B,Q,H,P)
+    dAc = csplit(dA)                                      # (nc,B,Q,H)
+    Bc = csplit(Bm.astype(f32))                           # (nc,B,Q,G,N)
+    Cc = csplit(Cm.astype(f32))                           # (nc,B,Q,G,N)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), f32)
+
+    @jax.checkpoint
+    def scan_chunk(h, inp):
+        # checkpointed: backward recomputes one chunk's (Q, Q) decay/score
+        # block at a time; only the small (B, H, P, N) carries stack
+        xq, dAq, Bq, Cq = inp                             # one chunk each
+        # ---- intra-chunk (diagonal) ----
+        Lmat = jnp.exp(_segsum(dAq.transpose(0, 2, 1)))   # (B,H,Q,Q)
+        CB = jnp.einsum("bqgn,bkgn->bgqk", Cq, Bq)        # (B,G,Q,Q)
+        scores = jnp.repeat(CB, rep, axis=1) * Lmat       # (B,H,Q,Q)
+        y_diag = jnp.einsum("bhqk,bkhp->bqhp", scores, xq)
+        # ---- cross-chunk: contribution of the carried state ----
+        dA_cum = jnp.cumsum(dAq, axis=1)                  # (B,Q,H)
+        out_decay = jnp.exp(dA_cum)
+        Ch = jnp.repeat(Cq, rep, axis=2)                  # (B,Q,H,N)
+        y_off = jnp.einsum("bqhn,bqh,bhpn->bqhp", Ch, out_decay, h)
+        # ---- state update ----
+        decay_in = jnp.exp(dA_cum[:, -1:, :] - dA_cum)    # (B,Q,H)
+        Bh = jnp.repeat(Bq, rep, axis=2)                  # (B,Q,H,N)
+        states = jnp.einsum("bqhn,bqh,bqhp->bhpn", Bh, decay_in, xq)
+        h_new = h * jnp.exp(dA_cum[:, -1, :])[..., None, None] + states
+        return h_new, y_diag + y_off
+
+    h_last, ys = jax.lax.scan(scan_chunk, h0, (xc, dAc, Bc, Cc))
+    y = ys.swapaxes(0, 1).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), h_last
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """One recurrent step.  h: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bm, Cm: (B,G,N).  Returns (y (B,H,P), h_new)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    dA = jnp.exp((dt * A).astype(f32))                    # (B,H)
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=1)          # (B,H,N)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=1)
+    xd = (x * dt[..., None]).astype(f32)
+    h_new = h * dA[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xd, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y.astype(x.dtype), h_new
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 mixer block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(d_model: int, expand: int, headdim: int, groups: int,
+                state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_dim = d_inner + 2 * groups * state
+    return d_inner, n_heads, conv_dim
+
+
+def mamba2_init(key, d_model: int, *, state: int, expand: int = 2,
+                headdim: int = 64, groups: int = 1, conv: int = 4,
+                dtype=jnp.float32):
+    d_inner, H, conv_dim = mamba2_dims(d_model, expand, headdim, groups,
+                                       state)
+    ks = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * groups * state + H
+    return {
+        "in_proj": dense_init(ks[0], d_model, d_proj, dtype),
+        "conv_w": jax.random.normal(ks[1], (conv, conv_dim), dtype) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(0) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype),
+        "out_proj": dense_init(ks[2], d_inner, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_proj(proj, d_inner, groups, state, H):
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:d_inner + d_inner + 2 * groups * state]
+    dt = proj[..., -H:]
+    return z, xBC, dt
+
+
+def mamba2_apply(p, x, *, state: int, expand: int = 2, headdim: int = 64,
+                 groups: int = 1, chunk: int = 256, h0=None,
+                 conv_state=None, return_state: bool = False):
+    """Full-sequence (train / prefill) mamba2 mixer.  x: (B, L, d_model)."""
+    Bsz, L, d_model = x.shape
+    d_inner, H, conv_dim = mamba2_dims(d_model, expand, headdim, groups,
+                                       state)
+    proj = x @ p["in_proj"]
+    z, xBC_raw, dt = _split_proj(proj, d_inner, groups, state, H)
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner].reshape(Bsz, L, H, headdim)
+    Bm = xBC[..., d_inner:d_inner + groups * state].reshape(
+        Bsz, L, groups, state)
+    Cm = xBC[..., d_inner + groups * state:].reshape(Bsz, L, groups, state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_last = ssd_chunked(xs, dt, A, Bm, Cm, chunk=chunk, h0=h0)
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bsz, L, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    if return_state:
+        K = p["conv_w"].shape[0]
+        tail = xBC_raw[:, -(K - 1):, :]   # pre-conv inputs feed the decode conv
+        return out, (h_last, tail)
+    return out
+
+
+def mamba2_step(p, x, ssm_state, conv_state, *, state: int, expand: int = 2,
+                headdim: int = 64, groups: int = 1):
+    """Single-token decode.  x: (B, 1, d); ssm_state: (B,H,P,N);
+    conv_state: (B, K-1, conv_dim)."""
+    Bsz, _, d_model = x.shape
+    d_inner, H, conv_dim = mamba2_dims(d_model, expand, headdim, groups,
+                                       state)
+    proj = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(proj, d_inner, groups, state, H)
+    xBC = xBC[:, 0]                                        # (B, conv_dim)
+    window = jnp.concatenate([conv_state, xBC[:, None, :]], axis=1)
+    w = p["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"]
+    xBC_c = jax.nn.silu(conv_out)
+    xs = xBC_c[..., :d_inner].reshape(Bsz, H, headdim)
+    Bm = xBC_c[..., d_inner:d_inner + groups * state].reshape(
+        Bsz, groups, state)
+    Cm = xBC_c[..., d_inner + groups * state:].reshape(Bsz, groups, state)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_new = ssd_decode_step(ssm_state, xs, dtv, A, Bm, Cm)
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(Bsz, 1, d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"]
+    new_conv_state = window[:, 1:, :]
+    return out, h_new, new_conv_state

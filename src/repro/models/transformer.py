@@ -1,0 +1,508 @@
+"""The architecture zoo: one transformer substrate, six families.
+
+  dense   — GQA/MQA/MHA decoder (llama3.2-1b, yi-9b, granite-20b) and the
+            MLA variant (minicpm3-4b) selected by cfg.attn_impl
+  moe     — top-k routed experts (+optional shared experts):
+            granite-moe-3b-a800m, deepseek-moe-16b
+  ssm     — attention-free Mamba2/SSD stack (mamba2-1.3b)
+  hybrid  — parallel attention+SSM heads per layer (hymba-1.5b)
+  encdec  — encoder-decoder with cross attention (whisper-large-v3;
+            conv/audio frontend stubbed: inputs are precomputed frame
+            embeddings)
+  vlm     — decoder with prepended patch embeddings (internvl2-26b;
+            ViT frontend stubbed: inputs are precomputed patch embeddings)
+
+Three entry points, all `lax.scan` over a stacked layer pytree so the
+lowered HLO holds ONE layer body regardless of depth (critical for the
+512-device dry-run compile times):
+
+  forward(params, cfg, batch)              -> (logits, aux)      training
+  prefill(params, cfg, batch)              -> (last_logits, cache)
+  decode_step(params, cfg, cache, tok, pos)-> (logits, cache)    serving
+
+Distribution is GSPMD-first: the code calls `dist.sharding.constrain` with
+logical axes and runs unchanged from 1 CPU to a (pod, data, model) mesh.
+KV caches shard batch over the data axes and the *sequence* axis over
+"model" — the decode attention's masked softmax then lowers to flash-style
+(max, sum, acc) psums with no cache all-gather (verified in the dry-run).
+
+The config object is duck-typed (see configs/base.ArchConfig).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import BATCH, MODEL, SEQ, constrain
+from . import hybrid as hybrid_mod
+from . import ssm as ssm_mod
+from .attention import (chunked_attention, cross_attention, decode_attention,
+                        gqa_init, gqa_qkv, mla_decode, mla_init, mla_prefill)
+from .layers import (embed_apply, embed_init, mlp2_apply, mlp2_init,
+                     mlp_apply, mlp_init, rmsnorm, rmsnorm_init,
+                     unembed_apply)
+from .moe import moe_apply, moe_init
+
+
+def head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.n_heads
+
+
+def padded_vocab(cfg) -> int:
+    return getattr(cfg, "padded_vocab", None) or -(-cfg.vocab // 256) * 256
+
+
+def _dtype(cfg):
+    return jnp.dtype(getattr(cfg, "dtype", "float32"))
+
+
+def _mla_kwargs(cfg) -> dict:
+    return dict(n_heads=cfg.n_heads, kv_lora=cfg.kv_lora, d_nope=cfg.d_nope,
+                d_rope=cfg.d_rope, d_v=cfg.d_v, rope_theta=cfg.rope_theta)
+
+
+def _ssm_kwargs(cfg) -> dict:
+    return dict(ssm_state=cfg.ssm_state, ssm_headdim=cfg.ssm_headdim,
+                ssm_expand=cfg.ssm_expand, ssm_groups=cfg.ssm_groups)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, cfg, dtype):
+    if cfg.attn_impl == "mla":
+        return mla_init(key, cfg.d_model, cfg.n_heads, q_lora=cfg.q_lora,
+                        kv_lora=cfg.kv_lora, d_nope=cfg.d_nope,
+                        d_rope=cfg.d_rope, d_v=cfg.d_v, dtype=dtype)
+    return gqa_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv, head_dim(cfg),
+                    dtype)
+
+
+def _init_ffn(key, cfg, dtype):
+    if cfg.n_experts:
+        return "moe", moe_init(key, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                               n_shared=cfg.n_shared, dtype=dtype)
+    if cfg.mlp == "gelu":
+        return "mlp", mlp2_init(key, cfg.d_model, cfg.d_ff, dtype)
+    return "mlp", mlp_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _init_layer(key, cfg, dtype):
+    d = cfg.d_model
+    fam = cfg.family
+    if fam == "ssm":
+        return {"ln1": rmsnorm_init(d, dtype),
+                "mamba": ssm_mod.mamba2_init(
+                    key, d, state=cfg.ssm_state, expand=cfg.ssm_expand,
+                    headdim=cfg.ssm_headdim, groups=cfg.ssm_groups,
+                    dtype=dtype)}
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": rmsnorm_init(d, dtype),
+                         "ln2": rmsnorm_init(d, dtype)}
+    if fam == "hybrid":
+        p["mixer"] = hybrid_mod.hymba_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv, head_dim(cfg),
+            ssm_state=cfg.ssm_state, ssm_headdim=cfg.ssm_headdim,
+            ssm_expand=cfg.ssm_expand, ssm_groups=cfg.ssm_groups,
+            dtype=dtype)
+    else:
+        p["attn"] = _init_attn(ks[0], cfg, dtype)
+    if fam == "encdec":
+        p["ln_x"] = rmsnorm_init(d, dtype)
+        p["xattn"] = gqa_init(ks[1], d, cfg.n_heads, cfg.n_kv, head_dim(cfg),
+                              dtype)
+    name, ffn = _init_ffn(ks[2], cfg, dtype)
+    p[name] = ffn
+    return p
+
+
+def _init_enc_layer(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 2)
+    return {"ln1": rmsnorm_init(d, dtype),
+            "attn": gqa_init(ks[0], d, cfg.n_heads, cfg.n_kv, head_dim(cfg),
+                             dtype),
+            "ln2": rmsnorm_init(d, dtype),
+            "mlp": (mlp2_init if cfg.mlp == "gelu" else mlp_init)(
+                ks[1], d, cfg.d_ff, dtype)}
+
+
+def init_params(key, cfg):
+    """Full parameter pytree; layer params stacked on a leading L axis."""
+    dtype = _dtype(cfg)
+    ke, kl, kenc = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    params = {
+        "embed": embed_init(ke, padded_vocab(cfg), cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.family == "encdec":
+        enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+        params["enc_layers"] = jax.vmap(
+            lambda k: _init_enc_layer(k, cfg, dtype))(enc_keys)
+        params["enc_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+def param_shapes(cfg):
+    """ShapeDtypeStruct tree without allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence layer bodies (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(p, cfg, h, moe_impl):
+    if cfg.n_experts:
+        y, aux = moe_apply(p["moe"], h, cfg.top_k, impl=moe_impl)
+        return y, aux
+    apply = mlp2_apply if cfg.mlp == "gelu" else mlp_apply
+    return apply(p["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _attn_full(p, cfg, h, positions, *, causal=True, with_kv=False):
+    """GQA/MLA full-sequence attention.  Returns (out, kv_or_None).
+
+    q-tile size: flash-structured attention re-streams K/V once per
+    q-tile, so HBM traffic scales with Sq/q_chunk.  Prefill (with_kv, no
+    backward) takes 2048-row tiles — 8x fewer K/V passes; training keeps
+    256 so the checkpointed-tile backward stays small (§Perf L8)."""
+    B, S, _ = h.shape
+    qc = 2048 if with_kv else 256
+    if cfg.attn_impl == "mla":
+        out, latents = mla_prefill(p, h, positions, chunk=1024, q_chunk=qc,
+                                   **_mla_kwargs(cfg))
+        return out, ({"c": latents[0], "r": latents[1]} if with_kv else None)
+    H, KV, D = cfg.n_heads, cfg.n_kv, head_dim(cfg)
+    q, k, v = gqa_qkv(p, h, positions, H, KV, D, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=causal, chunk=min(1024, S),
+                          q_chunk=qc)
+    out = o.reshape(B, S, H * D) @ p["wo"]
+    return out, ({"k": k, "v": v} if with_kv else None)
+
+
+def _block_dense(x, p, cfg, positions, moe_impl, *, with_kv=False):
+    """dense / moe / vlm decoder block.  Returns (x, aux, kv)."""
+    h = constrain(rmsnorm(x, p["ln1"]), BATCH, SEQ, None)
+    attn_out, kv = _attn_full(p["attn"], cfg, h, positions, with_kv=with_kv)
+    x = x + constrain(attn_out, BATCH, SEQ, None)
+    h = constrain(rmsnorm(x, p["ln2"]), BATCH, SEQ, None)
+    y, aux = _ffn_apply(p, cfg, h, moe_impl)
+    x = x + constrain(y, BATCH, SEQ, None)
+    return x, aux, kv
+
+
+def _block_ssm(x, p, cfg, *, with_state=False):
+    h = constrain(rmsnorm(x, p["ln1"]), BATCH, SEQ, None)
+    if with_state:
+        y, (h_last, conv_tail) = ssm_mod.mamba2_apply(
+            p["mamba"], h, state=cfg.ssm_state, expand=cfg.ssm_expand,
+            headdim=cfg.ssm_headdim, groups=cfg.ssm_groups,
+            chunk=min(256, h.shape[1]), return_state=True)
+        x = x + constrain(y, BATCH, SEQ, None)
+        return x, {"ssm": h_last, "conv": conv_tail}
+    y = ssm_mod.mamba2_apply(
+        p["mamba"], h, state=cfg.ssm_state, expand=cfg.ssm_expand,
+        headdim=cfg.ssm_headdim, groups=cfg.ssm_groups,
+        chunk=min(256, h.shape[1]))
+    return x + constrain(y, BATCH, SEQ, None), None
+
+
+def _block_hybrid(x, p, cfg, positions, moe_impl, *, with_state=False):
+    h = constrain(rmsnorm(x, p["ln1"]), BATCH, SEQ, None)
+    kw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=head_dim(cfg),
+              window=cfg.window, rope_theta=cfg.rope_theta,
+              ssm_state=cfg.ssm_state, ssm_headdim=cfg.ssm_headdim,
+              ssm_expand=cfg.ssm_expand, ssm_groups=cfg.ssm_groups)
+    if with_state:
+        mix, cache = hybrid_mod.hymba_apply(p["mixer"], h, positions,
+                                            return_state=True, **kw)
+    else:
+        mix = hybrid_mod.hymba_apply(p["mixer"], h, positions, **kw)
+        cache = None
+    x = x + constrain(mix, BATCH, SEQ, None)
+    h = constrain(rmsnorm(x, p["ln2"]), BATCH, SEQ, None)
+    y, aux = _ffn_apply(p, cfg, h, moe_impl)
+    x = x + constrain(y, BATCH, SEQ, None)
+    return x, aux, cache
+
+
+def _block_encdec_dec(x, p, cfg, positions, enc_out, moe_impl, *,
+                      with_kv=False):
+    """Decoder block with cross attention.  enc_out: (B, Se, d)."""
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv, head_dim(cfg)
+    h = constrain(rmsnorm(x, p["ln1"]), BATCH, SEQ, None)
+    attn_out, kv = _attn_full(p["attn"], cfg, h, positions, with_kv=with_kv)
+    x = x + constrain(attn_out, BATCH, SEQ, None)
+
+    h = constrain(rmsnorm(x, p["ln_x"]), BATCH, SEQ, None)
+    q = (h @ p["xattn"]["wq"]).reshape(B, S, H, D)
+    Se = enc_out.shape[1]
+    xk = (enc_out @ p["xattn"]["wk"]).reshape(B, Se, KV, D)
+    xv = (enc_out @ p["xattn"]["wv"]).reshape(B, Se, KV, D)
+    o = cross_attention(q, xk, xv)
+    x = x + constrain(o.reshape(B, S, H * D) @ p["xattn"]["wo"],
+                      BATCH, SEQ, None)
+    if with_kv:
+        kv = dict(kv, xk=xk, xv=xv)
+
+    h = constrain(rmsnorm(x, p["ln2"]), BATCH, SEQ, None)
+    y, aux = _ffn_apply(p, cfg, h, moe_impl)
+    x = x + constrain(y, BATCH, SEQ, None)
+    return x, aux, kv
+
+
+def _encode(params, cfg, frames, remat=False):
+    """Encoder stack over precomputed frame embeddings (frontend stub)."""
+    B, Se, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(Se), (B, Se))
+    x = constrain(frames.astype(_dtype(cfg)), BATCH, SEQ, None)
+
+    def body(x, p):
+        h = constrain(rmsnorm(x, p["ln1"]), BATCH, SEQ, None)
+        o, _ = _attn_full(p["attn"], cfg, h, positions, causal=False)
+        x = x + constrain(o, BATCH, SEQ, None)
+        h = constrain(rmsnorm(x, p["ln2"]), BATCH, SEQ, None)
+        apply = mlp2_apply if cfg.mlp == "gelu" else mlp_apply
+        x = x + constrain(apply(p["mlp"], h), BATCH, SEQ, None)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rmsnorm(x, params["enc_norm"])
+
+
+# ---------------------------------------------------------------------------
+# Training forward
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg, batch, *, moe_impl: str = "einsum",
+            remat: bool = False):
+    """Full-sequence forward.  Returns (logits (B, S, Vpad), aux_loss)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens)
+    if fam == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = constrain(x, BATCH, SEQ, None)
+
+    enc_out = None
+    if fam == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"], remat=remat)
+
+    def body(carry, p):
+        x, aux = carry
+        if fam == "ssm":
+            x, _ = _block_ssm(x, p, cfg)
+            a = jnp.zeros((), jnp.float32)
+        elif fam == "hybrid":
+            x, a, _ = _block_hybrid(x, p, cfg, positions, moe_impl)
+        elif fam == "encdec":
+            x, a, _ = _block_encdec_dec(x, p, cfg, positions, enc_out,
+                                        moe_impl)
+        else:
+            x, a, _ = _block_dense(x, p, cfg, positions, moe_impl)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = rmsnorm(x, params["final_norm"])
+    logits = unembed_apply(params["embed"], x)
+    logits = constrain(logits, BATCH, None, MODEL)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int):
+    """Zero-filled decode cache; leaves stacked over layers (leading L)."""
+    dtype = _dtype(cfg)
+    L, B, S = cfg.n_layers, batch_size, max_len
+    D = head_dim(cfg) if cfg.n_heads else 0
+    fam = cfg.family
+
+    def ssm_leaves():
+        d_in, H, conv_dim = ssm_mod.mamba2_dims(
+            cfg.d_model, cfg.ssm_expand, cfg.ssm_headdim, cfg.ssm_groups,
+            cfg.ssm_state)
+        return {"ssm": jnp.zeros((L, B, H, cfg.ssm_headdim, cfg.ssm_state),
+                                 jnp.float32),
+                "conv": jnp.zeros((L, B, cfg.ssm_conv - 1, conv_dim), dtype)}
+
+    if fam == "ssm":
+        return ssm_leaves()
+    if fam == "hybrid":
+        return {"k": jnp.zeros((L, B, cfg.window, cfg.n_kv, D), dtype),
+                "v": jnp.zeros((L, B, cfg.window, cfg.n_kv, D), dtype),
+                **ssm_leaves()}
+    if cfg.attn_impl == "mla":
+        return {"c": jnp.zeros((L, B, S, cfg.kv_lora), dtype),
+                "r": jnp.zeros((L, B, S, cfg.d_rope), dtype)}
+    cache = {"k": jnp.zeros((L, B, S, cfg.n_kv, D), dtype),
+             "v": jnp.zeros((L, B, S, cfg.n_kv, D), dtype)}
+    if fam == "encdec":
+        Se = getattr(cfg, "enc_len", None) or S
+        cache["xk"] = jnp.zeros((L, B, Se, cfg.n_kv, D), dtype)
+        cache["xv"] = jnp.zeros((L, B, Se, cfg.n_kv, D), dtype)
+    return cache
+
+
+def cache_shapes(cfg, batch_size: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch_size, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Prefill (returns last-position logits + the populated cache)
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg, batch, *, moe_impl: str = "einsum"):
+    """Serving prefill: one full-sequence pass that also materializes the
+    decode cache.  Returns (logits (B, 1, Vpad) of the LAST position,
+    cache)."""
+    fam = cfg.family
+    tokens = batch["tokens"]
+    x = embed_apply(params["embed"], tokens)
+    if fam == "vlm":
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    x = constrain(x, BATCH, SEQ, None)
+
+    enc_out = None
+    if fam == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"])
+
+    def body(x, p):
+        if fam == "ssm":
+            x, cache = _block_ssm(x, p, cfg, with_state=True)
+        elif fam == "hybrid":
+            x, _, cache = _block_hybrid(x, p, cfg, positions, moe_impl,
+                                        with_state=True)
+        elif fam == "encdec":
+            x, _, cache = _block_encdec_dec(x, p, cfg, positions, enc_out,
+                                            moe_impl, with_kv=True)
+        else:
+            x, _, cache = _block_dense(x, p, cfg, positions, moe_impl,
+                                       with_kv=True)
+        return x, cache
+
+    x, cache = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(x, params["final_norm"])
+    last = jax.lax.slice_in_dim(x, S - 1, S, axis=1)
+    logits = unembed_apply(params["embed"], last)
+    return constrain(logits, BATCH, None, MODEL), cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+
+def _decode_dense(x, p, cfg, c, pos):
+    B = x.shape[0]
+    h = rmsnorm(x, p["ln1"])
+    if cfg.attn_impl == "mla":
+        out, (cc, cr) = mla_decode(p["attn"], h, pos, (c["c"], c["r"]),
+                                   **_mla_kwargs(cfg))
+        return x + out, {"c": cc, "r": cr}
+    H, KV, D = cfg.n_heads, cfg.n_kv, head_dim(cfg)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = gqa_qkv(p["attn"], h, positions, H, KV, D, cfg.rope_theta)
+    ck = jax.lax.dynamic_update_slice(c["k"], k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(c["v"], v, (0, pos, 0, 0))
+    ck = constrain(ck, BATCH, SEQ, None, None)
+    cv = constrain(cv, BATCH, SEQ, None, None)
+    o = decode_attention(q, ck, cv, pos + 1)
+    out = o.reshape(B, 1, H * D) @ p["attn"]["wo"]
+    return x + out, {"k": ck, "v": cv}
+
+
+def _decode_xattn(x, p, cfg, c):
+    B = x.shape[0]
+    H, KV, D = cfg.n_heads, cfg.n_kv, head_dim(cfg)
+    h = rmsnorm(x, p["ln_x"])
+    q = (h @ p["xattn"]["wq"]).reshape(B, 1, H, D)
+    o = decode_attention(q, c["xk"], c["xv"], c["xk"].shape[1])
+    return x + o.reshape(B, 1, H * D) @ p["xattn"]["wo"]
+
+
+def decode_step(params, cfg, cache, tokens, pos, *,
+                moe_impl: str = "einsum"):
+    """One token for every sequence in the batch.  tokens: (B, 1);
+    pos: scalar int32 (current length == number of cached positions).
+    Returns (logits (B, 1, Vpad), new_cache)."""
+    fam = cfg.family
+    x = embed_apply(params["embed"], tokens)
+    x = constrain(x, BATCH, None, None)
+
+    def body(x, inp):
+        p, c = inp
+        if fam == "ssm":
+            h = rmsnorm(x, p["ln1"])
+            y, s_new, conv_new = ssm_mod.mamba2_step(
+                p["mamba"], h, c["ssm"], c["conv"], state=cfg.ssm_state,
+                expand=cfg.ssm_expand, headdim=cfg.ssm_headdim,
+                groups=cfg.ssm_groups)
+            return x + y, {"ssm": s_new, "conv": conv_new}
+        if fam == "hybrid":
+            h = rmsnorm(x, p["ln1"])
+            mix, c2 = hybrid_mod.hymba_step(
+                p["mixer"], h, c, pos, n_heads=cfg.n_heads, n_kv=cfg.n_kv,
+                head_dim=head_dim(cfg), window=cfg.window,
+                rope_theta=cfg.rope_theta, **_ssm_kwargs(cfg))
+            x = x + mix
+            h = rmsnorm(x, p["ln2"])
+            y, _ = _ffn_apply(p, cfg, h, moe_impl)
+            return x + y, c2
+        x, c2 = _decode_dense(x, p, cfg, c, pos)
+        if fam == "encdec":
+            x = _decode_xattn(x, p, cfg, c)
+        h = rmsnorm(x, p["ln2"])
+        y, _ = _ffn_apply(p, cfg, h, moe_impl)
+        return x + y, c2
+
+    # fori_loop with an IN-PLACE stacked-cache carry (not scan-with-ys):
+    # the while carry aliases its buffers, so the multi-GiB cache is
+    # updated in place.  A scan stacking new per-layer caches as ys
+    # allocates a second full cache — and XLA-CPU's float normalization
+    # then materializes it in f32 (2x again), which is what pushed the
+    # 32k-decode cells past 16 GiB (EXPERIMENTS.md §Perf 'in-place cache').
+    # Cross-attention KV (xk/xv) is read-only and never rewritten.
+    READONLY = ("xk", "xv")
+    mutable = {k: v for k, v in cache.items() if k not in READONLY}
+    readonly = {k: v for k, v in cache.items() if k in READONLY}
+
+    def layer_body(i, carry):
+        x, mut = carry
+        take = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                      keepdims=False)
+        p = jax.tree_util.tree_map(take, params["layers"])
+        c = {**jax.tree_util.tree_map(take, mut),
+             **jax.tree_util.tree_map(take, readonly)}
+        x, c2 = body(x, (p, c))
+        mut = jax.tree_util.tree_map(
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                full, new.astype(full.dtype), i, 0), mut, c2)
+        return x, mut
+
+    x, mutable = jax.lax.fori_loop(0, cfg.n_layers, layer_body,
+                                   (x, mutable))
+    new_cache = {**mutable, **readonly}
+    x = rmsnorm(x, params["final_norm"])
+    logits = unembed_apply(params["embed"], x)
+    return constrain(logits, BATCH, None, MODEL), new_cache

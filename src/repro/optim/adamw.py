@@ -1,0 +1,78 @@
+"""In-repo AdamW (no optax dependency).
+
+Moments are f32 regardless of param dtype (bf16 params + f32 moments is
+the production configuration).  The train step applies ZeRO-1 sharding
+constraints to the moments (dist.sharding.opt_state_specs) so they spread
+over the data axes on top of the params' TP sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any          # f32 pytree like params
+    v: Any          # f32 pytree like params
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(m=jax.tree_util.tree_map(zeros, params),
+                          v=jax.tree_util.tree_map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (updates, new_state); updates are in param dtype."""
+        c = state.count + 1
+        b1c = 1.0 - self.b1 ** c.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** c.astype(jnp.float32)
+
+        def one(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g32
+            v2 = self.b2 * v + (1 - self.b2) * g32 * g32
+            mh = m2 / b1c
+            vh = v2 / b2c
+            upd = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                upd = upd + self.weight_decay * p.astype(jnp.float32)
+            return (-self.lr * upd).astype(p.dtype), m2, v2
+
+        flat = jax.tree_util.tree_map(one, grads, state.m, state.v, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+        return updates, AdamWState(m=m, v=v, count=c)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), norm

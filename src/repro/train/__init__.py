@@ -1,0 +1,9 @@
+"""Training / serving steps and the fault-tolerant loop."""
+from .loop import LoopConfig, train_loop
+from .serve_step import decode_loop, make_prefill_step, make_serve_step
+from .train_step import (TrainState, batch_shardings, init_state,
+                         make_train_step, state_shapes, state_shardings)
+
+__all__ = ["LoopConfig", "train_loop", "decode_loop", "make_prefill_step",
+           "make_serve_step", "TrainState", "batch_shardings", "init_state",
+           "make_train_step", "state_shapes", "state_shardings"]

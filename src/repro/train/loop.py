@@ -1,0 +1,88 @@
+"""Fault-tolerant training loop: checkpoint/restart + straggler watchdog.
+
+The loop is restart-identical by construction: the data pipeline is a pure
+function of the step index and checkpoints capture (params, opt, step), so
+`resume -> replay` reproduces the exact trajectory (tested in
+tests/test_fault_tolerance.py).  `failure_injector` lets tests (and chaos
+drills) raise at chosen steps to exercise the restart path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.dist.elastic import StragglerMonitor
+from repro.optim import AdamW
+from .train_step import TrainState, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str | None = None
+    save_every: int = 50
+    log_every: int = 10
+    max_restarts: int = 3
+    straggler_factor: float = 2.5
+    seed: int = 0
+
+
+def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
+               mesh=None, optimizer: AdamW | None = None,
+               remat: bool = True, moe_impl: str = "einsum",
+               failure_injector: Callable[[int], None] | None = None,
+               verbose: bool = False) -> tuple[TrainState, list[dict]]:
+    """Run `loop.steps` steps of `cfg` with checkpoint/restart.
+
+    batch_fn(step) -> batch pytree (pure function of step — determinism is
+    what makes restart replay exact).
+    """
+    optimizer = optimizer or AdamW()
+    step_fn = make_train_step(cfg, mesh, optimizer=optimizer, remat=remat,
+                              moe_impl=moe_impl)
+
+    def fresh_state() -> TrainState:
+        return init_state(jax.random.PRNGKey(loop.seed), cfg, optimizer)
+
+    def try_restore() -> tuple[TrainState, int]:
+        if loop.ckpt_dir and ckpt.latest_step(loop.ckpt_dir) is not None:
+            like = jax.eval_shape(fresh_state)
+            state, step = ckpt.restore(loop.ckpt_dir, like)
+            return state, step
+        return fresh_state(), 0
+
+    state, start = try_restore()
+    monitor = StragglerMonitor(factor=loop.straggler_factor)
+    history: list[dict] = []
+    restarts = 0
+    step = start
+    while step < loop.steps:
+        try:
+            if failure_injector:
+                failure_injector(step)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch_fn(step))
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics.update(step=step, seconds=dt,
+                           straggler=monitor.record(step, dt))
+            history.append(metrics)
+            if verbose and step % loop.log_every == 0:
+                print(f"[train] step={step} loss={metrics['loss']:.4f} "
+                      f"({dt*1e3:.0f} ms)")
+            step += 1
+            if loop.ckpt_dir and step % loop.save_every == 0:
+                ckpt.save(loop.ckpt_dir, step, state)
+        except Exception:            # noqa: BLE001 — supervised restart
+            restarts += 1
+            if restarts > loop.max_restarts or not loop.ckpt_dir:
+                raise
+            state, step = try_restore()
+    if loop.ckpt_dir:
+        ckpt.save(loop.ckpt_dir, step, state)
+    return state, history

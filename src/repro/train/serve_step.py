@@ -1,0 +1,79 @@
+"""jit'd serving steps: prefill + cached single-token decode.
+
+serve_step signature (the dry-run's decode entry point):
+    (params, cache, tokens (B,1), pos ()) -> (logits (B,1,Vpad), cache)
+
+Cache placement: batch over the data axes, sequence over "model"
+(dist.sharding.cache_specs) — the masked-softmax decode attention then
+compiles to flash-style partial-max/sum/acc all-reduces with zero cache
+all-gathers.  Cache buffers are donated so decode updates in place.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import transformer
+
+
+def params_shardings(mesh: Mesh, cfg):
+    shapes = transformer.param_shapes(cfg)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        shd.param_specs(mesh, shapes),
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def make_serve_step(cfg, mesh: Mesh | None = None, *,
+                    moe_impl: str = "einsum", donate: bool = True):
+    """One decode token for the whole batch."""
+    def step(params, cache, tokens, pos):
+        with shd.use_mesh(mesh):
+            logits, cache = transformer.decode_step(
+                params, cfg, cache, tokens, pos, moe_impl=moe_impl)
+            return logits, cache
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,) if donate else ())
+
+    pshard = params_shardings(mesh, cfg)
+    return jax.jit(
+        step,
+        in_shardings=(pshard, None, None, None),
+        donate_argnums=(1,) if donate else ())
+
+
+def make_prefill_step(cfg, mesh: Mesh | None = None, *,
+                      moe_impl: str = "einsum"):
+    """Full-sequence prefill -> (last-token logits, populated cache)."""
+    def step(params, batch):
+        with shd.use_mesh(mesh):
+            return transformer.prefill(params, cfg, batch,
+                                       moe_impl=moe_impl)
+
+    if mesh is None:
+        return jax.jit(step)
+    pshard = params_shardings(mesh, cfg)
+    return jax.jit(step, in_shardings=(pshard, None))
+
+
+def decode_loop(cfg, params, cache, first_token, start_pos: int,
+                n_tokens: int, *, mesh: Mesh | None = None,
+                moe_impl: str = "einsum"):
+    """Greedy autoregressive loop (host-driven; serving example path)."""
+    step = make_serve_step(cfg, mesh, moe_impl=moe_impl, donate=True)
+    tok = first_token
+    out = [tok]
+    pos = start_pos
+    for _ in range(n_tokens):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        mask = jnp.arange(logits.shape[-1]) < cfg.vocab
+        logits = jnp.where(mask, logits, -jnp.inf)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+        pos += 1
+    return jnp.concatenate(out, axis=1), cache

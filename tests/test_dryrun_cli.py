@@ -1,0 +1,52 @@
+"""End-to-end dry-run CLI (deliverable e), on the cheapest cell.
+
+Runs `python -m repro.launch.dryrun --arch rescal-small --shape mu_iter`
+in a subprocess (the 512-device override must precede jax init) and
+validates the recorded artifact schema the roofline pipeline consumes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = SRC
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                           *args], capture_output=True, text=True,
+                          timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_rescal_small_cell(tmp_path, multi_pod):
+    out = tmp_path / "cell.json"
+    args = ["--arch", "rescal-small", "--shape", "mu_iter",
+            "--out", str(out)]
+    if multi_pod:
+        args.append("--multi-pod")
+    r = _run(args)
+    assert r.returncode == 0, r.stderr[-2000:]
+    d = json.loads(out.read_text())
+    assert d["devices"] == (512 if multi_pod else 256)
+    assert d["skipped"] is False
+    assert d["flops_per_device"] > 0
+    assert d["memory"]["fits_16gib"]
+    assert d["collectives"]["total"]["count"] > 0
+    # paper schedule: explicit row/col psums must be present
+    assert d["collectives"].get("all-reduce", {}).get("count", 0) > 0
+
+
+@pytest.mark.slow
+def test_skipped_cell_records_reason(tmp_path):
+    out = tmp_path / "skip.json"
+    r = _run(["--arch", "yi-9b", "--shape", "long_500k", "--out", str(out)])
+    assert r.returncode == 0, r.stderr[-2000:]
+    d = json.loads(out.read_text())
+    assert "full-attention" in d["skipped"]

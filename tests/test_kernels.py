@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles, interpret mode (CPU).
+
+Every kernel sweeps shapes x dtypes against ref.py per the deliverable.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse as sp
+from repro.kernels import (bcsr_spmm, flash_attention, fused_xa_xtb,
+                           mu_update_a, ref)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-5)
+
+
+class TestFusedBilinear:
+    @pytest.mark.parametrize("m,n1,n2,k", [(1, 128, 128, 8), (2, 256, 128, 16),
+                                           (3, 128, 256, 32)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, key, m, n1, n2, k, dtype):
+        X = jax.random.uniform(key, (m, n1, n2), dtype)
+        B1 = jax.random.uniform(key, (n2, k), dtype)
+        B2 = jax.random.uniform(key, (m, n1, k), dtype)
+        xa, xtb = fused_xa_xtb(X, B1, B2, impl="interpret", bm=128, bn=128)
+        xa_r, xtb_r = ref.ref_fused_xa_xtb(X, B1, B2)
+        np.testing.assert_allclose(np.asarray(xa, np.float32),
+                                   np.asarray(xa_r, np.float32), **tol(dtype))
+        np.testing.assert_allclose(np.asarray(xtb, np.float32),
+                                   np.asarray(xtb_r, np.float32), **tol(dtype))
+
+    def test_panelized_path(self, key):
+        """ops.py splits n2 panels when the VMEM window would overflow."""
+        X = jax.random.uniform(key, (1, 128, 512))
+        B1 = jax.random.uniform(key, (512, 8))
+        B2 = jax.random.uniform(key, (1, 128, 8))
+        import repro.kernels.ops as ops
+        old = ops.VMEM_PANEL_BYTES
+        try:
+            ops.VMEM_PANEL_BYTES = 128 * 8 * 4      # force panel split
+            xa, xtb = fused_xa_xtb(X, B1, B2, impl="interpret",
+                                   bm=128, bn=128)
+        finally:
+            ops.VMEM_PANEL_BYTES = old
+        xa_r, xtb_r = ref.ref_fused_xa_xtb(X, B1, B2)
+        np.testing.assert_allclose(xa, xa_r, rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(xtb, xtb_r, rtol=2e-4, atol=1e-5)
+
+
+class TestMuRatio:
+    @pytest.mark.parametrize("n,k,bm", [(256, 8, 128), (512, 16, 256),
+                                        (128, 40, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes(self, key, n, k, bm, dtype):
+        A = jax.random.uniform(key, (n, k), dtype, 0.1, 1.0)
+        Num = jax.random.uniform(key, (n, k), dtype, 0.1, 1.0)
+        S = jax.random.uniform(key, (k, k), dtype, 0.1, 1.0)
+        out = mu_update_a(A, Num, S, impl="interpret", bm=bm)
+        want = ref.ref_mu_update_a(A, Num, S)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **tol(dtype))
+
+
+class TestBcsrSpmm:
+    @pytest.mark.parametrize("bs,density", [(64, 0.2), (128, 0.4)])
+    def test_vs_ref(self, key, bs, density):
+        s = sp.random_bcsr(key, m=2, n=4 * bs, bs=bs, block_density=density)
+        B = jax.random.uniform(key, (s.n, 16))
+        out = bcsr_spmm(s, B, impl="interpret")
+        np.testing.assert_allclose(out, ref.ref_bcsr_spmm(s, B),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (5, 1)])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_gqa_causal(self, key, hq, hkv, causal):
+        q = jax.random.normal(key, (2, hq, 128, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, hkv, 128, 32))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, hkv, 128, 32))
+        out = flash_attention(q, k, v, causal=causal, impl="interpret",
+                              bq=64, bk=64)
+        want = ref.ref_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    def test_query_offset_continuation(self, key):
+        """Chunked prefill: offset queries must mask exactly like the
+        full-sequence reference."""
+        q = jax.random.normal(key, (1, 2, 64, 32))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 128, 32))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 128, 32))
+        out = flash_attention(q, k, v, causal=True, q_offset=64,
+                              impl="interpret", bq=64, bk=64)
+        want = ref.ref_attention(q, k, v, causal=True, q_offset=64)
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 1000),
+           sq=st.sampled_from([64, 128]), skv=st.sampled_from([64, 128]),
+           d=st.sampled_from([16, 64]))
+    def test_hypothesis_shapes(self, seed, sq, skv, d):
+        key = jax.random.PRNGKey(seed)
+        q = jax.random.normal(key, (1, 2, sq, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, skv, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, skv, d))
+        out = flash_attention(q, k, v, causal=False, impl="interpret",
+                              bq=64, bk=64)
+        want = ref.ref_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(out, want, rtol=3e-4, atol=3e-4)

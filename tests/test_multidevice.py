@@ -1,0 +1,33 @@
+"""Distributed == single-device equivalence, via subprocesses with 8 fake
+devices (xla_force_host_platform_device_count must never leak into this
+process — smoke tests and benches see 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "multidevice_main.py")
+
+CHECKS = [
+    "dist_rescal_equals_single",
+    "dist_rescal_sparse_equals_dense",
+    "ensemble_step_pods",
+    "sharded_train_matches_single",
+    "sharded_decode_matches_single",
+    "ef_psum",
+    "clustering_sharded_similarity",
+    "elastic_reshard",
+]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("check", CHECKS)
+def test_multidevice(check):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)        # the script sets its own
+    r = subprocess.run([sys.executable, SCRIPT, check],
+                       capture_output=True, text=True, timeout=900,
+                       env=env)
+    assert r.returncode == 0, f"{check}\nSTDOUT:{r.stdout}\nSTDERR:{r.stderr[-3000:]}"
+    assert f"OK {check}" in r.stdout

@@ -1,0 +1,70 @@
+"""AdamW, clipping, and error-feedback int8 compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamW, apply_updates, clip_by_global_norm,
+                         compression, global_norm)
+
+
+class TestAdamW:
+    def test_quadratic_convergence(self):
+        opt = AdamW(lr=0.1)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            updates, state = opt.update(grads, state, params)
+            params = apply_updates(params, updates)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_moments_are_f32_even_for_bf16_params(self):
+        opt = AdamW()
+        params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+        state = opt.init(params)
+        assert state.m["w"].dtype == jnp.float32
+        updates, _ = opt.update({"w": jnp.ones((4,), jnp.bfloat16)}, state,
+                                params)
+        assert updates["w"].dtype == jnp.bfloat16
+
+    def test_weight_decay_pulls_to_zero(self):
+        opt = AdamW(lr=0.05, weight_decay=0.5)
+        params = {"w": jnp.array([1.0])}
+        state = opt.init(params)
+        for _ in range(100):
+            updates, state = opt.update({"w": jnp.zeros(1)}, state, params)
+            params = apply_updates(params, updates)
+        assert abs(float(params["w"][0])) < 0.1
+
+    def test_clip_by_global_norm(self):
+        tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+        clipped, norm = clip_by_global_norm(tree, 1.0)
+        assert abs(float(norm) - 10.0) < 1e-4
+        assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self, key):
+        x = jax.random.normal(key, (1000,))
+        c = compression.compress(x)
+        err = np.abs(np.asarray(compression.decompress(c) - x))
+        assert err.max() <= float(c.scale) * 0.51 + 1e-6
+
+    def test_error_feedback_accumulates_exactly(self, key):
+        """Sum of decompressed updates + final error == sum of raw grads."""
+        err = jnp.zeros((256,))
+        total_sent = jnp.zeros((256,))
+        total_true = jnp.zeros((256,))
+        for i in range(20):
+            g = jax.random.normal(jax.random.fold_in(key, i), (256,)) * 0.1
+            c, err = compression.ef_compress(g, err)
+            total_sent = total_sent + compression.decompress(c)
+            total_true = total_true + g
+        np.testing.assert_allclose(np.asarray(total_sent + err),
+                                   np.asarray(total_true), rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_int8_payload(self, key):
+        c = compression.compress(jax.random.normal(key, (64,)))
+        assert c.q.dtype == jnp.int8

@@ -1,0 +1,111 @@
+"""Properties of the non-negative RESCAL multiplicative updates (Eq. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_lowrank
+from repro.core import (RescalState, init_factors, mu_step_batched,
+                        mu_step_sliced, normalize, reconstruct, rel_error,
+                        rescal)
+from repro.core.nndsvd import nndsvd_init_A
+from repro.core.regression import regress_R
+
+
+def direct_rel_error(X, A, R):
+    rec = np.einsum("ia,mab,jb->mij", A, R, A)
+    return np.linalg.norm(X - rec) / np.linalg.norm(X)
+
+
+class TestMUStep:
+    def test_sliced_equals_batched(self, key):
+        X, _, _ = make_lowrank(key, n=20, m=5, k=3)
+        s0 = init_factors(key, 20, 5, 3)
+        sb = mu_step_batched(X, s0)
+        ss = mu_step_sliced(X, s0)
+        np.testing.assert_allclose(sb.A, ss.A, rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(sb.R, ss.R, rtol=2e-5, atol=1e-6)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000), n=st.sampled_from([8, 12, 17]),
+           m=st.sampled_from([1, 3]), k=st.sampled_from([2, 4]))
+    def test_error_monotone_nonincreasing(self, seed, n, m, k):
+        """MU iterations never increase ||X - A R A^T||_F (the defining
+        property of the multiplicative scheme)."""
+        key = jax.random.PRNGKey(seed)
+        X, _, _ = make_lowrank(key, n=n, m=m, k=k)
+        state = init_factors(jax.random.fold_in(key, 1), n, m, k)
+        prev = float(rel_error(X, state.A, state.R))
+        for _ in range(12):
+            state = mu_step_batched(X, state)
+            cur = float(rel_error(X, state.A, state.R))
+            assert cur <= prev + 1e-5, (cur, prev)
+            prev = cur
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_nonnegativity_invariant(self, seed):
+        key = jax.random.PRNGKey(seed)
+        X, _, _ = make_lowrank(key, n=12, m=2, k=3)
+        state = init_factors(jax.random.fold_in(key, 1), 12, 2, 3)
+        for _ in range(5):
+            state = mu_step_batched(X, state)
+        assert (np.asarray(state.A) >= 0).all()
+        assert (np.asarray(state.R) >= 0).all()
+
+    def test_rel_error_identity_matches_direct(self, key):
+        """The small-intermediates error identity == explicit residual."""
+        X, _, _ = make_lowrank(key, n=16, m=3, k=4)
+        state = init_factors(key, 16, 3, 4)
+        fast = float(rel_error(X, state.A, state.R))
+        direct = direct_rel_error(np.asarray(X), np.asarray(state.A),
+                                  np.asarray(state.R))
+        assert abs(fast - direct) < 1e-4
+
+
+class TestRescalDriver:
+    def test_recovers_exact_lowrank(self, key):
+        X, _, _ = make_lowrank(key, n=24, m=4, k=3)
+        _, err = rescal(X, 3, key=key, iters=400)
+        assert float(err) < 0.05
+
+    def test_normalize_preserves_reconstruction(self, key):
+        X, _, _ = make_lowrank(key, n=16, m=3, k=3)
+        state, _ = rescal(X, 3, key=key, iters=50, normalize_result=False)
+        rec_before = reconstruct(state.A, state.R)
+        state_n = normalize(state)
+        rec_after = reconstruct(state_n.A, state_n.R)
+        np.testing.assert_allclose(rec_before, rec_after, rtol=2e-4,
+                                   atol=1e-5)
+        norms = jnp.linalg.norm(state_n.A, axis=0)
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-4)
+
+    def test_nndsvd_init_valid_and_converges(self, key):
+        X, _, _ = make_lowrank(key, n=32, m=4, k=4)
+        A0 = nndsvd_init_A(X, 4)
+        assert (np.asarray(A0) >= 0).all()           # valid MU start
+        st_r = init_factors(key, 32, 4, 4)
+        st_n = RescalState(A=A0.astype(X.dtype), R=st_r.R, step=st_r.step)
+        _, err_nnd = rescal(X, 4, iters=150, init=st_n)
+        assert float(err_nnd) < 0.1                  # converges from NNDSVD
+
+    def test_randomized_eigh_matches_exact(self, key):
+        from repro.core.nndsvd import (nndsvd_init_A_randomized,
+                                       symmetric_surrogate)
+        X, _, _ = make_lowrank(key, n=48, m=3, k=3)
+        C = symmetric_surrogate(X)
+        w_exact, V = jnp.linalg.eigh(C)
+        top = jnp.sort(jnp.abs(w_exact))[-3:]
+        from repro.core.nndsvd import randomized_eigh
+        w_rand, _ = randomized_eigh(lambda Y: C @ Y, 48, 3,
+                                    jax.random.PRNGKey(1), iters=16)
+        np.testing.assert_allclose(np.sort(np.abs(w_rand)), np.asarray(top),
+                                   rtol=1e-3)
+
+    def test_regress_R_fits_given_true_A(self, key):
+        X, A, R = make_lowrank(key, n=20, m=3, k=3)
+        R_fit = regress_R(X, A, iters=400)
+        err = direct_rel_error(np.asarray(X), np.asarray(A),
+                               np.asarray(R_fit))
+        assert err < 0.02

@@ -1,0 +1,146 @@
+"""Sharding-rule unit tests (no devices needed — specs are pure data)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AxisType, Mesh, PartitionSpec as P
+
+from repro.dist import sharding as shd
+
+
+class FakeMesh:
+    """Just enough Mesh surface for logical_spec (names + sizes)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+MESH = FakeMesh(data=4, model=4)
+POD = FakeMesh(pod=2, data=4, model=4)
+
+
+class TestLogicalSpec:
+    def test_batch_maps_to_data_axes(self):
+        spec = shd.logical_spec(MESH, (8, 16), (shd.BATCH, None))
+        assert spec == P("data", None)
+
+    def test_batch_includes_pod(self):
+        spec = shd.logical_spec(POD, (8, 16), (shd.BATCH, None))
+        assert spec == P(("pod", "data"), None)
+
+    def test_non_divisible_drops(self):
+        spec = shd.logical_spec(MESH, (6, 16), (shd.BATCH, shd.MODEL))
+        assert spec == P(None, "model")
+
+    def test_axis_used_once_first_wins(self):
+        # EXPERT divisible -> takes "model"; MODEL falls back to None
+        spec = shd.logical_spec(MESH, (8, 10, 12),
+                                (shd.EXPERT, None, shd.MODEL))
+        assert spec == P("model", None, None)
+
+    def test_axis_fallback_when_first_fails(self):
+        # EXPERT 10 % 4 != 0 -> the ff dim takes "model" instead
+        spec = shd.logical_spec(MESH, (10, 8, 12),
+                                (shd.EXPERT, None, shd.MODEL))
+        assert spec == P(None, None, "model")
+
+
+class TestParamSpecs:
+    def _specs(self, params, mesh=MESH):
+        return shd.param_specs(mesh, params)
+
+    def test_column_and_row_parallel(self):
+        params = {"attn": {"wq": jnp.zeros((16, 32)),
+                           "wo": jnp.zeros((32, 16))}}
+        s = self._specs(params)
+        assert s["attn"]["wq"] == P(None, "model")
+        assert s["attn"]["wo"] == P("model", None)
+
+    def test_vocab_parallel_embedding(self):
+        s = self._specs({"embed": {"table": jnp.zeros((512, 16))}})
+        assert s["embed"]["table"] == P("model", None)
+
+    def test_expert_stack_divisible(self):
+        params = {"moe": {"wi": jnp.zeros((4, 16, 32)),
+                          "wo": jnp.zeros((4, 32, 16))}}
+        s = self._specs(params)
+        assert s["moe"]["wi"] == P("model", None, None)
+        assert s["moe"]["wo"] == P("model", None, None)
+
+    def test_expert_stack_fallback_to_ff(self):
+        # 10 experts on a 4-way axis -> shard the ff dim instead
+        params = {"moe": {"wi": jnp.zeros((10, 16, 32)),
+                          "wo": jnp.zeros((10, 32, 16))}}
+        s = self._specs(params)
+        assert s["moe"]["wi"] == P(None, None, "model")
+        assert s["moe"]["wo"] == P(None, "model", None)
+
+    def test_layer_stacked_leaves_right_aligned(self):
+        params = {"layers": {"mlp": {"wi": jnp.zeros((8, 16, 32))}}}
+        s = self._specs(params)
+        assert s["layers"]["mlp"]["wi"] == P(None, None, "model")
+
+    def test_norms_replicated(self):
+        s = self._specs({"ln1": jnp.zeros((16,))})
+        assert s["ln1"] == P(None)
+
+
+class TestOptStateSpecs:
+    def test_zero1_spreads_over_data(self):
+        params = {"mlp": {"wi": jnp.zeros((16, 32))}}
+        s = shd.opt_state_specs(MESH, params)
+        assert s["mlp"]["wi"] == P("data", "model")
+
+    def test_skips_non_divisible(self):
+        params = {"w": jnp.zeros((6, 32))}   # 6 % 4 != 0
+        s = shd.opt_state_specs(MESH, params)
+        assert s["w"] == P(None, "data")
+
+
+class TestCacheSpecs:
+    def test_kv_cache_seq_sharded(self):
+        cache = {"k": jax.ShapeDtypeStruct((8, 16, 64, 5, 32), jnp.bfloat16)}
+        s = shd.cache_specs(MESH, cache)
+        assert s["k"] == P(None, "data", "model", None, None)
+
+    def test_ssm_state_heads_else_headdim(self):
+        c1 = {"ssm": jax.ShapeDtypeStruct((8, 16, 64, 8, 16), jnp.float32)}
+        assert shd.cache_specs(MESH, c1)["ssm"] == \
+            P(None, "data", "model", None, None)
+        c2 = {"ssm": jax.ShapeDtypeStruct((8, 16, 50, 8, 16), jnp.float32)}
+        assert shd.cache_specs(MESH, c2)["ssm"] == \
+            P(None, "data", None, "model", None)
+
+
+class TestConstrainNoMesh:
+    def test_noop_without_mesh(self, key):
+        x = jax.random.normal(key, (4, 8))
+        assert shd.constrain(x, shd.BATCH, shd.MODEL) is x
+
+
+class TestMicrobatching:
+    def test_grad_accumulation_matches_full_batch(self, key):
+        from repro.configs import REDUCED_ARCHS
+        from repro.data import TokenStreamConfig, batch_at
+        from repro.optim import AdamW
+        from repro.train import init_state, make_train_step
+        cfg = REDUCED_ARCHS["llama3.2-1b"]
+        opt = AdamW(lr=1e-3)
+        ds = TokenStreamConfig(vocab=cfg.vocab, batch=4, seq=32)
+        b = batch_at(ds, 0)
+        s1 = init_state(jax.random.PRNGKey(0), cfg, opt)
+        s2 = init_state(jax.random.PRNGKey(0), cfg, opt)
+        f1 = make_train_step(cfg, None, optimizer=opt, remat=False,
+                             moe_impl="dense", donate=False)
+        f2 = make_train_step(cfg, None, optimizer=opt, remat=False,
+                             moe_impl="dense", donate=False, microbatches=2)
+        s1, m1 = f1(s1, b)
+        s2, m2 = f2(s2, b)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=1e-5)
+        for a, c in zip(jax.tree_util.tree_leaves(s1.params),
+                        jax.tree_util.tree_leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(c, np.float32),
+                                       rtol=1e-3, atol=1e-5)
