@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# CI entry point: dev deps -> tier-1 verify -> fast test tier.
+#
+# Tiers:
+#   tier-1 (verify)  — the repo's canonical check: full pytest run
+#                      (collection must be clean; slow tests included only
+#                      when CI_FULL=1).
+#   fast             — `-m "not slow"` under 8 fake host devices, so the
+#                      sharding/spec paths compile against a real
+#                      multi-device backend without TPU hardware.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install --quiet -r requirements-dev.txt
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier 1: collection must be clean =="
+python -m pytest --collect-only -q >/dev/null
+
+if [[ "${CI_FULL:-0}" == "1" ]]; then
+    echo "== full suite (slow tests included) =="
+    python -m pytest -q
+else
+    echo "== fast tier: -m 'not slow' on 8 fake devices =="
+    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+        python -m pytest -q -m "not slow"
+fi

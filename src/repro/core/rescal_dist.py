@@ -1,467 +1,35 @@
-"""Distributed non-negative RESCAL on a 2D device grid (paper Alg. 2 + 3).
+"""Backward-compatibility shim — the distributed RESCAL implementation
+moved to the distribution subsystem (``repro.dist``):
 
-Data layout (paper Fig. 3), mesh axes ("data", "model") = (grid row i, col j):
+  * step factories / config / driver  ->  repro.dist.engine
+  * collectives + factor specs        ->  repro.dist.sharding
 
-  X  : (m, n, n)    sharded P(None, "data", "model")   -> X^(i,j) blocks
-  A  : (n, k)       sharded P("data", None)            -> A^(i) row blocks,
-                                                          replicated over j
-  R  : (m, k, k)    replicated                          (paper: "R is same
-                                                          for all ranks")
-
-The paper's MPI constructs map 1:1 onto shard_map collectives:
-
-  distMM(..., rowComm/colComm)  ->  jax.lax.psum over "model" / "data"
-  broadcast from diagonal ranks ->  masked psum (contribution gated on
-                                    axis_index("data") == axis_index("model"))
-
-A *square* grid is required for the diagonal trick (paper §6.1.3 enforces
-p_r = p_c for the same reason).
-
-Two schedules (see rescal.py):
-  batched — all m relation slices per collective: O(1) psums / MU iteration.
-  sliced  — per-slice collectives inside a fori_loop: the paper's schedule,
-            O(m) psums / MU iteration.  Baseline for the roofline delta.
-
-`comm_dtype` optionally down-casts collective payloads (bf16 on TPU) with
-f32 local accumulation — beyond-paper optimization #4.
-
-The GSPMD path (`make_gspmd_step`) jits the *local math from rescal.py* on
-global arrays with sharding constraints only, letting XLA derive the
-collective schedule; the roofline harness compares it against the explicit
-schedule above.
+This module keeps the historical ``repro.core.rescal_dist`` import
+surface working; new code should import from ``repro.dist`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
-
-from .rescal import EPS_DEFAULT, RescalState
-
-ROW_AXIS = "data"    # grid row index i (shards rows of X and of A)
-COL_AXIS = "model"   # grid col index j (shards cols of X)
-
-
-# ---------------------------------------------------------------------------
-# Collective building blocks (the paper's Alg. 2 + diagonal broadcasts)
-# ---------------------------------------------------------------------------
-
-def _maybe_cast(x, dtype):
-    return x if dtype is None else x.astype(dtype)
-
-
-def psum_cast(x, axis, comm_dtype=None):
-    """all_reduce with optional payload down-cast (restores input dtype)."""
-    if comm_dtype is None:
-        return jax.lax.psum(x, axis)
-    return jax.lax.psum(x.astype(comm_dtype), axis).astype(x.dtype)
-
-
-def diag_broadcast_row_to_col(Ai, comm_dtype=None):
-    """A^(j) <- broadcast of A^(i) from diagonal ranks "along columns".
-
-    Device (i, j) needs row-block j of A; the diagonal device (j, j) holds it
-    as its A^(i).  SPMD equivalent: every device contributes A^(i) iff it is
-    diagonal, then psum over the row axis delivers block j to column j.
-    (Paper Alg. 3 line 23.)
-    """
-    i = jax.lax.axis_index(ROW_AXIS)
-    j = jax.lax.axis_index(COL_AXIS)
-    contrib = jnp.where(i == j, Ai, jnp.zeros_like(Ai))
-    return psum_cast(contrib, ROW_AXIS, comm_dtype)
-
-
-def diag_broadcast_col_to_row(Zj, comm_dtype=None):
-    """Inverse redistribution: a column-indexed block result Z^(j) (identical
-    within column j) -> row-indexed Z^(i).  (Paper Alg. 3 line 13.)"""
-    i = jax.lax.axis_index(ROW_AXIS)
-    j = jax.lax.axis_index(COL_AXIS)
-    contrib = jnp.where(i == j, Zj, jnp.zeros_like(Zj))
-    return psum_cast(contrib, COL_AXIS, comm_dtype)
-
-
-# ---------------------------------------------------------------------------
-# Local (per-shard) MU iterations with explicit collectives
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class DistRescalConfig:
-    schedule: str = "batched"        # "batched" | "sliced"
-    eps: float = EPS_DEFAULT
-    comm_dtype: str | None = None    # e.g. "bfloat16"
-    use_fused_kernel: bool = False   # kernels/fused_bilinear on TPU
-
-    @property
-    def comm_jnp_dtype(self):
-        return None if self.comm_dtype is None else jnp.dtype(self.comm_dtype)
-
-
-def _local_products(Xl, Ai, Aj, cd):
-    """XA (row-indexed) and the Gram matrix, shared by both updates.
-
-    XA_i = sum_j X^(i,j) A^(j): local matmul + all_reduce over columns
-    (paper lines 3, 5).  Returns XA: (m, nr, k), G: (k, k).
-    """
-    G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
-    XA = psum_cast(jnp.einsum("mij,jk->mik", Xl, Aj), COL_AXIS, cd)  # line 5
-    return XA, G
-
-
-def _mu_iter_batched(Xl, Ai, R, cfg: DistRescalConfig):
-    """One MU iteration, all m slices per collective."""
-    cd = cfg.comm_jnp_dtype
-    eps = cfg.eps
-    Aj = diag_broadcast_row_to_col(Ai, cd)
-    XA, G = _local_products(Xl, Ai, Aj, cd)
-
-    # ---- R update (paper lines 6-9), batched over m ----
-    ATXA = psum_cast(jnp.einsum("ia,mib->mab", Ai, XA), ROW_AXIS, cd)
-    R = R * ATXA / (jnp.einsum("ab,mbc,cd->mad", G, R, G) + eps)
-
-    # ---- A update (paper lines 10-21), batched over m ----
-    XART = jnp.einsum("mia,msa->is", XA, R)                      # line 10
-    AR = jnp.einsum("ia,mab->mib", Ai, R)                        # line 11
-    # NOTE "mij,mik->mjk" + sum, NOT "mij,mik->jk": the joint (m, i)
-    # contraction forces XLA to materialize a layout copy of the full X
-    # block (verified: temp == bytes(X) in memory_analysis); keeping m as a
-    # batch dim costs an (m, k, n_loc) temp instead.  EXPERIMENTS.md §Perf.
-    XTAR_j = psum_cast(jnp.einsum("mij,mik->mjk", Xl, AR).sum(0),
-                       ROW_AXIS, cd)
-    XTAR = diag_broadcast_col_to_row(XTAR_j, cd)                 # lines 12-13
-    num = XART + XTAR                                            # line 14
-    S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
-         + jnp.einsum("mba,bc,mcd->ad", R, G, R))                # lines 15-19
-    Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return Ai, R
-
-
-def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
-    """One MU iteration, explicit loop over m slices — the paper's exact
-    schedule with per-slice collectives (O(m) psums)."""
-    cd = cfg.comm_jnp_dtype
-    eps = cfg.eps
-    k = Ai.shape[1]
-    m = Xl.shape[0]
-    Aj = diag_broadcast_row_to_col(Ai, cd)
-    G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
-
-    def body(t, carry):
-        R_acc, num, S = carry
-        Xt = jax.lax.dynamic_index_in_dim(Xl, t, 0, keepdims=False)
-        Rt = jax.lax.dynamic_index_in_dim(R_acc, t, 0, keepdims=False)
-        XA = psum_cast(Xt @ Aj, COL_AXIS, cd)                    # line 5
-        ATXA = psum_cast(Ai.T @ XA, ROW_AXIS, cd)                # line 6
-        Rt = Rt * ATXA / (G @ Rt @ G + eps)                      # lines 7-9
-        R_new = jax.lax.dynamic_update_index_in_dim(R_acc, Rt, t, 0)
-        XART = XA @ Rt.T                                         # line 10
-        AR = Ai @ Rt                                             # line 11
-        XTAR_j = psum_cast(Xt.T @ AR, ROW_AXIS, cd)              # line 12
-        XTAR = diag_broadcast_col_to_row(XTAR_j, cd)             # line 13
-        num = num + XART + XTAR                                  # line 14
-        S = S + (Rt @ G @ Rt.T) + (Rt.T @ G @ Rt)                # lines 15-20
-        return R_new, num, S
-
-    R, num, S = jax.lax.fori_loop(
-        0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Xl.dtype)))
-    Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return Ai, R
-
-
-_DIST_ITERS = {"batched": _mu_iter_batched, "sliced": _mu_iter_sliced}
-
-
-def _local_rel_error(Xl, Ai, R, cd=None):
-    """Distributed relative error via the small-intermediates identity
-    (see rescal.rel_error); only k-sized payloads cross the wire."""
-    Aj = diag_broadcast_row_to_col(Ai, cd)
-    XA, G = _local_products(Xl, Ai, Aj, cd)
-    ATXA = psum_cast(jnp.einsum("ia,mib->mab", Ai, XA), ROW_AXIS, cd)
-    x2 = jax.lax.psum(jax.lax.psum(jnp.vdot(Xl, Xl), ROW_AXIS), COL_AXIS)
-    cross = jnp.vdot(ATXA, R)
-    fit2 = jnp.einsum("ab,mac,cd,mbd->", G, R, G, R)
-    err2 = jnp.maximum(x2 - 2.0 * cross + fit2, 0.0)
-    return jnp.sqrt(err2) / jnp.sqrt(x2)
-
-
-# ---------------------------------------------------------------------------
-# shard_map wrappers over global arrays
-# ---------------------------------------------------------------------------
-
-def _specs(mesh: Mesh, pod_axis: str | None):
-    row = (pod_axis, ROW_AXIS) if pod_axis else ROW_AXIS
-    x_spec = P(None, row, COL_AXIS)
-    a_spec = P(row, None)
-    r_spec = P()
-    return x_spec, a_spec, r_spec
-
-
-def make_dist_step(mesh: Mesh, cfg: DistRescalConfig, iters: int = 1
-                   ) -> Callable:
-    """jit'd (X, A, R) -> (A, R) running `iters` MU iterations with the
-    explicit paper schedule.  X: (m, n, n) global, A: (n, k), R: (m, k, k)."""
-    x_spec, a_spec, r_spec = _specs(mesh, None)
-    it = _DIST_ITERS[cfg.schedule]
-
-    def local_step(Xl, Ai, R):
-        def body(_, c):
-            return it(Xl, c[0], c[1], cfg)
-        Ai, R = jax.lax.fori_loop(0, iters, body, (Ai, R))
-        return Ai, R
-
-    sharded = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(x_spec, a_spec, r_spec),
-        out_specs=(a_spec, r_spec),
-        check_rep=False)
-    return jax.jit(sharded)
-
-
-def make_dist_error(mesh: Mesh) -> Callable:
-    x_spec, a_spec, r_spec = _specs(mesh, None)
-    sharded = shard_map(
-        lambda Xl, Ai, R: _local_rel_error(Xl, Ai, R), mesh=mesh,
-        in_specs=(x_spec, a_spec, r_spec), out_specs=P(),
-        check_rep=False)
-    return jax.jit(sharded)
-
-
-def make_ensemble_step(mesh: Mesh, cfg: DistRescalConfig, iters: int = 1
-                       ) -> Callable:
-    """Multi-pod RESCALk inner loop: r perturbation members vmapped, member
-    axis sharded over "pod".  X is replicated across pods (each pod owns its
-    members' factorizations; zero cross-pod traffic during MU — DESIGN.md §4).
-
-    Signature: (X (m,n,n), A_ens (r,n,k), R_ens (r,m,k,k)) -> updated ens.
-    """
-    it = _DIST_ITERS[cfg.schedule]
-    x_spec = P(None, ROW_AXIS, COL_AXIS)
-    a_spec = P("pod", ROW_AXIS, None)
-    r_spec = P("pod", None, None, None)
-
-    def local_step(Xl, A_ens, R_ens):
-        def one_member(Ai, R):
-            def body(_, c):
-                return it(Xl, c[0], c[1], cfg)
-            return jax.lax.fori_loop(0, iters, body, (Ai, R))
-        return jax.vmap(one_member)(A_ens, R_ens)
-
-    sharded = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(x_spec, a_spec, r_spec),
-        out_specs=(a_spec, r_spec),
-        check_rep=False)
-    return jax.jit(sharded)
-
-
-# ---------------------------------------------------------------------------
-# Sparse (BCSR) distributed RESCAL — the exabyte-tier path
-# ---------------------------------------------------------------------------
-
-def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
-    """One MU iteration where each device's X block is a local BCSR tensor
-    (core/sparse.py).  Identical collective schedule to the dense batched
-    iteration — the paper's observation that 'communication requirements
-    remain unchanged for sparse data' (§4.1) holds by construction."""
-    from .sparse import spmm, spmm_t
-    cd = cfg.comm_jnp_dtype
-    eps = cfg.eps
-    Aj = diag_broadcast_row_to_col(Ai, cd)
-    G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
-    XA = psum_cast(spmm(spl, Aj), COL_AXIS, cd)                  # line 5
-
-    ATXA = psum_cast(jnp.einsum("ia,mib->mab", Ai, XA), ROW_AXIS, cd)
-    R = R * ATXA / (jnp.einsum("ab,mbc,cd->mad", G, R, G) + eps)
-
-    XART = jnp.einsum("mia,msa->is", XA, R)
-    AR = jnp.einsum("ia,mab->mib", Ai, R)                        # (m, nr, k)
-    XTAR_m = spmm_t(spl, AR)                                     # (m, nr, k)
-    XTAR_j = psum_cast(XTAR_m.sum(axis=0), ROW_AXIS, cd)
-    XTAR = diag_broadcast_col_to_row(XTAR_j, cd)
-    num = XART + XTAR
-    S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
-         + jnp.einsum("mba,bc,mcd->ad", R, G, R))
-    Ai = Ai * num / (Ai @ S + eps)
-    return Ai, R
-
-
-def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
-    """Sparse MU iteration with the paper's per-slice schedule.  At
-    exabyte-tier n the batched schedule's (m, n/√p, k) dense intermediates
-    (XA, AR, XTA) are m x larger than one A shard and blow the 16 GiB HBM
-    budget; slicing bounds them to one slice's worth — the memory/collective
-    trade the paper's Alg. 3 makes implicitly (EXPERIMENTS.md §Perf)."""
-    from .sparse import BCSR, spmm, spmm_t
-    cd = cfg.comm_jnp_dtype
-    eps = cfg.eps
-    k = Ai.shape[1]
-    m = spl.data.shape[0]
-    Aj = diag_broadcast_row_to_col(Ai, cd)
-    G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)
-
-    def body(t, carry):
-        R_acc, num, S = carry
-        data_t = jax.lax.dynamic_index_in_dim(spl.data, t, 0, keepdims=True)
-        sp_t = BCSR(data=data_t, block_rows=spl.block_rows,
-                    block_cols=spl.block_cols, n=spl.n)
-        Rt = jax.lax.dynamic_index_in_dim(R_acc, t, 0, keepdims=False)
-        XA = psum_cast(spmm(sp_t, Aj)[0], COL_AXIS, cd)
-        ATXA = psum_cast(Ai.T @ XA, ROW_AXIS, cd)
-        Rt = Rt * ATXA / (G @ Rt @ G + eps)
-        R_new = jax.lax.dynamic_update_index_in_dim(R_acc, Rt, t, 0)
-        XART = XA @ Rt.T
-        AR = Ai @ Rt
-        XTAR_j = psum_cast(spmm_t(sp_t, AR[None])[0], ROW_AXIS, cd)
-        XTAR = diag_broadcast_col_to_row(XTAR_j, cd)
-        num = num + XART + XTAR
-        S = S + (Rt @ G @ Rt.T) + (Rt.T @ G @ Rt)
-        return R_new, num, S
-
-    R, num, S = jax.lax.fori_loop(
-        0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Ai.dtype)))
-    Ai = Ai * num / (Ai @ S + eps)
-    return Ai, R
-
-
-_SPARSE_ITERS = {"batched": _mu_iter_batched_sparse,
-                 "sliced": _mu_iter_sliced_sparse}
-
-
-def make_dist_step_sparse(mesh: Mesh, cfg: DistRescalConfig, *,
-                          n: int, iters: int = 1) -> Callable:
-    """jit'd sparse MU step.  Global BCSR layout (gr = gc = grid side):
-
-      data : (gr, gc, m, nnzb_loc, bs, bs)  P("data","model",...)
-      rows : (gr, gc, nnzb_loc)             block-row ids *local* to the
-      cols : (gr, gc, nnzb_loc)             device's (n/gr x n/gc) tile
-      A    : (n, k)                         P("data", None)
-      R    : (m, k, k)                      replicated
-
-    Synthetic balanced sparsity (equal nnzb per device) models the paper's
-    uniform random tensors; real data would deficit-round-robin blocks.
-    """
-    from .sparse import BCSR
-    gr = mesh.shape[ROW_AXIS]
-    n_loc = n // gr
-    x_spec = P(ROW_AXIS, COL_AXIS, None, None, None, None)
-    i_spec = P(ROW_AXIS, COL_AXIS, None)
-    a_spec = P(ROW_AXIS, None)
-    r_spec = P()
-
-    it = _SPARSE_ITERS[cfg.schedule]
-
-    def local_step(data, rows, cols, Ai, R):
-        spl = BCSR(data=data[0, 0], block_rows=rows[0, 0],
-                   block_cols=cols[0, 0], n=n_loc)
-        def body(_, c):
-            return it(spl, c[0], c[1], cfg)
-        Ai, R = jax.lax.fori_loop(0, iters, body, (Ai, R))
-        return Ai, R
-
-    sharded = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(x_spec, i_spec, i_spec, a_spec, r_spec),
-        out_specs=(a_spec, r_spec),
-        check_rep=False)
-    return jax.jit(sharded)
-
-
-def make_ensemble_step_sparse(mesh: Mesh, cfg: DistRescalConfig, *,
-                              n: int, iters: int = 1) -> Callable:
-    """Pod-parallel sparse ensemble: BCSR X shared (replicated over "pod"),
-    member factorizations sharded over the pod axis (cf. make_ensemble_step)."""
-    from .sparse import BCSR
-    gr = mesh.shape[ROW_AXIS]
-    n_loc = n // gr
-    x_spec = P(ROW_AXIS, COL_AXIS, None, None, None, None)
-    i_spec = P(ROW_AXIS, COL_AXIS, None)
-    a_spec = P("pod", ROW_AXIS, None)
-    r_spec = P("pod", None, None, None)
-
-    it = _SPARSE_ITERS[cfg.schedule]
-
-    def local_step(data, rows, cols, A_ens, R_ens):
-        spl = BCSR(data=data[0, 0], block_rows=rows[0, 0],
-                   block_cols=cols[0, 0], n=n_loc)
-
-        def one_member(Ai, R):
-            def body(_, c):
-                return it(spl, c[0], c[1], cfg)
-            return jax.lax.fori_loop(0, iters, body, (Ai, R))
-
-        return jax.vmap(one_member)(A_ens, R_ens)
-
-    sharded = shard_map(
-        local_step, mesh=mesh,
-        in_specs=(x_spec, i_spec, i_spec, a_spec, r_spec),
-        out_specs=(a_spec, r_spec),
-        check_rep=False)
-    return jax.jit(sharded)
-
-
-# ---------------------------------------------------------------------------
-# GSPMD alternative path (XLA-derived collectives)
-# ---------------------------------------------------------------------------
-
-def make_gspmd_step(mesh: Mesh, cfg: DistRescalConfig, iters: int = 1
-                    ) -> Callable:
-    """Same math via sharding constraints only; XLA chooses the collectives.
-    Used by the roofline harness to compare schedules."""
-    from .rescal import MU_SCHEDULES
-    x_spec, a_spec, r_spec = _specs(mesh, None)
-    step = MU_SCHEDULES[cfg.schedule]
-
-    def global_step(X, A, R):
-        X = jax.lax.with_sharding_constraint(X, NamedSharding(mesh, x_spec))
-        st = RescalState(A=A, R=R, step=jnp.zeros((), jnp.int32))
-        def body(_, s):
-            s2 = step(X, s, cfg.eps)
-            return RescalState(
-                A=jax.lax.with_sharding_constraint(
-                    s2.A, NamedSharding(mesh, a_spec)),
-                R=s2.R, step=s2.step)
-        st = jax.lax.fori_loop(0, iters, body, st)
-        return st.A, st.R
-
-    return jax.jit(
-        global_step,
-        in_shardings=(NamedSharding(mesh, x_spec), NamedSharding(mesh, a_spec),
-                      NamedSharding(mesh, r_spec)),
-        out_shardings=(NamedSharding(mesh, a_spec), NamedSharding(mesh, r_spec)))
-
-
-# ---------------------------------------------------------------------------
-# Driver
-# ---------------------------------------------------------------------------
-
-def dist_rescal(X: jax.Array, k: int, mesh: Mesh, *,
-                key: jax.Array | None = None, iters: int = 200,
-                cfg: DistRescalConfig | None = None,
-                block_iters: int = 10):
-    """Distributed factorization driver.  Places X / factors on the mesh and
-    runs `iters` MU iterations in jitted blocks of `block_iters`."""
-    cfg = cfg or DistRescalConfig()
-    m, n, _ = X.shape
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    x_spec, a_spec, r_spec = _specs(mesh, None)
-    X = jax.device_put(X, NamedSharding(mesh, x_spec))
-    ka, kr = jax.random.split(key)
-    A = jax.device_put(
-        jax.random.uniform(ka, (n, k), X.dtype, 0.05, 1.0),
-        NamedSharding(mesh, a_spec))
-    R = jax.device_put(
-        jax.random.uniform(kr, (m, k, k), X.dtype, 0.05, 1.0),
-        NamedSharding(mesh, r_spec))
-    step = make_dist_step(mesh, cfg, iters=block_iters)
-    err_fn = make_dist_error(mesh)
-    n_blocks, rem = divmod(iters, block_iters)
-    for _ in range(n_blocks):
-        A, R = step(X, A, R)
-    if rem:
-        A, R = make_dist_step(mesh, cfg, iters=rem)(X, A, R)
-    return RescalState(A=A, R=R, step=jnp.asarray(iters)), err_fn(X, A, R)
+from repro.dist.engine import (DistRescalConfig, dist_rescal,
+                               make_dist_error, make_dist_step,
+                               make_dist_step_sparse, make_ensemble_step,
+                               make_ensemble_step_sparse, make_gspmd_step,
+                               make_mu_step)
+from repro.dist.sharding import (COL_AXIS, ROW_AXIS,
+                                 diag_broadcast_col_to_row,
+                                 diag_broadcast_row_to_col, factor_specs,
+                                 psum_cast)
+
+__all__ = [
+    "COL_AXIS", "ROW_AXIS", "DistRescalConfig", "diag_broadcast_col_to_row",
+    "diag_broadcast_row_to_col", "dist_rescal", "factor_specs",
+    "make_dist_error", "make_dist_step", "make_dist_step_sparse",
+    "make_ensemble_step", "make_ensemble_step_sparse", "make_gspmd_step",
+    "make_mu_step", "psum_cast",
+]
+
+
+def _specs(mesh, pod_axis):
+    """Historical helper signature (mesh was unused); see
+    repro.dist.sharding.factor_specs."""
+    del mesh
+    return factor_specs(pod_axis)

@@ -1,0 +1,114 @@
+"""Version-tolerance layer for the JAX APIs whose surface moved under us.
+
+This module is the ONLY place allowed to feature-detect JAX versions; the
+rest of the codebase imports the tolerant wrappers and stays version-blind.
+Policy (recorded in CHANGES.md): every raw use of an API that exists in
+some-but-not-all supported JAX versions must be routed through here, with
+the newest spelling tried first and a semantically identical fallback for
+older releases.  Currently shimmed:
+
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)`` —
+    axis types landed after 0.4.x; ``make_mesh`` here degrades to the
+    positional form (all axes default to auto sharding-propagation, which
+    is exactly what ``AxisType.Auto`` requests).
+  * ``pltpu.CompilerParams`` — renamed from ``TPUCompilerParams``;
+    ``tpu_compiler_params`` returns whichever class exists (or ``None``
+    when running a JAX build without the TPU pallas backend).
+  * ``compiled.cost_analysis()`` — returns a dict on newer JAX, a
+    one-dict-per-program list on older; ``cost_analysis_dict`` normalizes
+    both to a flat {metric: value} dict.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.sharding
+
+__all__ = [
+    "AXIS_TYPE",
+    "HAS_AXIS_TYPE",
+    "axis_types_kwargs",
+    "cost_analysis_dict",
+    "make_mesh",
+    "tpu_compiler_params",
+]
+
+# jax.sharding.AxisType (Auto/Explicit/Manual) does not exist on 0.4.x.
+AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+HAS_AXIS_TYPE = AXIS_TYPE is not None
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (AxisType.Auto,) * n}`` when supported, else ``{}``.
+
+    Auto is the pre-AxisType behaviour (GSPMD propagation decides), so
+    omitting the kwarg on old JAX is semantically identical.
+    """
+    if not HAS_AXIS_TYPE:
+        return {}
+    return {"axis_types": (AXIS_TYPE.Auto,) * n_axes}
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices: Sequence | None = None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that works with or without AxisType support.
+
+    All mesh construction in this repo goes through here (or through
+    ``launch.mesh``, which delegates here) — no raw ``AxisType`` imports
+    outside this module.
+    """
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPE:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 **axis_types_kwargs(len(axis_names)),
+                                 **kwargs)
+        except TypeError:
+            # AxisType exists but this make_mesh predates the kwarg.
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def tpu_compiler_params(**kwargs):
+    """Build pallas-TPU compiler params under either class name.
+
+    Accepts the ``CompilerParams``/``TPUCompilerParams`` fields
+    (``dimension_semantics=...`` et al.); returns ``None`` when no TPU
+    pallas backend is importable, which ``pl.pallas_call`` accepts.
+    """
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:                                   # pragma: no cover
+        return None
+    cls = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cls is None:                                       # pragma: no cover
+        return None
+    return cls(**kwargs)
+
+
+def cost_analysis_dict(analysis) -> dict[str, float]:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Newer JAX returns one flat dict; older returns a list with one dict
+    per program (summed here); some backends return ``None``.  Indexing
+    the raw result with a string is exactly the version-compat bug class
+    this repo bans — call this instead.
+    """
+    if analysis is None:
+        return {}
+    if isinstance(analysis, dict):
+        return dict(analysis)
+    if isinstance(analysis, (list, tuple)):
+        out: dict[str, float] = {}
+        for prog in analysis:
+            if not prog:
+                continue
+            for key, val in prog.items():
+                if isinstance(val, (int, float)):
+                    out[key] = out.get(key, 0.0) + float(val)
+        return out
+    return {}

@@ -1,0 +1,103 @@
+"""Elasticity and fault-tolerance primitives for long-running jobs.
+
+Pure-host logic (no jax): straggler detection for the training loop,
+pod/member planning for the RESCALk ensemble, square-grid sizing for the
+RESCAL mesh, and a replay-from-checkpoint retry driver.  The distributed
+restart contract itself (deterministic data + global-layout checkpoints)
+lives in train/loop.py and ckpt/; these helpers decide *when* and *where*
+to restart.
+"""
+from __future__ import annotations
+
+import math
+import statistics
+from typing import Callable, Iterable, Sequence
+
+
+class StragglerMonitor:
+    """Flags step times that exceed ``factor`` x the running median.
+
+    The paper-scale runs are bulk-synchronous (every MU iteration is a
+    barrier), so one slow rank stretches every step: wall-clock outliers
+    at the host are a sufficient straggler signal.  Flagged steps are NOT
+    folded into the baseline, so a persistent straggler keeps flagging.
+    """
+
+    def __init__(self, factor: float = 2.5, window: int = 128):
+        self.factor = factor
+        self.window = window
+        self.times: list[float] = []
+        self.flagged: list[tuple[int, float]] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Record one step's duration; True iff it is a straggler."""
+        if not self.times:                 # first step never flags (warmup)
+            self.times.append(seconds)
+            return False
+        baseline = statistics.median(self.times)
+        if seconds > self.factor * baseline:
+            self.flagged.append((step, seconds))
+            return True
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        return False
+
+
+def choose_grid(n_devices: int) -> int:
+    """Largest square-grid side p with p*p <= n_devices (the diagonal
+    broadcast of Alg. 3 requires p_r == p_c, paper §6.1.3)."""
+    return math.isqrt(n_devices)
+
+
+def ensemble_plan(r: int, n_pods: int, spares_per_pod: int = 0
+                  ) -> list[list[int]]:
+    """Assign the r perturbation members of RESCALk to pods.
+
+    Members are split contiguously (pod q gets ceil/floor(r / n_pods));
+    each pod additionally carries `spares_per_pod` spare slots with
+    synthetic ids >= r, used to re-home members from a failed pod without
+    recomputing the healthy ones.  Every real member (id < r) appears in
+    exactly one pod.
+    """
+    if n_pods <= 0:
+        raise ValueError("n_pods must be positive")
+    plan: list[list[int]] = []
+    spare_id = r
+    base, extra = divmod(r, n_pods)
+    start = 0
+    for q in range(n_pods):
+        count = base + (1 if q < extra else 0)
+        members = list(range(start, start + count))
+        start += count
+        for _ in range(spares_per_pod):
+            members.append(spare_id)
+            spare_id += 1
+        plan.append(members)
+    return plan
+
+
+def retry_loop(run: Callable[[int], None], steps: Iterable[int], *,
+               restore: Callable[[], int], max_restarts: int = 3) -> None:
+    """Drive ``run(step)`` over `steps`, replaying from ``restore()`` on
+    failure.
+
+    `restore()` returns the step to resume from (typically the last
+    checkpointed step); steps at or after it are re-executed — callers
+    must make ``run`` idempotent under replay (the loop.py contract).
+    """
+    items: Sequence[int] = list(steps)
+    restarts = 0
+    i = 0
+    while i < len(items):
+        try:
+            run(items[i])
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            resume = restore()
+            i = next((j for j, s in enumerate(items) if s >= resume),
+                     len(items))
+            continue
+        i += 1

@@ -1,0 +1,355 @@
+"""Sharding rules and collective building blocks — the distribution layer.
+
+Two halves, one module, because both answer the same question ("where does
+this tensor live on the mesh?"):
+
+  * **Logical-axis specs for the LM workloads** — ``logical_spec`` maps
+    (shape, logical axes) onto the physical mesh with divisibility
+    fallbacks; ``param_specs`` / ``opt_state_specs`` / ``cache_specs``
+    derive whole-tree placements (tensor parallel, ZeRO-1, KV cache).
+    ``constrain`` applies a logical spec inside traced code against the
+    ambient mesh installed by ``use_mesh`` (no mesh -> no-op, so the same
+    model code runs single-device).
+
+  * **RESCAL 2D-grid collectives** — the paper's MPI constructs as
+    shard_map primitives: ``psum_cast`` (distMM all-reduce with optional
+    payload down-cast), the diagonal-rank broadcasts of Alg. 3, and the
+    factor PartitionSpecs (``factor_specs`` et al.) shared by the engine,
+    the dry-run, and the tests.
+
+Mesh axis conventions:  grids are ("data", "model") — for RESCAL these are
+the paper's (row i, col j) — with an optional leading "pod" axis for
+multi-pod ensembles.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Physical mesh axis names
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+# RESCAL grid aliases (paper Fig. 3: row index i, column index j)
+ROW_AXIS = DATA_AXIS
+COL_AXIS = MODEL_AXIS
+
+# Logical tensor axes (opaque tokens; resolved against a mesh by
+# logical_spec).  BATCH spreads over every data-parallel axis (pod + data);
+# SEQ / MODEL / EXPERT compete for the tensor-parallel axis, first one that
+# divides wins.
+BATCH = "batch"
+SEQ = "seq"
+MODEL = "model_dim"
+EXPERT = "expert"
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh (trace-time context for constrain)
+# ---------------------------------------------------------------------------
+
+_MESH_VAR: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_dist_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Install `mesh` as the ambient mesh for ``constrain`` calls within the
+    context.  ``use_mesh(None)`` is a supported no-op (single-device path)."""
+    token = _MESH_VAR.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_VAR.reset(token)
+
+
+def current_mesh():
+    return _MESH_VAR.get()
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis resolution
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, names: Sequence[str]) -> int:
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def _batch_candidates(mesh) -> Iterable[tuple[str, ...]]:
+    names = tuple(mesh.axis_names)
+    if POD_AXIS in names and DATA_AXIS in names:
+        yield (POD_AXIS, DATA_AXIS)
+    if DATA_AXIS in names:
+        yield (DATA_AXIS,)
+
+
+def _candidates(mesh, logical) -> Iterable[tuple[str, ...]]:
+    if logical == BATCH:
+        yield from _batch_candidates(mesh)
+    elif logical in (SEQ, MODEL, EXPERT):
+        if MODEL_AXIS in tuple(mesh.axis_names):
+            yield (MODEL_AXIS,)
+
+
+def logical_spec(mesh, shape: Sequence[int], axes: Sequence[Any]) -> P:
+    """Resolve logical axes onto mesh axes with divisibility fallbacks.
+
+    Rules (tests/test_sharding.py is the spec):
+      * each mesh axis is used at most once; dims are resolved left to
+        right, first logical axis that divides claims the physical axis;
+      * a dim that does not divide its candidate axis size falls back to
+        replicated (None) and the axis stays available for later dims;
+      * BATCH prefers the combined (pod, data) axes when a pod axis
+        exists, falling back to data alone.
+    """
+    assert len(shape) == len(axes), (shape, axes)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, logical in zip(shape, axes):
+        entry = None
+        if logical is not None:
+            for cand in _candidates(mesh, logical):
+                if any(a in used for a in cand):
+                    continue
+                size = _axis_size(mesh, cand)
+                if size > 1 and dim > 0 and dim % size == 0:
+                    used.update(cand)
+                    entry = cand[0] if len(cand) == 1 else tuple(cand)
+                    break
+        entries.append(entry)
+    return P(*entries)
+
+
+def constrain(x, *axes):
+    """``with_sharding_constraint`` against the ambient mesh; identity when
+    no mesh is installed (single-device smoke paths)."""
+    mesh = current_mesh()
+    if mesh is None or getattr(x, "ndim", None) != len(axes):
+        return x
+    spec = logical_spec(mesh, x.shape, axes)
+    if all(e is None for e in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_heads(x, kind: str = "q"):
+    """Head-axis TP constraint for flat-head attention activations
+    (B, S, H, D).  When H does not divide the TP axis, queries fall back to
+    sequence sharding (context parallelism) and K/V stay replicated."""
+    mesh = current_mesh()
+    if mesh is None or getattr(x, "ndim", None) != 4:
+        return x
+    msize = dict(mesh.shape).get(MODEL_AXIS, 1)
+    _, S, H, _ = x.shape
+    if msize > 1 and H % msize == 0:
+        return constrain(x, BATCH, None, MODEL, None)
+    if kind == "q" and msize > 1 and S % msize == 0:
+        return constrain(x, BATCH, SEQ, None, None)
+    return constrain(x, BATCH, None, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree placement rules (params / optimizer / cache)
+# ---------------------------------------------------------------------------
+
+# Projection *into* the sharded feature space: shard the output features
+# (last dim).  Megatron column parallel.
+_COL_PARALLEL = {"wq", "wk", "wv", "wi", "wg", "w1", "w3", "wq_up",
+                 "wq_down", "wkv_up", "wkv_down", "router"}
+# Projection *out of* the sharded feature space: shard the input features
+# (second-to-last dim).  Megatron row parallel.
+_ROW_PARALLEL = {"wo", "w2"}
+# Vocab-parallel embedding tables: shard the vocab rows.
+_VOCAB_PARALLEL = {"table", "embedding", "wte"}
+
+
+def _path_keys(path) -> list[str]:
+    return [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+
+
+def _param_leaf_spec(mesh, path, leaf) -> P:
+    shape = tuple(leaf.shape)
+    nd = len(shape)
+    none = (None,) * nd
+    names = tuple(mesh.axis_names)
+    msize = dict(mesh.shape).get(MODEL_AXIS, 1)
+    if nd < 2 or MODEL_AXIS not in names or msize <= 1:
+        return P(*none)
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    entries = list(none)
+    # Expert-stacked leaves (moe, not the always-on shared MLP): shard the
+    # expert dim when it divides; otherwise fall through to the 2D rules on
+    # the trailing (in, out) dims — "EXPERT-else-ff" (see moe.py).
+    in_moe = any(k == "moe" for k in keys[:-1]) and "shared" not in keys
+    if in_moe and nd >= 3 and name in (_COL_PARALLEL | _ROW_PARALLEL):
+        e = nd - 3
+        if shape[e] % msize == 0:
+            entries[e] = MODEL_AXIS
+            return P(*entries)
+    if name in _VOCAB_PARALLEL:
+        if shape[0] % msize == 0:
+            entries[0] = MODEL_AXIS
+        return P(*entries)
+    if name in _ROW_PARALLEL and shape[nd - 2] % msize == 0:
+        entries[nd - 2] = MODEL_AXIS
+    elif name in _COL_PARALLEL and shape[nd - 1] % msize == 0:
+        entries[nd - 1] = MODEL_AXIS
+    return P(*entries)
+
+
+def param_specs(mesh, params):
+    """Tensor-parallel PartitionSpec tree for a parameter pytree.
+
+    Name-based Megatron rules, right-aligned so layer-scan stacking (a
+    leading L axis) is transparent; unrecognized leaves replicate.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _param_leaf_spec(mesh, p, l), params)
+
+
+def opt_state_specs(mesh, params):
+    """ZeRO-1 moment placement: keep the param's TP sharding and spread the
+    first remaining divisible dim over "data" so the f32 moments never
+    replicate across the data-parallel ranks."""
+    pspecs = param_specs(mesh, params)
+    dsize = dict(mesh.shape).get(DATA_AXIS, 1)
+
+    def zero1(leaf, spec: P) -> P:
+        if dsize <= 1:
+            return spec
+        entries = list(spec)
+        for i, (dim, e) in enumerate(zip(leaf.shape, entries)):
+            if e is None and dim > 0 and dim % dsize == 0:
+                entries[i] = DATA_AXIS
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(
+        zero1, params, pspecs, is_leaf=lambda s: isinstance(s, P))
+
+
+def cache_specs(mesh, cache):
+    """Decode-cache placement.  Leaves are layer-stacked
+    (L, B, spatial...): the layer axis replicates, batch spreads over the
+    data axes, and the TP axis takes the first trailing dim it divides
+    (sequence if possible, else heads, else feature) — the
+    sequence-sharded decode combine in attention.py relies on this."""
+    def spec(leaf) -> P:
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        entries: list[Any] = [None] * nd
+        if nd < 2:
+            return P(*entries)
+        bdim = 1
+        for cand in _batch_candidates(mesh):
+            size = _axis_size(mesh, cand)
+            if size > 1 and shape[bdim] % size == 0:
+                entries[bdim] = cand[0] if len(cand) == 1 else tuple(cand)
+                break
+        msize = dict(mesh.shape).get(MODEL_AXIS, 1)
+        if msize > 1:
+            for i in range(bdim + 1, nd):
+                if shape[i] % msize == 0:
+                    entries[i] = MODEL_AXIS
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map(spec, cache)
+
+
+def cache_shardings(mesh, cache):
+    """NamedSharding tree for a decode cache (device_put / dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), cache_specs(mesh, cache),
+        is_leaf=lambda s: isinstance(s, P))
+
+
+# ---------------------------------------------------------------------------
+# RESCAL 2D-grid collectives (paper Alg. 2 + diagonal broadcasts)
+# ---------------------------------------------------------------------------
+
+def psum_cast(x, axis, comm_dtype=None):
+    """all_reduce with optional payload down-cast (restores input dtype).
+    `axis` may be a name or tuple of names.  comm_dtype=bf16 is the
+    beyond-paper wire-compression lever (#4)."""
+    if comm_dtype is None:
+        return jax.lax.psum(x, axis)
+    return jax.lax.psum(x.astype(comm_dtype), axis).astype(x.dtype)
+
+
+def diag_broadcast_row_to_col(Ai, comm_dtype=None):
+    """A^(j) <- broadcast of A^(i) from diagonal ranks "along columns".
+
+    Device (i, j) needs row-block j of A; the diagonal device (j, j) holds
+    it as its A^(i).  SPMD equivalent: every device contributes A^(i) iff
+    it is diagonal, then psum over the row axis delivers block j to column
+    j.  (Paper Alg. 3 line 23.)  Requires a square grid — the same
+    p_r = p_c restriction as paper §6.1.3.
+    """
+    i = jax.lax.axis_index(ROW_AXIS)
+    j = jax.lax.axis_index(COL_AXIS)
+    contrib = jnp.where(i == j, Ai, jnp.zeros_like(Ai))
+    return psum_cast(contrib, ROW_AXIS, comm_dtype)
+
+
+def diag_broadcast_col_to_row(Zj, comm_dtype=None):
+    """Inverse redistribution: a column-indexed block result Z^(j)
+    (identical within column j) -> row-indexed Z^(i).  (Alg. 3 line 13.)"""
+    i = jax.lax.axis_index(ROW_AXIS)
+    j = jax.lax.axis_index(COL_AXIS)
+    contrib = jnp.where(i == j, Zj, jnp.zeros_like(Zj))
+    return psum_cast(contrib, COL_AXIS, comm_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RESCAL factor PartitionSpecs (paper Fig. 3 layout)
+# ---------------------------------------------------------------------------
+
+def factor_specs(pod_axis: str | None = None) -> tuple[P, P, P]:
+    """(X, A, R) specs for one factorization on the ("data", "model") grid:
+
+      X (m, n, n)   -> P(None, row, col)    X^(i,j) blocks
+      A (n, k)      -> P(row, None)         A^(i) row blocks, replicated
+                                            over columns
+      R (m, k, k)   -> P()                  replicated ("R is the same for
+                                            all ranks")
+
+    With `pod_axis`, X's row sharding folds the pod axis in (row-sharded
+    across pods too — the elastic multi-pod layout).
+    """
+    row = (pod_axis, ROW_AXIS) if pod_axis else ROW_AXIS
+    return P(None, row, COL_AXIS), P(row, None), P()
+
+
+def ensemble_factor_specs(pod_axis: str = POD_AXIS) -> tuple[P, P, P]:
+    """Specs for the pod-parallel RESCALk ensemble: X replicated across
+    pods, each pod owning its perturbation members' factorizations (zero
+    cross-pod traffic during MU — DESIGN.md §4)."""
+    x_spec = P(None, ROW_AXIS, COL_AXIS)
+    a_spec = P(pod_axis, ROW_AXIS, None)
+    r_spec = P(pod_axis, None, None, None)
+    return x_spec, a_spec, r_spec
+
+
+def bcsr_specs(ensemble: bool = False) -> tuple[P, P, P, P]:
+    """(data, idx, A, R) specs for the balanced BCSR layout
+    (gr, gc, m, nnzb_loc, bs, bs) / (gr, gc, nnzb_loc)."""
+    x_spec = P(ROW_AXIS, COL_AXIS, None, None, None, None)
+    i_spec = P(ROW_AXIS, COL_AXIS, None)
+    if ensemble:
+        a_spec = P(POD_AXIS, ROW_AXIS, None)
+        r_spec = P(POD_AXIS, None, None, None)
+    else:
+        a_spec = P(ROW_AXIS, None)
+        r_spec = P()
+    return x_spec, i_spec, a_spec, r_spec

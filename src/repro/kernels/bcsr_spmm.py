@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.dist.compat import tpu_compiler_params
+
 from repro.core.sparse import BCSR
 
 
@@ -72,7 +74,7 @@ def bcsr_spmm(sp: BCSR, B: jax.Array, *, interpret: bool = False
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nb, bs, k), B.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
         name="bcsr_spmm",

@@ -32,7 +32,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.dist.compat import tpu_compiler_params
 
 DEFAULT_BM = 256
 DEFAULT_BN = 256
@@ -65,9 +65,12 @@ def _kernel(x_ref, b1_ref, b2_ref, xa_ref, xtb_ref):
 
     part_xtb = jnp.dot(x.T, b2, preferred_element_type=jnp.float32)
     bn = x.shape[1]
-    cur = pl.load(xtb_ref, (0, pl.ds(j * bn, bn), slice(None)))
-    pl.store(xtb_ref, (0, pl.ds(j * bn, bn), slice(None)),
-             cur + part_xtb.astype(xtb_ref.dtype))
+    # leading dim indexed with ds(0, 1), not a bare int: integer indices in
+    # pl.load/store tuples are rejected by older pallas releases
+    idx = (pl.ds(0, 1), pl.ds(j * bn, bn), slice(None))
+    cur = pl.load(xtb_ref, idx)
+    pl.store(xtb_ref, idx,
+             cur + part_xtb[None].astype(xtb_ref.dtype))
     del nj
 
 
@@ -100,7 +103,7 @@ def fused_xa_xtb(X: jax.Array, B1: jax.Array, B2: jax.Array,
             jax.ShapeDtypeStruct((m, n1, k), X.dtype),
             jax.ShapeDtypeStruct((m, n2, k), X.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
         name="fused_xa_xtb",

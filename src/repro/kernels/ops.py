@@ -36,6 +36,15 @@ def _resolve(impl: str) -> str:
     return impl
 
 
+def _largest_tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (the kernel requires exact
+    tiling of both X axes)."""
+    for t in range(min(cap, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
 def fused_xa_xtb(X, B1, B2, *, impl: str = "auto", bm: int = 256,
                  bn: int = 256):
     """One-pass (X_t @ B1, X_t^T @ B2_t).  X: (m, n1, n2)."""
@@ -45,6 +54,14 @@ def fused_xa_xtb(X, B1, B2, *, impl: str = "auto", bm: int = 256,
     interpret = impl == "interpret"
     m, n1, n2 = X.shape
     k = B1.shape[1]
+    # shrink the requested tiles to exact divisors of the shard sides;
+    # distributed shards (n/grid) are not generally 256-multiples
+    bm = _largest_tile(n1, bm)
+    bn = _largest_tile(n2, bn)
+    if impl == "pallas" and min(bm, bn) < 8:
+        # degenerate tiling (e.g. prime shard side) loses MXU sublane
+        # alignment — the jnp oracle beats a 1-wide pallas grid
+        return _ref.ref_fused_xa_xtb(X, B1, B2)
     panel = max(bn, (VMEM_PANEL_BYTES // max(k * 4, 1)) // bn * bn)
     if n2 <= panel:
         return _fused_pallas(X, B1, B2, bm=bm, bn=bn, interpret=interpret)

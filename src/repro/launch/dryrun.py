@@ -35,11 +35,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import (ARCHS, RESCAL_CONFIGS, SHAPES, RescalConfig,
                            get_config, input_specs)
 from repro.configs.base import ShapeSpec
-from repro.core.rescal_dist import (DistRescalConfig, make_dist_step,
-                                    make_dist_step_sparse,
-                                    make_ensemble_step,
-                                    make_ensemble_step_sparse)
 from repro.dist import sharding as shd
+from repro.dist.engine import (DistRescalConfig, make_dist_step,
+                               make_dist_step_sparse, make_ensemble_step,
+                               make_ensemble_step_sparse)
 from repro.launch import hlo_costs, hlo_stats
 from repro.launch.mesh import CHIP_HBM_BYTES, make_production_mesh
 from repro.models import model as model_lib
@@ -177,7 +176,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
 
     compiled = lowered.compile()
     compile_s = time.time() - t0
-    cost = compiled.cost_analysis()
+    cost = hlo_costs.xla_cost_analysis(compiled)
     mem = compiled.memory_analysis()
     hlo = compiled.as_text()
     loop_aware = hlo_costs.analyze(hlo)     # trip-count-corrected

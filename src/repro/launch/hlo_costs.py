@@ -28,6 +28,18 @@ from __future__ import annotations
 import re
 from dataclasses import dataclass, field
 
+from repro.dist.compat import cost_analysis_dict
+
+
+def xla_cost_analysis(compiled) -> dict[str, float]:
+    """XLA's own HloCostAnalysis as a flat dict, version-normalized.
+
+    ``compiled.cost_analysis()`` returns a list of per-program dicts on
+    older JAX and a single dict on newer — never index the raw result
+    with a string; call this.
+    """
+    return cost_analysis_dict(compiled.cost_analysis())
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,

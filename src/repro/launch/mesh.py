@@ -3,19 +3,23 @@
 `make_production_mesh` is a FUNCTION (not a module-level constant) so
 importing this module never touches jax device state — the 512-device
 override belongs to dryrun.py alone.
+
+All mesh construction goes through repro.dist.compat.make_mesh, which is
+AxisType-tolerant across JAX versions (no raw AxisType imports outside
+dist/compat.py).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.dist import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16x16 = 256 chips per pod; multi_pod adds the 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None
@@ -23,10 +27,8 @@ def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None
     """Small mesh for tests (requires xla_force_host_platform_device_count
     set in the test subprocess)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return compat.make_mesh((data, model), ("data", "model"))
 
 
 # v5e hardware constants for the roofline (per chip)

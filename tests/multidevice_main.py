@@ -13,17 +13,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
-from jax.sharding import AxisType, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+# All mesh construction goes through the version-tolerant compat helper —
+# jax.sharding.AxisType does not exist on every supported JAX.
+from repro.dist import compat   # noqa: E402
 
 
 def mesh2x2():
-    return jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((2, 2), ("data", "model"))
 
 
 def mesh_pod():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    return compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 
 
 def lowrank(key, n=32, m=3, k=4):
@@ -111,6 +113,33 @@ def check_ensemble_step_pods():
         np.testing.assert_allclose(A_out[q], st.A, rtol=5e-4, atol=1e-5)
 
 
+def check_fused_engine_matches_reference():
+    """use_fused_kernel=True must reproduce the reference einsum path:
+    the engine's single-X-pass products feed the identical MU update via
+    (X^T A) R == X^T (A R).  `fused_impl="ref"` exercises the jnp oracle
+    (the CPU execution path), `"interpret"` the actual Pallas kernel body.
+    """
+    from repro.core.rescal import init_factors
+    from repro.dist.engine import DistRescalConfig, make_mu_step
+    key = jax.random.PRNGKey(7)
+    n, m, k = 64, 3, 4
+    X = lowrank(key, n=n, m=m, k=k)
+    init = init_factors(key, n, m, k)
+    mesh = mesh2x2()
+    for schedule in ("batched", "sliced"):
+        ref_step = make_mu_step(mesh, DistRescalConfig(schedule=schedule),
+                                iters=10)
+        A0, R0 = ref_step(X, init.A, init.R)
+        for impl in ("ref", "interpret"):
+            cfg = DistRescalConfig(schedule=schedule, use_fused_kernel=True,
+                                   fused_impl=impl)
+            A1, R1 = make_mu_step(mesh, cfg, iters=10)(X, init.A, init.R)
+            np.testing.assert_allclose(A1, A0, rtol=1e-5, atol=1e-7,
+                                       err_msg=f"{schedule}/{impl}")
+            np.testing.assert_allclose(R1, R0, rtol=1e-5, atol=1e-7,
+                                       err_msg=f"{schedule}/{impl}")
+
+
 def check_sharded_train_matches_single():
     from repro.configs import REDUCED_ARCHS
     from repro.data import TokenStreamConfig, batch_at
@@ -169,7 +198,7 @@ def cache_shapes_tree(cfg):
 def check_ef_psum():
     from repro.optim import compression
     from jax.experimental.shard_map import shard_map
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",))
     key = jax.random.PRNGKey(0)
     g_global = jax.random.normal(key, (8, 128))
 
@@ -224,10 +253,8 @@ def check_elastic_reshard():
     opt = AdamW(lr=1e-3)
     ds = TokenStreamConfig(vocab=cfg.vocab, batch=8, seq=32, seed=0)
 
-    mesh_a = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(AxisType.Auto,) * 2)
+    mesh_a = compat.make_mesh((2, 2), ("data", "model"))
+    mesh_b = compat.make_mesh((4, 2), ("data", "model"))
 
     state = init_state(jax.random.PRNGKey(0), cfg, opt)
     step_a = make_train_step(cfg, mesh_a, optimizer=opt, remat=False,

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType, Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.dist import sharding as shd
 
