@@ -26,3 +26,23 @@ else
     XLA_FLAGS="--xla_force_host_platform_device_count=8" \
         python -m pytest -q -m "not slow"
 fi
+
+echo "== rescalk_run scheduler smoke: interrupt + resume =="
+# First run "dies" after 1 computed unit (deterministic kill); the rerun
+# must reuse that unit's checkpoint instead of recomputing it, then finish
+# the sweep.  Proves the per-(k, q)-unit resume contract end to end.
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+SMOKE_ARGS=(--n 24 --m 2 --k-true 3 --k-min 2 --k-max 3 --r 2 --iters 30)
+python -m repro.launch.rescalk_run "${SMOKE_ARGS[@]}" \
+    --ckpt-dir "$SMOKE_DIR/ckpt" --stop-after-units 1 \
+    | tee "$SMOKE_DIR/first.log"
+grep -q "interrupted after 1 computed units" "$SMOKE_DIR/first.log"
+python -m repro.launch.rescalk_run "${SMOKE_ARGS[@]}" \
+    --ckpt-dir "$SMOKE_DIR/ckpt" --report "$SMOKE_DIR/report.json" \
+    | tee "$SMOKE_DIR/second.log"
+test "$(grep -c 'reused unit_' "$SMOKE_DIR/second.log")" -eq 1
+grep -q "selected k_opt" "$SMOKE_DIR/second.log"
+python -c "import json,sys; r=json.load(open(sys.argv[1])); \
+    assert r['n_reused']==1, r" "$SMOKE_DIR/report.json"
+echo "== scheduler smoke OK =="

@@ -1,4 +1,6 @@
 """Atomic, grid-agnostic checkpointing (elastic restore)."""
-from .checkpoint import latest_step, restore, save, save_async
+from .checkpoint import (atomic_json_dump, latest_step, restore,
+                         save, save_async)
 
-__all__ = ["latest_step", "restore", "save", "save_async"]
+__all__ = ["atomic_json_dump", "latest_step", "restore", "save",
+           "save_async"]

@@ -28,6 +28,20 @@ import jax
 import numpy as np
 
 
+def atomic_json_dump(path: str, obj, **json_kwargs) -> str:
+    """Write JSON with the same crash-safe discipline as the checkpoint
+    files (tmp file + os.replace).  Shared by every JSON artifact writer
+    (selection reports, sweep-config fingerprints)."""
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, **json_kwargs)
+    os.replace(tmp, path)
+    return path
+
+
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}

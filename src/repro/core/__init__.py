@@ -1,5 +1,9 @@
 """Core: the paper's contribution — distributed non-negative RESCAL with
-automatic model selection (pyDRESCALk)."""
+automatic model selection (pyDRESCALk).
+
+The model-selection sweep itself lives in ``repro.selection`` (batched
+ensembles, work-unit scheduler, pluggable criteria, JSON reports);
+``rescalk`` here is the stable compatibility wrapper over it."""
 from .rescal import (EPS_DEFAULT, RescalState, init_factors, mu_step_batched,
                      mu_step_sliced, normalize, reconstruct, rel_error,
                      rescal)

@@ -1,78 +1,42 @@
-"""RESCALk — RESCAL with automatic model selection (paper Alg. 1).
+"""RESCALk — compatibility wrapper over ``repro.selection`` (paper Alg. 1).
 
-For each candidate rank k in [k_min, k_max]:
-  1. build r perturbed copies of X (perturb.py, Alg. 4)
-  2. factorize each (rescal.py / rescal_dist.py, Alg. 3)
-  3. align the r solutions with custom clustering (clustering.py, Alg. 5)
-  4. cluster stability via silhouettes (silhouette.py, Alg. 6)
-  5. robust A~ = cluster medians; R~ by regression (regression.py)
-  6. relative reconstruction error of (A~, R~)
-k_opt = largest k whose clusters are stable (high min-silhouette) with low
-reconstruction error (paper §3.3, selection criteria of [63]).
+The model-selection sweep moved into its own subsystem (repro.selection):
+ensemble.py batches all r perturbation members of a candidate k into one
+jitted program (vmap / mesh-sharded), scheduler.py owns the (k, q) work-
+unit grid with per-unit checkpoint/resume, criteria.py makes k-selection
+pluggable, report.py emits the JSON sweep artifact.
 
-The r factorizations are *independent* — the natural scale-out axis.  The
-driver exposes them through `member_runner` so callers can map members onto
-pods (launch/rescalk_run.py), a process pool, or a simple Python loop.
-Per-(k, q) results are checkpointable: a failed member is recomputed alone
-(fault-tolerance story in DESIGN.md §4).
+This module keeps the historical import surface stable:
+
+  * ``RescalkConfig`` / ``KResult`` / ``RescalkResult`` re-export from
+    selection.scheduler (their new home).
+  * ``rescalk(X, cfg)`` delegates to ``SweepScheduler`` — by default the
+    batched single-program ensemble; pass ``mode="loop"`` for the
+    sequential reference, ``mesh=`` / ``ckpt_dir=`` / ``criterion=`` for
+    the scheduler features.
+  * A **custom** ``member_runner`` routes through the legacy sequential
+    loop below (same semantics as the seed code), since an arbitrary
+    Python callable cannot be batched into the jitted program.
+  * ``select_k`` keeps its old 3-array signature on top of
+    selection.criteria's threshold rule.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .clustering import ClusterResult, custom_cluster
-from .perturb import ensemble_keys, perturb
-from .regression import regress_R
-from .rescal import RescalState, rel_error, rescal
-from .silhouette import SilhouetteResult, silhouettes
+# Submodule imports only (and the scheduler/ensemble lazily inside the
+# functions): the selection package imports repro.core submodules, so
+# pulling anything through a package __init__ here would cycle.
+from repro.selection.criteria import select_threshold
+from repro.selection.types import KResult, RescalkConfig, RescalkResult
 
+from .rescal import RescalState, rescal
 
-@dataclasses.dataclass(frozen=True)
-class RescalkConfig:
-    k_min: int = 2
-    k_max: int = 8
-    n_perturbations: int = 10          # r
-    perturbation_delta: float = 0.02   # noise half-width (paper: [0.005, .03])
-    rescal_iters: int = 1000   # paper SS6.2.1 uses 1000
-    regress_iters: int = 100
-    init: str = "random"               # "random" | "nndsvd" (paper SS6.1.3)
-    schedule: str = "batched"          # "batched" | "sliced" (paper-faithful)
-    seed: int = 0
-    sil_threshold: float = 0.75        # stability bar for k selection
-
-
-@dataclasses.dataclass
-class KResult:
-    k: int
-    s_min: float
-    s_mean: float
-    rel_err: float
-    A_median: np.ndarray               # (n, k)
-    R_regress: np.ndarray              # (m, k, k)
-    member_errors: np.ndarray          # (r,)
-
-
-@dataclasses.dataclass
-class RescalkResult:
-    ks: np.ndarray
-    s_min: np.ndarray                  # stability per k
-    s_mean: np.ndarray
-    rel_err: np.ndarray                # reconstruction error per k
-    k_opt: int
-    per_k: dict[int, KResult]
-
-    def summary(self) -> str:
-        lines = ["  k   s_min   s_mean  rel_err"]
-        for i, k in enumerate(self.ks):
-            mark = " <== k_opt" if k == self.k_opt else ""
-            lines.append(f"{k:3d}  {self.s_min[i]:6.3f}  {self.s_mean[i]:6.3f}"
-                         f"  {self.rel_err[i]:7.4f}{mark}")
-        return "\n".join(lines)
+__all__ = ["KResult", "RescalkConfig", "RescalkResult",
+           "default_member_runner", "rescalk", "select_k"]
 
 
 def default_member_runner(X_q: jax.Array, k: int, key: jax.Array,
@@ -98,53 +62,60 @@ def default_member_runner(X_q: jax.Array, k: int, key: jax.Array,
 
 def select_k(ks: Sequence[int], s_min: np.ndarray, rel_err: np.ndarray,
              sil_threshold: float = 0.75) -> int:
-    """Paper §3.3 / [63]: the largest k with stable clusters and good fit.
-
-    Stable = min silhouette above threshold.  Among stable ks, reconstruction
-    error decreases with k, so "largest stable k" implements "maximum number
-    of stable clusters corresponding to a good accuracy".  If nothing clears
-    the bar (pathological data), fall back to the best stability*fit score.
-    """
-    ks = np.asarray(ks)
-    stable = s_min >= sil_threshold
-    if stable.any():
-        return int(ks[stable][-1])
-    score = s_min - rel_err
-    return int(ks[int(np.argmax(score))])
+    """Historical 3-array entry point for the paper's threshold rule
+    (selection.criteria.select_threshold, incl. its stability x fit
+    fallback)."""
+    return select_threshold(np.asarray(ks), np.asarray(s_min), None,
+                            np.asarray(rel_err), sil_threshold=sil_threshold)
 
 
 def rescalk(X: jax.Array, cfg: RescalkConfig,
             member_runner: Callable = default_member_runner,
-            verbose: bool = False) -> RescalkResult:
-    """Run the full model-selection sweep on tensor X (m, n, n)."""
-    m, n, _ = X.shape
-    root = jax.random.PRNGKey(cfg.seed)
-    ks = list(range(cfg.k_min, cfg.k_max + 1))
+            verbose: bool = False, *, mode: str = "batched",
+            criterion: str = "threshold", mesh=None,
+            ckpt_dir: str | None = None) -> RescalkResult:
+    """Run the full model-selection sweep on tensor X (m, n, n).
+
+    Default path: selection.SweepScheduler with the batched one-program
+    ensemble.  A non-default `member_runner` falls back to the legacy
+    per-member Python loop (its callable cannot be vmapped)."""
+    if member_runner is not default_member_runner:
+        # The legacy loop has no scheduler: combining a custom runner with
+        # scheduler-only features would silently drop them (no checkpoints
+        # written, wrong criterion applied) — refuse instead.
+        dropped = [name for name, val, default in [
+            ("mode", mode, "batched"), ("criterion", criterion, "threshold"),
+            ("mesh", mesh, None), ("ckpt_dir", ckpt_dir, None)]
+            if val != default]
+        if dropped:
+            raise ValueError(
+                f"custom member_runner uses the legacy sequential loop, "
+                f"which does not support {dropped}; drop the runner or use "
+                f"repro.selection.SweepScheduler directly")
+        return _rescalk_loop(X, cfg, member_runner, verbose)
+    from repro.selection.scheduler import SweepScheduler
+    sched = SweepScheduler(cfg, mode=mode, mesh=mesh, ckpt_dir=ckpt_dir,
+                           criterion=criterion, verbose=verbose)
+    return sched.run(X)
+
+
+def _rescalk_loop(X: jax.Array, cfg: RescalkConfig, member_runner: Callable,
+                  verbose: bool = False) -> RescalkResult:
+    """The sequential double loop, kept for custom runners.  Both the
+    per-member loop (selection.ensemble._loop_members) and the per-k
+    reduction (selection.scheduler.reduce_k) are the subsystem's own, so
+    this path cannot drift from the batched engine."""
+    from repro.selection.ensemble import _loop_members, member_keys
+    from repro.selection.scheduler import reduce_k
+    ks = cfg.ks
+    members = tuple(range(cfg.n_perturbations))
     per_k: dict[int, KResult] = {}
 
     for k in ks:
-        kkey = jax.random.fold_in(root, k)
-        keys = ensemble_keys(kkey, cfg.n_perturbations)
-        A_list, R_list, errs = [], [], []
-        for q in range(cfg.n_perturbations):
-            pkey, fkey = jax.random.split(keys[q])
-            X_q = perturb(pkey, X, cfg.perturbation_delta)
-            state = member_runner(X_q, k, fkey, cfg)
-            A_list.append(state.A)
-            R_list.append(state.R)
-            errs.append(float(rel_error(X, state.A, state.R)))
-        A_ens = jnp.stack(A_list)            # (r, n, k)
-        R_ens = jnp.stack(R_list)            # (r, m, k, k)
-
-        clus: ClusterResult = custom_cluster(A_ens, R_ens)
-        sil: SilhouetteResult = silhouettes(clus.A_aligned)
-        R_reg = regress_R(X, clus.A_median, iters=cfg.regress_iters)
-        err = float(rel_error(X, clus.A_median, R_reg))
-
-        per_k[k] = KResult(
-            k=k, s_min=float(sil.s_min), s_mean=float(sil.s_mean),
-            rel_err=err, A_median=np.asarray(clus.A_median),
-            R_regress=np.asarray(R_reg), member_errors=np.asarray(errs))
+        keys = member_keys(cfg.seed, k, cfg.n_perturbations)
+        ens = _loop_members(X, keys, members, k, cfg, runner=member_runner)
+        per_k[k] = reduce_k(X, cfg, k, ens.A, ens.R,
+                            np.asarray(ens.errors))
         if verbose:
             r = per_k[k]
             print(f"[rescalk] k={k:3d} s_min={r.s_min:6.3f} "

@@ -25,6 +25,9 @@ package; the factorization math (core/), kernels (kernels/) and drivers
 
 ``repro.core.rescal_dist`` re-exports the engine for backward
 compatibility; new code should import from ``repro.dist`` directly.
+``repro.selection`` composes this layer (``engine.get_mu_iter`` +
+``sharding.ensemble_member_specs``) into its mesh-sharded model-selection
+ensemble — the member axis rides the pod axis (``ENSEMBLE_AXIS``).
 """
 from . import compat, elastic, engine, sharding
 

@@ -229,6 +229,30 @@ _ITERS = {
 }
 
 
+def get_mu_iter(operand: str, schedule: str) -> Callable:
+    """Local MU-iteration body ``(local_operand, Ai, R, cfg) -> (Ai, R)``.
+
+    Public composition point: other subsystems build their own shard_map
+    programs from the same per-device math (repro.selection fuses the
+    perturbation ensemble around these bodies) without duplicating the
+    collective schedule.
+    """
+    try:
+        return _ITERS[(operand, schedule)]
+    except KeyError:
+        raise ValueError(f"unknown operand/schedule: "
+                         f"{operand!r}/{schedule!r}") from None
+
+
+def local_normalize(Ai, R, comm_dtype=None, eps: float = 1e-12):
+    """Distributed factor normalization (||A_col|| = 1, scale folded into R)
+    — the shard-local counterpart of core.rescal.normalize: the column
+    norms need one psum over the row shards, everything else is local."""
+    c2 = psum_cast((Ai * Ai).sum(axis=0), ROW_AXIS, comm_dtype)
+    c = jnp.maximum(jnp.sqrt(c2), eps)
+    return Ai / c, jnp.einsum("a,mab,b->mab", c, R, c)
+
+
 # ---------------------------------------------------------------------------
 # The unified step factory
 # ---------------------------------------------------------------------------
@@ -247,11 +271,7 @@ def make_mu_step(mesh: Mesh, cfg: DistRescalConfig, *,
     `n` (global entity count) is required for bcsr operands.  `pod_axis`
     shards the ensemble-member axis over pods with X replicated per pod.
     """
-    try:
-        it = _ITERS[(operand, cfg.schedule)]
-    except KeyError:
-        raise ValueError(f"unknown operand/schedule: "
-                         f"{operand!r}/{cfg.schedule!r}") from None
+    it = get_mu_iter(operand, cfg.schedule)
 
     def run_iters(local_operand, Ai, R):
         def body(_, c):
@@ -305,9 +325,11 @@ def make_mu_step(mesh: Mesh, cfg: DistRescalConfig, *,
 # Distributed error / GSPMD alternative / driver
 # ---------------------------------------------------------------------------
 
-def _local_rel_error(Xl, Ai, R, cd=None):
+def local_rel_error(Xl, Ai, R, cd=None):
     """Distributed relative error via the small-intermediates identity
-    (see core.rescal.rel_error); only k-sized payloads cross the wire."""
+    (see core.rescal.rel_error); only k-sized payloads cross the wire.
+    Shard-local body — callable inside any shard_map on the 2D grid (the
+    selection ensemble vmaps it over members)."""
     Aj = diag_broadcast_row_to_col(Ai, cd)
     G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)
     XA = psum_cast(jnp.einsum("mij,jk->mik", Xl, Aj), COL_AXIS, cd)
@@ -322,7 +344,7 @@ def _local_rel_error(Xl, Ai, R, cd=None):
 def make_dist_error(mesh: Mesh) -> Callable:
     x_spec, a_spec, r_spec = factor_specs(None)
     sharded = shard_map(
-        lambda Xl, Ai, R: _local_rel_error(Xl, Ai, R), mesh=mesh,
+        lambda Xl, Ai, R: local_rel_error(Xl, Ai, R), mesh=mesh,
         in_specs=(x_spec, a_spec, r_spec), out_specs=P(),
         check_rep=False)
     return jax.jit(sharded)

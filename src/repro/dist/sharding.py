@@ -40,6 +40,11 @@ POD_AXIS = "pod"
 ROW_AXIS = DATA_AXIS
 COL_AXIS = MODEL_AXIS
 
+# The RESCALk ensemble-member axis rides the pod axis: members are the
+# "naturally independent" work units (paper §5), so spreading them across
+# pods costs zero cross-pod traffic during MU (DESIGN.md §4).
+ENSEMBLE_AXIS = POD_AXIS
+
 # Logical tensor axes (opaque tokens; resolved against a mesh by
 # logical_spec).  BATCH spreads over every data-parallel axis (pod + data);
 # SEQ / MODEL / EXPERT compete for the tensor-parallel axis, first one that
@@ -339,6 +344,31 @@ def ensemble_factor_specs(pod_axis: str = POD_AXIS) -> tuple[P, P, P]:
     a_spec = P(pod_axis, ROW_AXIS, None)
     r_spec = P(pod_axis, None, None, None)
     return x_spec, a_spec, r_spec
+
+
+def ensemble_member_specs(mesh, key_ndim: int = 2) -> dict[str, P]:
+    """Specs for the selection subsystem's perturb-fused ensemble program
+    (selection/ensemble.py): X is replicated across pods (each pod perturbs
+    its own members' copies shard-locally, so the r member tensors never
+    exist on host), and every member-major operand — the per-member PRNG
+    keys, member ids (r,), factors and errors — shards its leading member
+    axis over the ensemble/pod axis when the mesh has one.  Without a pod
+    axis the members replicate and the program is pure 2D-grid parallelism
+    over X.
+
+    ``key_ndim`` is the rank of the member-key array: 2 for legacy raw
+    uint32 keys (r, 2), 1 for new-style typed key arrays (r,).  Callers
+    pass ``keys.ndim`` so the spec never hard-codes PRNG key internals —
+    the version-dependence bug class this repo bans."""
+    e = ENSEMBLE_AXIS if ENSEMBLE_AXIS in tuple(mesh.axis_names) else None
+    return {
+        "X": P(None, ROW_AXIS, COL_AXIS),
+        "keys": P(e, *([None] * (key_ndim - 1))),
+        "ids": P(e),
+        "A": P(e, ROW_AXIS, None),
+        "R": P(e, None, None, None),
+        "err": P(e),
+    }
 
 
 def bcsr_specs(ensemble: bool = False) -> tuple[P, P, P, P]:

@@ -1,27 +1,35 @@
-"""Distributed RESCALk CLI — the paper's full pipeline as a launcher.
+"""Distributed RESCALk CLI — the paper's full pipeline on the selection
+scheduler.
 
-Runs model selection (Alg. 1) with the distributed MU kernel when a mesh
-is available (or requested) and per-(k, member) checkpointing so a failed
-ensemble member is recomputed alone (DESIGN.md §4 fault-tolerance story).
+Runs model selection (Alg. 1) through repro.selection: the (k, q) work-unit
+grid is planned by the scheduler, each unit executes as one batched
+ensemble program (or a sequential loop with ``--mode loop``), and per-unit
+checkpoints make an interrupted sweep resumable without recomputing
+completed units (checkpoint tags derive from the unit's (k, member-range)
+identity — never from PRNG key internals).
 
     PYTHONPATH=src python -m repro.launch.rescalk_run \
         --n 256 --m 4 --k-true 5 --k-min 2 --k-max 7 --iters 300
+
+Interrupt/resume drill (what scripts/ci_test.sh exercises):
+
+    ... rescalk_run --ckpt-dir /tmp/ck --stop-after-units 2   # "kill"
+    ... rescalk_run --ckpt-dir /tmp/ck                        # resume
 """
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import numpy as np
 
-from repro import ckpt
-from repro.core import RescalkConfig, RescalState, rescalk
 from repro.data.synthetic import synthetic_rescal
+from repro.selection import (CRITERIA, RescalkConfig, SweepInterrupted,
+                             SweepScheduler)
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--n", type=int, default=256)
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--k-true", type=int, default=5)
@@ -31,41 +39,55 @@ def main():
     ap.add_argument("--iters", type=int, default=300)
     ap.add_argument("--schedule", default="batched",
                     choices=("batched", "sliced"))
+    ap.add_argument("--init", default="random", choices=("random", "nndsvd"))
+    ap.add_argument("--mode", default="batched", choices=("batched", "loop"),
+                    help="ensemble execution: one batched program per unit "
+                         "or the sequential per-member loop")
+    ap.add_argument("--criterion", default="threshold",
+                    choices=sorted(CRITERIA),
+                    help="k-selection rule (selection/criteria.py)")
     ap.add_argument("--ckpt-dir", default=None,
-                    help="per-(k,member) checkpoint directory")
-    args = ap.parse_args()
+                    help="per-(k, q)-unit checkpoint directory")
+    ap.add_argument("--report", default=None,
+                    help="write the SelectionReport JSON here")
+    ap.add_argument("--stop-after-units", type=int, default=None,
+                    help="compute at most this many units, then exit "
+                         "(deterministic kill for resume drills)")
+    ap.add_argument("--max-retries", type=int, default=1)
+    return ap
+
+
+def main():
+    args = build_parser().parse_args()
 
     key = jax.random.PRNGKey(0)
     X, A_true, _ = synthetic_rescal(key, n=args.n, m=args.m, k=args.k_true)
     print(f"tensor {X.shape}, planted k={args.k_true}, "
-          f"schedule={args.schedule}")
+          f"schedule={args.schedule}, mode={args.mode}, "
+          f"criterion={args.criterion}")
 
     cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
                         n_perturbations=args.r, rescal_iters=args.iters,
-                        schedule=args.schedule)
+                        schedule=args.schedule, init=args.init)
+    sched = SweepScheduler(cfg, mode=args.mode, ckpt_dir=args.ckpt_dir,
+                           criterion=args.criterion,
+                           max_retries=args.max_retries,
+                           stop_after_units=args.stop_after_units,
+                           report_path=args.report, verbose=True)
+    try:
+        res = sched.run(X)
+    except SweepInterrupted as stop:
+        # one source of truth: the exception formats its own resumable /
+        # not-checkpointed wording (ci_test.sh greps this line)
+        print(f"[sweep] {stop}")
+        return
 
-    member_runner = None
-    if args.ckpt_dir:
-        from repro.core.rescalk import default_member_runner
-
-        def member_runner(X_q, k, fkey, rcfg):
-            tag = os.path.join(args.ckpt_dir,
-                               f"k{k}_q{int(fkey[-1]) & 0xffff}")
-            if ckpt.latest_step(tag) is not None:
-                like = jax.eval_shape(
-                    lambda: default_member_runner(X_q, k, fkey, rcfg))
-                state, _ = ckpt.restore(tag, like)
-                print(f"  [ckpt] reused member {tag}")
-                return state
-            state = default_member_runner(X_q, k, fkey, rcfg)
-            ckpt.save(tag, 0, state)
-            return state
-
-    res = rescalk(X, cfg, verbose=True,
-                  **({"member_runner": member_runner} if member_runner
-                     else {}))
     print("\n" + res.summary())
     print(f"\nselected k_opt = {res.k_opt} (planted {args.k_true})")
+    if sched.report is not None:
+        rep = sched.report
+        print(f"[sweep] {len(rep.units)} units, {rep.n_reused} reused, "
+              f"{rep.total_seconds:.2f}s compute")
     med = res.per_k[res.k_opt].A_median
     A = np.asarray(A_true)
     if res.k_opt == args.k_true:

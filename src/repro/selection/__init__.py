@@ -1,0 +1,43 @@
+"""repro.selection — the model-selection subsystem (paper Alg. 1 at scale).
+
+Owns the RESCALk sweep end to end; the layer every exascale-sweep feature
+builds on.  Module map:
+
+  ensemble.py  — all r perturbation members of a candidate k as ONE jitted
+                 program: vmap over a leading ensemble axis on a single
+                 host, or a shard_map over the ("pod", "data", "model")
+                 mesh with perturbation fused in shard-locally
+                 (``perturb_shard``), so member copies of X never exist on
+                 host.  A sequential-loop reference mode doubles as the
+                 memory-bound fallback.
+  scheduler.py — plans the (k, q) work-unit grid, owns per-unit
+                 checkpoint/resume + retry, runs the per-k reduction
+                 (clustering -> silhouettes -> regression) and the
+                 criterion.  Home of the historical RescalkConfig /
+                 KResult / RescalkResult types.
+  criteria.py  — pluggable k-selection rules: the paper threshold rule,
+                 stability x fit, and a reconstruction-error elbow.
+  report.py    — the JSON sweep artifact (curves, per-unit timings, chosen
+                 k) consumed by benchmarks and CI.
+
+Compat policy: ``repro.core.rescalk`` remains the stable import surface for
+the historical API and delegates here; new code should import from
+``repro.selection`` directly.  Modules in this package import repro.core
+*submodules* only (never the package root) to stay cycle-free.
+"""
+from .types import KResult, RescalkConfig, RescalkResult
+from .criteria import CRITERIA, select
+from .ensemble import (EnsembleResult, member_keys, perturb_blocked,
+                       run_ensemble, run_ensemble_reference)
+from .report import SelectionReport, UnitRecord
+from .scheduler import (SweepInterrupted, SweepScheduler, WorkUnit,
+                        plan_sweep, reduce_k)
+
+__all__ = [
+    "CRITERIA", "select",
+    "EnsembleResult", "member_keys", "perturb_blocked", "run_ensemble",
+    "run_ensemble_reference",
+    "SelectionReport", "UnitRecord",
+    "KResult", "RescalkConfig", "RescalkResult", "SweepInterrupted",
+    "SweepScheduler", "WorkUnit", "plan_sweep", "reduce_k",
+]

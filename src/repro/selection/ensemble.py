@@ -1,0 +1,273 @@
+"""Batched perturbation ensembles — the hot loop of model selection.
+
+The paper calls the r perturbation members of a candidate rank k "naturally
+independent"; the seed code nevertheless ran them as a sequential Python
+loop (one trace/compile/dispatch per member).  This module runs all members
+of one (k, member-set) work unit as **one jitted program**:
+
+  * **Single-host batched** (``mode="batched"``, no mesh) — ``vmap`` of the
+    whole member pipeline (perturb -> init -> MU fori_loop -> normalize ->
+    rel_error) over a leading ensemble axis.  The perturbation is fused
+    into the program: the jitted function takes the *unperturbed* X plus
+    the (r, 2) member keys, so r perturbed copies of X are never
+    materialized on host.  The key discipline is byte-identical to the
+    historical sequential loop (split each member key into (pkey, fkey)),
+    so batched and loop execution agree member-for-member to float
+    tolerance — the parity contract tests/test_selection.py enforces.
+
+  * **Mesh-sharded** (``mesh=...``) — a shard_map program over the
+    ("pod", "data", "model") mesh built from the same per-device MU bodies
+    as the distributed engine (dist.engine.get_mu_iter).  X is replicated
+    across pods and block-sharded over the 2D grid; the member axis shards
+    over the ensemble/pod axis (dist.sharding.ensemble_member_specs); each
+    device perturbs its own X block with ``perturb_shard`` (seed folded
+    from the member id and the device's linear grid index — the paper's
+    per-rank seeding), so again no host-side member copies.
+    ``run_ensemble_reference`` reproduces the exact same noise on a single
+    host via ``perturb_blocked`` for the multi-device parity checks.
+
+  * **Sequential loop** (``mode="loop"``) — the reference path and the
+    memory-bound fallback: the batched program keeps all r perturbed
+    tensors live on device, which for huge (m, n, n) can exceed HBM; the
+    loop bounds residency to one member.
+
+Mesh limitations (ROADMAP open items): dense operands only (BCSR ensemble
+members pending) and ``init="random"`` only (NNDSVD needs a distributed
+eigensolve; randomized_eigh is distMM-compatible but not wired up yet).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.perturb import ensemble_keys, perturb, perturb_shard
+from repro.core.rescal import (EPS_DEFAULT, MU_SCHEDULES, RescalState,
+                               init_factors, normalize, rel_error)
+
+
+class EnsembleResult(NamedTuple):
+    """Factors and errors for the members of one work unit."""
+    A: jax.Array        # (r_unit, n, k)
+    R: jax.Array        # (r_unit, m, k, k)
+    errors: jax.Array   # (r_unit,) rel. error vs the UNperturbed X
+
+
+def member_keys(seed: int, k: int, r: int) -> jax.Array:
+    """The sweep's PRNG discipline: fold the candidate k into the root key,
+    then split one key per member.  Shared by every execution mode (and by
+    the legacy core.rescalk loop), so modes agree draw-for-draw."""
+    root = jax.random.PRNGKey(seed)
+    return ensemble_keys(jax.random.fold_in(root, k), r)
+
+
+def perturb_blocked(key: jax.Array, X: jax.Array, q, grid: tuple[int, int],
+                    delta: float = 0.02) -> jax.Array:
+    """Host-side emulation of the mesh path's shard-local perturbation:
+    split X (m, n, n) into the (gr, gc) device grid and perturb each block
+    with ``perturb_shard`` keyed by (member id q, linear grid index).
+    Produces bit-identical noise to the sharded program, which is what
+    makes mesh-vs-host parity exactly testable."""
+    gr, gc = grid
+    m, n, _ = X.shape
+    nr, nc = n // gr, n // gc
+    rows = []
+    for i in range(gr):
+        cols = []
+        for j in range(gc):
+            blk = X[:, i * nr:(i + 1) * nr, j * nc:(j + 1) * nc]
+            cols.append(perturb_shard(key, blk, q, i * gc + j, delta))
+        rows.append(jnp.concatenate(cols, axis=2))
+    return jnp.concatenate(rows, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Single-host batched program (vmap over the member axis)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "schedule",
+                                             "init", "delta", "eps"))
+def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
+                     init: str, delta: float, eps: float):
+    m, n, _ = X.shape
+    step = MU_SCHEDULES[schedule]
+
+    def one_member(member_key):
+        pkey, fkey = jax.random.split(member_key)
+        X_q = perturb(pkey, X, delta)
+        st = init_factors(fkey, n, m, k, dtype=X.dtype)
+        if init == "nndsvd":
+            from repro.core.nndsvd import nndsvd_init_A
+            st = RescalState(A=nndsvd_init_A(X_q, k).astype(X.dtype),
+                             R=st.R, step=st.step)
+
+        def body(_, s):
+            return step(X_q, s, eps)
+
+        st = jax.lax.fori_loop(0, iters, body, st)
+        st = normalize(st)
+        return st.A, st.R, rel_error(X, st.A, st.R)
+
+    A, R, errs = jax.vmap(one_member)(keys)
+    return A, R, errs
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded program (shard_map over pod x data x model)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
+                       schedule: str = "batched", delta: float = 0.02,
+                       iters: int = 200, init: str = "random",
+                       dtype=jnp.float32, key_ndim: int = 2):
+    """Build the jitted sharded ensemble program ``(X, keys, ids) ->
+    (A_ens, R_ens, errs)`` for `r_run` members on `mesh`.
+
+    Memoized on exactly the fields the compiled program depends on (not a
+    whole config object — seed / k-range / regress_iters churn would
+    otherwise defeat the cache): a sweep split into many same-shaped units
+    — and every retry — reuses one compiled program instead of re-tracing
+    per scheduler call.
+
+    Per-member init draws the global (n, k) factor on every device and
+    slices the local row block — O(n k) redundant work that keeps the init
+    bit-identical to the host reference; replacing it with per-shard init
+    is a ROADMAP open item for exascale n.
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.dist import sharding as sh
+    from repro.dist.engine import (DistRescalConfig, get_mu_iter,
+                                   local_normalize, local_rel_error)
+
+    if init != "random":
+        raise NotImplementedError(
+            "mesh ensemble supports init='random' only (distributed NNDSVD "
+            "is a ROADMAP open item); use mode='loop' for nndsvd")
+    gr = mesh.shape[sh.ROW_AXIS]
+    gc = mesh.shape[sh.COL_AXIS]
+    if n % gr or n % gc:
+        raise ValueError(f"n={n} must divide the ({gr}, {gc}) grid")
+    pods = dict(mesh.shape).get(sh.ENSEMBLE_AXIS, 1)
+    if r_run % pods:
+        raise ValueError(f"r_run={r_run} members are not divisible by "
+                         f"pods={pods} (members shard evenly over the "
+                         f"ensemble axis)")
+
+    dcfg = DistRescalConfig(schedule=schedule)
+    it = get_mu_iter("dense", schedule)
+    specs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
+    n_loc = n // gr
+
+    def local(Xl, keys_l, ids_l):
+        i = jax.lax.axis_index(sh.ROW_AXIS)
+        j = jax.lax.axis_index(sh.COL_AXIS)
+        lin = i * gc + j
+
+        def one_member(mkey, q):
+            pkey, fkey = jax.random.split(mkey)
+            X_q = perturb_shard(pkey, Xl, q, lin, delta)
+            st0 = init_factors(fkey, n, m, k, dtype=dtype)
+            Ai = jax.lax.dynamic_slice_in_dim(st0.A, i * n_loc, n_loc, axis=0)
+
+            def body(_, c):
+                return it(X_q, c[0], c[1], dcfg)
+
+            Ai, R = jax.lax.fori_loop(0, iters, body, (Ai, st0.R))
+            Ai, R = local_normalize(Ai, R)
+            return Ai, R, local_rel_error(Xl, Ai, R)
+
+        return jax.vmap(one_member)(keys_l, ids_l)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(specs["X"], specs["keys"], specs["ids"]),
+        out_specs=(specs["A"], specs["R"], specs["err"]),
+        check_rep=False)
+    return jax.jit(sharded)
+
+
+# ---------------------------------------------------------------------------
+# Sequential reference loop (and the memory-bound fallback)
+# ---------------------------------------------------------------------------
+
+def _loop_members(X, keys, members: Sequence[int], k: int, cfg,
+                  grid: tuple[int, int] | None = None,
+                  runner=None) -> EnsembleResult:
+    # Lazy import (runtime, cycle-safe): the per-member factorization body
+    # is core.rescalk's default_member_runner — one init/MU discipline, not
+    # a second copy that could drift from the compat path.  `runner`
+    # overrides it for the legacy custom-member_runner path, which
+    # delegates here so the split/perturb key discipline has ONE home.
+    if runner is None:
+        from repro.core.rescalk import default_member_runner
+        runner = default_member_runner
+    A_l, R_l, errs = [], [], []
+    for mkey, q in zip(keys, members):
+        pkey, fkey = jax.random.split(mkey)
+        if grid is None:
+            X_q = perturb(pkey, X, cfg.perturbation_delta)
+        else:
+            X_q = perturb_blocked(pkey, X, q, grid, cfg.perturbation_delta)
+        state = runner(X_q, k, fkey, cfg)
+        A_l.append(state.A)
+        R_l.append(state.R)
+        errs.append(rel_error(X, state.A, state.R))
+    return EnsembleResult(A=jnp.stack(A_l), R=jnp.stack(R_l),
+                          errors=jnp.stack(errs))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
+                 mesh=None, mode: str = "batched") -> EnsembleResult:
+    """Run the perturbation-ensemble members of candidate rank k.
+
+    `cfg` is a RescalkConfig-shaped object (duck-typed: n_perturbations,
+    perturbation_delta, rescal_iters, schedule, init, seed).  `members`
+    selects a subset of the r member ids (a scheduler work unit); default
+    all.  `mesh` switches to the sharded program; `mode` selects batched
+    vs sequential-loop execution on a single host.
+    """
+    r = cfg.n_perturbations
+    members = tuple(members) if members is not None else tuple(range(r))
+    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    if mesh is not None:
+        if mode != "batched":
+            raise ValueError(
+                f"mode={mode!r} is host-only; the mesh path is always the "
+                f"batched sharded program (drop mesh= for the sequential "
+                f"loop)")
+        m, n, _ = X.shape
+        prog = make_mesh_ensemble(
+            mesh, k=k, n=n, m=m, r_run=len(members),
+            schedule=cfg.schedule, delta=cfg.perturbation_delta,
+            iters=cfg.rescal_iters, init=cfg.init, dtype=X.dtype,
+            key_ndim=keys.ndim)
+        ids = jnp.asarray(members, dtype=jnp.int32)
+        A, R, errs = prog(X, keys, ids)
+        return EnsembleResult(A=A, R=R, errors=errs)
+    if mode == "batched":
+        A, R, errs = _batched_members(
+            X, keys, k=k, iters=cfg.rescal_iters, schedule=cfg.schedule,
+            init=cfg.init, delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+        return EnsembleResult(A=A, R=R, errors=errs)
+    if mode == "loop":
+        return _loop_members(X, keys, members, k, cfg)
+    raise ValueError(f"unknown ensemble mode {mode!r}")
+
+
+def run_ensemble_reference(X, k: int, cfg, *, grid: tuple[int, int],
+                           members: Sequence[int] | None = None
+                           ) -> EnsembleResult:
+    """Single-host sequential run with the mesh path's blocked perturbation
+    — the oracle for mesh-vs-host parity tests (same noise by
+    construction)."""
+    r = cfg.n_perturbations
+    members = tuple(members) if members is not None else tuple(range(r))
+    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    return _loop_members(X, keys, members, k, cfg, grid=grid)

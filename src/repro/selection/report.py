@@ -1,0 +1,76 @@
+"""Selection-run artifacts: the JSON report consumed by benchmarks and CI.
+
+One sweep -> one ``SelectionReport``: the per-k silhouette/error curves,
+the chosen k and criterion, and one record per (k, q) work unit with its
+wall-clock, retry count and whether it was reused from a checkpoint.  The
+report is the machine-readable face of the sweep — benchmarks diff the
+timings across engine modes, CI asserts the resume behaviour, and the
+criteria registry can re-select k from the stored curves without re-running
+anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from . import criteria
+
+
+@dataclasses.dataclass
+class UnitRecord:
+    """Execution record for one (k, members) work unit."""
+    uid: str
+    k: int
+    members: list[int]
+    seconds: float
+    reused: bool
+    retries: int
+
+
+@dataclasses.dataclass
+class SelectionReport:
+    ks: list[int]
+    s_min: list[float]
+    s_mean: list[float]
+    rel_err: list[float]
+    k_opt: int
+    criterion: str
+    mode: str                      # "batched" | "loop"
+    n_perturbations: int
+    units: list[UnitRecord] = dataclasses.field(default_factory=list)
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def total_seconds(self) -> float:
+        return float(sum(u.seconds for u in self.units))
+
+    @property
+    def n_reused(self) -> int:
+        return sum(1 for u in self.units if u.reused)
+
+    def reselect(self, criterion: str, *, sil_threshold: float = 0.75) -> int:
+        """Re-run a (possibly different) criterion on the stored curves."""
+        return criteria.select(criterion, self.ks, self.s_min, self.s_mean,
+                               self.rel_err, sil_threshold=sil_threshold)
+
+    # -- IO -----------------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["total_seconds"] = self.total_seconds
+        d["n_reused"] = self.n_reused
+        return d
+
+    def save(self, path: str) -> str:
+        from repro.ckpt import atomic_json_dump
+        return atomic_json_dump(path, self.to_dict(), indent=1, default=str)
+
+    @classmethod
+    def load(cls, path: str) -> "SelectionReport":
+        with open(path) as f:
+            d = json.load(f)
+        d.pop("total_seconds", None)
+        d.pop("n_reused", None)
+        d["units"] = [UnitRecord(**u) for u in d.get("units", [])]
+        return cls(**d)

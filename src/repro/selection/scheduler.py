@@ -1,0 +1,345 @@
+"""The sweep scheduler — plans, executes, checkpoints the (k, q) grid.
+
+Model selection (paper Alg. 1) is a grid of independent work units: for
+every candidate rank k, r perturbation members q.  This module owns that
+grid end to end:
+
+  * ``plan_sweep`` lays the units out deterministically — in "batched"
+    mode one unit covers a contiguous member group per k (grouped with
+    ``dist.elastic.ensemble_plan`` when the sweep is split across
+    ``n_pods`` hosts); in "loop" mode every (k, q) pair is its own unit
+    (finest checkpoint granularity, the sequential reference).
+  * ``SweepScheduler`` executes units via selection/ensemble.py (batched
+    vmap program, mesh-sharded program, or sequential loop), with
+    per-unit checkpoint/resume (repro.ckpt) and bounded retry.  Unit
+    checkpoint tags derive from the (k, members) identity — NOT from PRNG
+    key internals, which were collision-prone and version-dependent (the
+    bug this subsystem absorbs from the old launch/rescalk_run closure).
+  * After all units of a k complete, the per-k reduction (custom
+    clustering -> silhouettes -> R regression -> reconstruction error)
+    runs once, and the pluggable criterion (selection/criteria.py) picks
+    k_opt.  A ``SelectionReport`` (selection/report.py) records curves,
+    per-unit timings and reuse flags.
+
+The historical ``repro.core.rescalk`` types (RescalkConfig / KResult /
+RescalkResult) live in selection/types.py (dependency-free, cycle-safe)
+and are re-exported both here and by the core compatibility wrapper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro import ckpt
+from repro.core.clustering import ClusterResult, custom_cluster
+from repro.core.regression import regress_R
+from repro.core.rescal import rel_error
+from repro.core.silhouette import SilhouetteResult, silhouettes
+from repro.dist.elastic import ensemble_plan
+
+from . import criteria
+from .ensemble import EnsembleResult, run_ensemble
+from .report import SelectionReport, UnitRecord
+from .types import KResult, RescalkConfig, RescalkResult
+
+__all__ = ["KResult", "RescalkConfig", "RescalkResult", "SweepInterrupted",
+           "SweepScheduler", "UnitOutcome", "WorkUnit", "plan_sweep",
+           "reduce_k"]
+
+
+# ---------------------------------------------------------------------------
+# Work-unit planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """One schedulable cell of the (k, q) grid: a contiguous member group
+    of one candidate rank.  ``uid`` is the checkpoint tag — a pure function
+    of the unit's position in the grid, stable across JAX versions, PRNG
+    implementations and restarts."""
+    index: int
+    k: int
+    members: tuple[int, ...]
+
+    @property
+    def uid(self) -> str:
+        return f"unit_k{self.k}_q{self.members[0]}-{self.members[-1]}"
+
+
+def plan_sweep(cfg: RescalkConfig, *, mode: str = "batched",
+               n_pods: int = 1) -> list[WorkUnit]:
+    """Deterministic unit grid for the sweep.  "batched": members of each k
+    grouped contiguously over `n_pods` chunks (dist.elastic.ensemble_plan);
+    "loop": one unit per (k, q)."""
+    if mode not in ("batched", "loop"):
+        raise ValueError(f"unknown sweep mode {mode!r}")
+    units: list[WorkUnit] = []
+    for k in cfg.ks:
+        if mode == "loop":
+            groups = [[q] for q in range(cfg.n_perturbations)]
+        else:
+            groups = ensemble_plan(cfg.n_perturbations, n_pods)
+        for g in groups:
+            if not g:
+                continue
+            units.append(WorkUnit(index=len(units), k=k, members=tuple(g)))
+    return units
+
+
+def reduce_k(X, cfg: RescalkConfig, k: int, A_ens, R_ens,
+             member_errors: np.ndarray) -> KResult:
+    """The per-k reduction of Alg. 1: align the ensemble (custom
+    clustering), score stability (silhouettes), regress R against the
+    median factor, and measure the robust reconstruction error.  Shared by
+    the scheduler and the legacy core.rescalk loop so the two paths cannot
+    drift."""
+    clus: ClusterResult = custom_cluster(A_ens, R_ens)
+    sil: SilhouetteResult = silhouettes(clus.A_aligned)
+    R_reg = regress_R(X, clus.A_median, iters=cfg.regress_iters)
+    err = float(rel_error(X, clus.A_median, R_reg))
+    return KResult(
+        k=k, s_min=float(sil.s_min), s_mean=float(sil.s_mean),
+        rel_err=err, A_median=np.asarray(clus.A_median),
+        R_regress=np.asarray(R_reg),
+        member_errors=np.asarray(member_errors))
+
+
+# ---------------------------------------------------------------------------
+# The scheduler
+# ---------------------------------------------------------------------------
+
+class SweepInterrupted(RuntimeError):
+    """Raised when ``stop_after_units`` halts the sweep mid-run (the
+    deterministic stand-in for a kill: completed units are checkpointed,
+    the rest are not)."""
+
+    def __init__(self, executed: int, completed: int, total: int,
+                 resumable: bool = True):
+        self.executed = executed     # units computed this run
+        self.completed = completed   # units done overall (incl. reused)
+        self.total = total
+        self.resumable = resumable   # False when no ckpt_dir was set
+        tail = ("rerun with the same ckpt_dir to resume" if resumable else
+                "no ckpt_dir was set, so completed units were NOT "
+                "checkpointed and a rerun recomputes everything")
+        super().__init__(f"sweep interrupted after {executed} computed "
+                         f"units ({completed}/{total} done; {tail})")
+
+
+@dataclasses.dataclass
+class UnitOutcome:
+    unit: WorkUnit
+    result: EnsembleResult | None   # dropped (None) once its k is reduced
+    seconds: float
+    reused: bool
+    retries: int
+
+
+class SweepScheduler:
+    """Drives the (k, q) unit grid over a tensor X.
+
+    Parameters
+    ----------
+    cfg : RescalkConfig
+    mode : "batched" (one program per unit, members vmapped) | "loop"
+    mesh : optional jax Mesh — routes units through the sharded ensemble
+        program (members spread over the pod/ensemble axis when present)
+    ckpt_dir : per-unit checkpoint root; units found there are reused, not
+        recomputed (the resume contract CI asserts)
+    criterion : key into selection.criteria.CRITERIA
+    n_pods : split each k's members into this many host-level units
+    max_retries : per-unit re-execution budget on failure
+    stop_after_units : compute at most this many units (checked before
+        each execution; 0 = resume-only), then raise SweepInterrupted —
+        the testing/CI hook for kill-and-resume drills
+    failure_injector : optional fn(unit, attempt) called before each
+        execution attempt — tests use it to inject faults and count runs
+    report_path : write the SelectionReport JSON here after the sweep
+    """
+
+    def __init__(self, cfg: RescalkConfig, *, mode: str = "batched",
+                 mesh=None, ckpt_dir: str | None = None,
+                 criterion: str = "threshold", n_pods: int = 1,
+                 max_retries: int = 1, stop_after_units: int | None = None,
+                 failure_injector: Callable | None = None,
+                 report_path: str | None = None, verbose: bool = False):
+        criteria.require(criterion)
+        if mesh is not None and mode != "batched":
+            raise ValueError(
+                "mode='loop' is host-only (the sequential reference / "
+                "memory-bound fallback); drop mesh= or use mode='batched'")
+        self.cfg = cfg
+        self.mode = mode
+        self.mesh = mesh
+        self.ckpt_dir = ckpt_dir
+        self.criterion = criterion
+        self.max_retries = max_retries
+        self.stop_after_units = stop_after_units
+        self.failure_injector = failure_injector
+        self.report_path = report_path
+        self.verbose = verbose
+        self.units = plan_sweep(cfg, mode=mode, n_pods=n_pods)
+        self.report: SelectionReport | None = None
+
+    # -- checkpoint-config guard --------------------------------------------
+
+    def _fingerprint(self, X) -> dict:
+        """What a unit checkpoint's validity depends on: the full sweep
+        config, the execution mode (batched/loop agree to tolerance but the
+        mesh's blocked noise does not), the mesh layout, and the operand
+        shape.  Unit tags alone are deliberately config-blind (pure grid
+        identity), so this guard is what stops a resumed sweep from
+        silently reusing units computed under a different configuration."""
+        fp = dataclasses.asdict(self.cfg)
+        # cheap content digest: same-shape-different-data X must also
+        # invalidate the dir (two moments catch permutations too).
+        # Computed in place — works for device arrays without a host copy.
+        fp.update(mode=self.mode, x_shape=list(X.shape),
+                  x_dtype=str(X.dtype),
+                  x_sum=f"{float(X.sum()):.6e}",
+                  x_sumsq=f"{float((X * X).sum()):.6e}",
+                  mesh=None if self.mesh is None else
+                  {str(a): int(s) for a, s in dict(self.mesh.shape).items()})
+        return fp
+
+    def _check_ckpt_config(self, X) -> None:
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        path = os.path.join(self.ckpt_dir, "sweep.json")
+        fp = self._fingerprint(X)
+        if os.path.exists(path):
+            with open(path) as f:
+                stored = json.load(f)
+            if stored != fp:
+                bad = sorted(k for k in set(stored) | set(fp)
+                             if stored.get(k) != fp.get(k))
+                raise ValueError(
+                    f"checkpoint dir {self.ckpt_dir!r} was written by a "
+                    f"different sweep configuration (mismatched: {bad}); "
+                    f"resuming would silently reuse stale units — use a "
+                    f"fresh ckpt_dir or delete it")
+            return
+        ckpt.atomic_json_dump(path, fp, indent=1)
+
+    # -- unit execution -----------------------------------------------------
+
+    def _unit_like(self, X, unit: WorkUnit) -> dict:
+        m, n, _ = X.shape
+        r_u, k = len(unit.members), unit.k
+        sds = jax.ShapeDtypeStruct
+        return {"A": sds((r_u, n, k), X.dtype),
+                "R": sds((r_u, m, k, k), X.dtype),
+                "errors": sds((r_u,), X.dtype)}
+
+    def _try_restore(self, X, unit: WorkUnit) -> UnitOutcome | None:
+        if not self.ckpt_dir:
+            return None
+        tag = os.path.join(self.ckpt_dir, unit.uid)
+        if ckpt.latest_step(tag) is None:
+            return None
+        tree, _ = ckpt.restore(tag, self._unit_like(X, unit))
+        if self.verbose:
+            print(f"  [ckpt] reused {unit.uid}")
+        return UnitOutcome(unit=unit, result=EnsembleResult(**tree),
+                           seconds=0.0, reused=True, retries=0)
+
+    def _execute_unit(self, X, unit: WorkUnit) -> UnitOutcome:
+        attempt = 0
+        while True:
+            try:
+                if self.failure_injector is not None:
+                    self.failure_injector(unit, attempt)
+                t0 = time.perf_counter()
+                res = run_ensemble(X, unit.k, self.cfg, members=unit.members,
+                                   mesh=self.mesh, mode=self.mode)
+                jax.block_until_ready(res.A)
+                dt = time.perf_counter() - t0
+                break
+            except Exception:
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise
+                if self.verbose:
+                    print(f"  [retry] {unit.uid} attempt {attempt}")
+        if self.ckpt_dir:
+            ckpt.save(os.path.join(self.ckpt_dir, unit.uid), 0,
+                      res._asdict())
+        return UnitOutcome(unit=unit, result=res, seconds=dt, reused=False,
+                           retries=attempt)
+
+    # -- the sweep ----------------------------------------------------------
+
+    def run(self, X) -> RescalkResult:
+        cfg = self.cfg
+        ks = cfg.ks
+        if self.ckpt_dir:
+            self._check_ckpt_config(X)
+        expected = {k: sum(1 for u in self.units if u.k == k) for k in ks}
+        pending: dict[int, list[UnitOutcome]] = {k: [] for k in ks}
+        per_k: dict[int, KResult] = {}
+        records: list[UnitRecord] = []
+        executed = 0
+        for pos, unit in enumerate(self.units):
+            out = self._try_restore(X, unit)
+            if out is None:
+                # cap checked BEFORE computing, so stop_after_units=N
+                # really means "compute at most N" (0 = resume-only)
+                if (self.stop_after_units is not None
+                        and executed >= self.stop_after_units):
+                    raise SweepInterrupted(executed, pos, len(self.units),
+                                           resumable=bool(self.ckpt_dir))
+                out = self._execute_unit(X, unit)
+                executed += 1
+            pending[unit.k].append(out)
+            if len(pending[unit.k]) < expected[unit.k]:
+                continue
+            # last unit of this k: reduce now and DROP the factor arrays —
+            # peak memory stays one k's ensemble, not the whole sweep's
+            k = unit.k
+            outs = sorted(pending.pop(k), key=lambda o: o.unit.members[0])
+            A_ens = np.concatenate([np.asarray(o.result.A) for o in outs])
+            R_ens = np.concatenate([np.asarray(o.result.R) for o in outs])
+            errs = np.concatenate([np.asarray(o.result.errors)
+                                   for o in outs])
+            for o in outs:
+                o.result = None
+            per_k[k] = reduce_k(X, cfg, k, A_ens, R_ens, errs)
+            records.extend(
+                UnitRecord(uid=o.unit.uid, k=k, members=list(o.unit.members),
+                           seconds=o.seconds, reused=o.reused,
+                           retries=o.retries) for o in outs)
+            if self.verbose:
+                r = per_k[k]
+                print(f"[sweep] k={k:3d} s_min={r.s_min:6.3f} "
+                      f"s_mean={r.s_mean:6.3f} err={r.rel_err:7.4f}")
+
+        s_min = np.array([per_k[k].s_min for k in ks])
+        s_mean = np.array([per_k[k].s_mean for k in ks])
+        rel = np.array([per_k[k].rel_err for k in ks])
+        k_opt = criteria.select(self.criterion, ks, s_min, s_mean, rel,
+                                sil_threshold=cfg.sil_threshold)
+        result = RescalkResult(ks=np.asarray(ks), s_min=s_min, s_mean=s_mean,
+                               rel_err=rel, k_opt=k_opt, per_k=per_k)
+
+        meta = {"n_units": len(self.units)}
+        if self.mesh is not None:
+            meta["mesh"] = {str(a): int(s)
+                            for a, s in dict(self.mesh.shape).items()}
+        self.report = SelectionReport(
+            ks=[int(k) for k in ks], s_min=[float(v) for v in s_min],
+            s_mean=[float(v) for v in s_mean],
+            rel_err=[float(v) for v in rel], k_opt=int(k_opt),
+            criterion=self.criterion, mode=self.mode,
+            n_perturbations=cfg.n_perturbations, units=records, meta=meta)
+        if self.report_path:
+            self.report.save(self.report_path)
+        if self.verbose and self.ckpt_dir:
+            n_reused = self.report.n_reused
+            print(f"[sweep] resumed {n_reused}/{len(self.units)} units from "
+                  f"checkpoints in {self.ckpt_dir}")
+        return result

@@ -225,6 +225,51 @@ def check_ef_psum():
     assert c.q.dtype == jnp.int8
 
 
+def check_selection_mesh_ensemble():
+    """The selection subsystem's mesh-sharded ensemble program (members
+    over the pod axis, perturbation fused in via perturb_shard) must match
+    the single-host reference that replays the same blocked noise — and a
+    full sweep through the scheduler must select the same k either way."""
+    from repro.selection import ensemble as ens
+    from repro.selection import scheduler as sched_mod
+    from repro.selection.scheduler import RescalkConfig, SweepScheduler
+
+    key = jax.random.PRNGKey(5)
+    X = lowrank(key, n=32, m=2, k=3)
+    mesh = mesh_pod()                      # (pod, data, model) = (2, 2, 2)
+    cfg = RescalkConfig(k_min=3, k_max=3, n_perturbations=4,
+                        rescal_iters=40, init="random", seed=4)
+
+    res_mesh = ens.run_ensemble(X, 3, cfg, mesh=mesh)
+    res_ref = ens.run_ensemble_reference(X, 3, cfg, grid=(2, 2))
+    np.testing.assert_allclose(res_mesh.errors, res_ref.errors,
+                               rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(res_mesh.A, res_ref.A, rtol=5e-4, atol=1e-5)
+    np.testing.assert_allclose(res_mesh.R, res_ref.R, rtol=5e-4, atol=1e-5)
+
+    # full sweep: mesh-sharded units vs a host scheduler replaying the
+    # identical blocked noise (monkeypatched ensemble) -> same k_opt and
+    # member errors
+    cfg2 = RescalkConfig(k_min=2, k_max=4, n_perturbations=4,
+                         rescal_iters=60, init="random", seed=4)
+    r_mesh = SweepScheduler(cfg2, mesh=mesh).run(X)
+
+    orig = sched_mod.run_ensemble
+    sched_mod.run_ensemble = (
+        lambda X_, k_, cfg_, members=None, mesh=None, mode="batched":
+        ens.run_ensemble_reference(X_, k_, cfg_, grid=(2, 2),
+                                   members=members))
+    try:
+        r_host = SweepScheduler(cfg2).run(X)
+    finally:
+        sched_mod.run_ensemble = orig
+    assert r_mesh.k_opt == r_host.k_opt, (r_mesh.summary(), r_host.summary())
+    for k in cfg2.ks:
+        np.testing.assert_allclose(r_mesh.per_k[k].member_errors,
+                                   r_host.per_k[k].member_errors,
+                                   rtol=5e-4, atol=1e-5)
+
+
 def check_clustering_sharded_similarity():
     """The clustering similarity einsum under pjit == host einsum."""
     from repro.core.clustering import _similarity

@@ -13,6 +13,7 @@ CHECKS = [
     "dist_rescal_equals_single",
     "dist_rescal_sparse_equals_dense",
     "ensemble_step_pods",
+    "selection_mesh_ensemble",
     "fused_engine_matches_reference",
     "sharded_train_matches_single",
     "sharded_decode_matches_single",

@@ -1,0 +1,304 @@
+"""repro.selection: sweep planning, batched/loop parity, criteria edges,
+checkpoint/resume, retry, and the JSON report."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.selection import (CRITERIA, RescalkConfig, SelectionReport,
+                             SweepInterrupted, SweepScheduler, WorkUnit,
+                             criteria, plan_sweep, run_ensemble)
+from repro.core.rescalk import rescalk
+
+
+def small_tensor(n=24, m=2, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.uniform(key, (n, k), minval=0.1, maxval=1.0)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (m, k, k),
+                           minval=0.1, maxval=1.0)
+    return jnp.einsum("ia,mab,jb->mij", A, R, A)
+
+
+SMALL_CFG = RescalkConfig(k_min=2, k_max=4, n_perturbations=4,
+                          rescal_iters=80, regress_iters=30, seed=3)
+
+
+class TestPlanSweep:
+    def test_batched_one_unit_per_k(self):
+        units = plan_sweep(SMALL_CFG)
+        assert len(units) == 3
+        assert [u.k for u in units] == [2, 3, 4]
+        assert all(u.members == (0, 1, 2, 3) for u in units)
+        assert [u.index for u in units] == [0, 1, 2]
+
+    def test_loop_one_unit_per_member(self):
+        units = plan_sweep(SMALL_CFG, mode="loop")
+        assert len(units) == 3 * 4
+        assert {(u.k, u.members) for u in units} == {
+            (k, (q,)) for k in (2, 3, 4) for q in range(4)}
+
+    def test_pods_split_members(self):
+        units = plan_sweep(SMALL_CFG, n_pods=2)
+        assert len(units) == 6
+        per_k = {k: sorted(m for u in units if u.k == k for m in u.members)
+                 for k in (2, 3, 4)}
+        assert all(v == [0, 1, 2, 3] for v in per_k.values())
+
+    def test_uid_is_pure_grid_identity(self):
+        # the checkpoint tag must derive from the (k, member-range) cell,
+        # never from PRNG key internals (the old rescalk_run bug)
+        u = WorkUnit(index=7, k=5, members=(2, 3))
+        assert u.uid == "unit_k5_q2-3"
+        assert plan_sweep(SMALL_CFG) == plan_sweep(SMALL_CFG)
+
+    def test_unknown_mode(self):
+        with pytest.raises(ValueError):
+            plan_sweep(SMALL_CFG, mode="warp")
+
+
+class TestCriteria:
+    ks = [2, 3, 4, 5]
+
+    def test_threshold_prefers_largest_stable(self):
+        s = np.array([0.99, 0.98, 0.97, 0.3])
+        e = np.array([0.5, 0.2, 0.05, 0.04])
+        assert criteria.select("threshold", self.ks, s, None, e) == 4
+
+    def test_threshold_fallback_when_nothing_stable(self):
+        s = np.array([0.5, 0.4, 0.3, 0.2])
+        e = np.array([0.4, 0.1, 0.3, 0.3])
+        got = criteria.select("threshold", self.ks, s, None, e,
+                              sil_threshold=0.9)
+        assert got == criteria.select("stability_fit", self.ks, s, None, e)
+        assert got == 3                   # argmax(s_min - rel_err)
+
+    def test_single_candidate_every_criterion(self):
+        for name in CRITERIA:
+            assert criteria.select(name, [4], np.array([0.1]), None,
+                                   np.array([0.9])) == 4
+
+    def test_elbow_finds_knee(self):
+        ks = [2, 3, 4, 5, 6, 7]
+        e = np.array([1.0, 0.55, 0.12, 0.10, 0.09, 0.085])
+        s = np.zeros(6)                   # stability irrelevant to the knee
+        assert criteria.select("elbow", ks, s, None, e) == 4
+
+    def test_elbow_monotone_linear_falls_back(self):
+        ks = [2, 3, 4, 5]
+        e = np.array([0.8, 0.6, 0.4, 0.2])       # no knee
+        s = np.array([0.9, 0.9, 0.9, 0.1])
+        assert criteria.select("elbow", ks, s, None, e) == \
+            criteria.select("threshold", ks, s, None, e) == 4
+
+    def test_elbow_increasing_curve_falls_back(self):
+        ks = [2, 3, 4]
+        e = np.array([0.1, 0.2, 0.3])
+        s = np.array([0.9, 0.8, 0.2])
+        assert criteria.select("elbow", ks, s, None, e) == \
+            criteria.select("threshold", ks, s, None, e)
+
+    def test_unknown_criterion_raises(self):
+        with pytest.raises(ValueError, match="unknown selection criterion"):
+            criteria.select("vibes", self.ks, np.zeros(4), None, np.zeros(4))
+        with pytest.raises(ValueError):
+            SweepScheduler(SMALL_CFG, criterion="vibes")
+
+
+class TestBatchedLoopParity:
+    """The acceptance contract: one batched program == the sequential loop,
+    member for member, and the same k_opt."""
+
+    def test_member_errors_match(self):
+        X = small_tensor()
+        rb = run_ensemble(X, 3, SMALL_CFG, mode="batched")
+        rl = run_ensemble(X, 3, SMALL_CFG, mode="loop")
+        np.testing.assert_allclose(rb.errors, rl.errors, rtol=1e-3,
+                                   atol=1e-5)
+        np.testing.assert_allclose(rb.A, rl.A, rtol=5e-3, atol=1e-4)
+        np.testing.assert_allclose(rb.R, rl.R, rtol=5e-3, atol=1e-4)
+
+    def test_member_subset_matches_full(self):
+        X = small_tensor()
+        full = run_ensemble(X, 3, SMALL_CFG, mode="batched")
+        part = run_ensemble(X, 3, SMALL_CFG, members=(1, 2), mode="batched")
+        np.testing.assert_allclose(part.errors, full.errors[1:3], rtol=1e-5)
+
+    def test_full_sweep_same_k_opt(self):
+        X = small_tensor()
+        res_b = rescalk(X, SMALL_CFG)
+        res_l = rescalk(X, SMALL_CFG, mode="loop")
+        assert res_b.k_opt == res_l.k_opt
+        for k in SMALL_CFG.ks:
+            np.testing.assert_allclose(res_b.per_k[k].member_errors,
+                                       res_l.per_k[k].member_errors,
+                                       rtol=1e-3, atol=1e-5)
+        np.testing.assert_allclose(res_b.s_min, res_l.s_min, atol=5e-3)
+
+    def test_nndsvd_init_parity(self):
+        X = small_tensor()
+        cfg = RescalkConfig(k_min=3, k_max=3, n_perturbations=3,
+                            rescal_iters=60, init="nndsvd", seed=5)
+        rb = run_ensemble(X, 3, cfg, mode="batched")
+        rl = run_ensemble(X, 3, cfg, mode="loop")
+        np.testing.assert_allclose(rb.errors, rl.errors, rtol=1e-3,
+                                   atol=1e-5)
+
+
+class TestSchedulerResume:
+    CFG = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                        rescal_iters=30, regress_iters=20, seed=1)
+
+    def test_interrupt_then_resume_skips_completed_units(self, tmp_path):
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(SweepInterrupted) as ei:
+            SweepScheduler(self.CFG, ckpt_dir=d, stop_after_units=1).run(X)
+        assert ei.value.executed == 1
+
+        executed = []
+        sched = SweepScheduler(
+            self.CFG, ckpt_dir=d,
+            failure_injector=lambda unit, attempt: executed.append(unit.uid))
+        res = sched.run(X)
+        # 2 units total; the checkpointed one must NOT be recomputed
+        assert len(executed) == 1
+        assert sched.report.n_reused == 1
+        # resumed result identical to an uncheckpointed run (float32
+        # checkpoints round-trip exactly)
+        fresh = SweepScheduler(self.CFG).run(X)
+        assert res.k_opt == fresh.k_opt
+        for k in self.CFG.ks:
+            np.testing.assert_array_equal(res.per_k[k].member_errors,
+                                          fresh.per_k[k].member_errors)
+
+    def test_resume_with_loop_granularity(self, tmp_path):
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(SweepInterrupted):
+            SweepScheduler(self.CFG, mode="loop", ckpt_dir=d,
+                           stop_after_units=3).run(X)
+        executed = []
+        sched = SweepScheduler(
+            self.CFG, mode="loop", ckpt_dir=d,
+            failure_injector=lambda u, a: executed.append(u.uid))
+        sched.run(X)
+        assert len(executed) == 4 - 3     # 2 ks x 2 members, 3 done
+
+    def test_stop_on_final_unit_completes(self, tmp_path):
+        X = small_tensor()
+        res = SweepScheduler(self.CFG, ckpt_dir=str(tmp_path / "c"),
+                             stop_after_units=2).run(X)
+        assert res.k_opt in self.CFG.ks   # no interrupt: nothing remained
+
+    def test_config_change_invalidates_ckpt_dir(self, tmp_path):
+        """Unit tags are config-blind by design; the sweep.json fingerprint
+        is what stops a resume from silently reusing stale units."""
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(SweepInterrupted):
+            SweepScheduler(self.CFG, ckpt_dir=d, stop_after_units=1).run(X)
+        changed = dataclasses.replace(self.CFG, rescal_iters=300)
+        with pytest.raises(ValueError,
+                           match="different sweep configuration"):
+            SweepScheduler(changed, ckpt_dir=d).run(X)
+        # a different same-shape tensor must invalidate the dir too
+        with pytest.raises(ValueError,
+                           match="different sweep configuration"):
+            SweepScheduler(self.CFG, ckpt_dir=d).run(small_tensor(seed=9))
+        # the unchanged config + tensor still resumes fine
+        res = SweepScheduler(self.CFG, ckpt_dir=d).run(X)
+        assert res.k_opt in self.CFG.ks
+
+    def test_mesh_with_loop_mode_rejected(self):
+        with pytest.raises(ValueError, match="host-only"):
+            SweepScheduler(self.CFG, mode="loop", mesh=object())
+
+
+class TestRetry:
+    CFG = RescalkConfig(k_min=2, k_max=2, n_perturbations=2,
+                        rescal_iters=30, regress_iters=20, seed=1)
+
+    def test_transient_failure_is_retried(self):
+        X = small_tensor()
+        boom = {"armed": True}
+
+        def injector(unit, attempt):
+            if boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("injected")
+
+        sched = SweepScheduler(self.CFG, max_retries=1,
+                               failure_injector=injector)
+        res = sched.run(X)
+        assert sched.report.units[0].retries == 1
+        clean = SweepScheduler(self.CFG).run(X)
+        np.testing.assert_array_equal(res.per_k[2].member_errors,
+                                      clean.per_k[2].member_errors)
+
+    def test_budget_exhausted_raises(self):
+        X = small_tensor()
+
+        def injector(unit, attempt):
+            raise RuntimeError("persistent")
+
+        with pytest.raises(RuntimeError, match="persistent"):
+            SweepScheduler(self.CFG, max_retries=2,
+                           failure_injector=injector).run(X)
+
+
+class TestReport:
+    def test_report_json_roundtrip(self, tmp_path):
+        X = small_tensor()
+        path = str(tmp_path / "sel" / "report.json")
+        sched = SweepScheduler(SMALL_CFG, report_path=path)
+        res = sched.run(X)
+
+        with open(path) as f:
+            raw = json.load(f)
+        assert raw["k_opt"] == res.k_opt
+        assert raw["criterion"] == "threshold"
+        assert len(raw["units"]) == len(sched.units)
+        assert all(not u["reused"] for u in raw["units"])
+        assert raw["total_seconds"] > 0
+
+        rep = SelectionReport.load(path)
+        assert rep.k_opt == res.k_opt
+        assert rep.ks == list(SMALL_CFG.ks)
+        assert rep.n_reused == 0
+        # criteria are re-runnable from the stored curves alone
+        assert rep.reselect("threshold",
+                            sil_threshold=SMALL_CFG.sil_threshold) \
+            == res.k_opt
+
+    def test_legacy_member_runner_falls_back_to_loop(self):
+        X = small_tensor()
+        calls = []
+
+        def runner(X_q, k, key, cfg):
+            from repro.core.rescalk import default_member_runner
+            calls.append(k)
+            return default_member_runner(X_q, k, key, cfg)
+
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=30, regress_iters=20, seed=1)
+        res = rescalk(X, cfg, member_runner=runner)
+        assert calls == [2, 2, 3, 3]
+        assert res.k_opt in (2, 3)
+
+    def test_legacy_runner_rejects_scheduler_kwargs(self):
+        """The legacy loop has no scheduler: silently dropping ckpt_dir /
+        criterion / mesh / mode would lose checkpoints or apply the wrong
+        selection rule, so the combination must refuse loudly."""
+        X = small_tensor()
+
+        def runner(X_q, k, key, cfg):
+            from repro.core.rescalk import default_member_runner
+            return default_member_runner(X_q, k, key, cfg)
+
+        for kw in ({"criterion": "elbow"}, {"ckpt_dir": "/tmp/nope"},
+                   {"mode": "loop"}):
+            with pytest.raises(ValueError, match="legacy sequential loop"):
+                rescalk(X, SMALL_CFG, member_runner=runner, **kw)
