@@ -13,7 +13,7 @@ import argparse
 import sys
 import traceback
 
-from . import (clustering_bench, lm_step_bench, model_selection,
+from . import (clustering_bench, ingest, lm_step_bench, model_selection,
                perf_iterations, roofline, scaling, sparse_bench)
 
 MODULES = {
@@ -21,6 +21,7 @@ MODULES = {
     "scaling": scaling,                   # paper Figs. 7, 8, 11
     "clustering": clustering_bench,       # paper Fig. 12
     "sparse": sparse_bench,               # paper Figs. 10 / 13b
+    "ingest": ingest,                     # io layer + SS6.3 residency
     "roofline": roofline,                 # SSRoofline over dry-run cells
     "lm_step": lm_step_bench,             # framework regression numbers
     "perf": perf_iterations,              # SSPerf variant lowerings

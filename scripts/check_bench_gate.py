@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Soft regression gate on the loop-vs-batched ensemble speedup.
+
+Reads the recorded benchmark trajectory (BENCH_model_selection.json,
+written by ``python -m benchmarks.run --only model_selection``) and grades
+every ensemble case's speedup:
+
+    speedup <  FAIL_BELOW (1.0x)  -> exit 1 (the batched program lost to
+                                     the sequential loop: a regression)
+    speedup <  WARN_BELOW (1.2x)  -> warn, exit 0 (drifting toward parity)
+    otherwise                     -> OK
+
+The gate grades the checked-in artifact, so CI stays cheap; regenerating
+the artifact is what refreshes the trajectory (ROADMAP perf-gate item).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+FAIL_BELOW = 1.0
+WARN_BELOW = 1.2
+
+
+def main(path: str) -> int:
+    with open(path) as f:
+        bench = json.load(f)
+    cases = bench.get("ensemble", [])
+    if not cases:
+        print(f"[bench-gate] no ensemble cases in {path}; nothing to gate")
+        return 0
+    failed = []
+    for case in cases:
+        s = float(case["speedup"])
+        name = case["name"]
+        if s < FAIL_BELOW:
+            print(f"[bench-gate] FAIL {name}: speedup {s:.2f}x < "
+                  f"{FAIL_BELOW:.1f}x")
+            failed.append(name)
+        elif s < WARN_BELOW:
+            print(f"[bench-gate] WARN {name}: speedup {s:.2f}x < "
+                  f"{WARN_BELOW:.1f}x")
+        else:
+            print(f"[bench-gate] OK   {name}: speedup {s:.2f}x")
+    if failed:
+        print(f"[bench-gate] {len(failed)}/{len(cases)} cases regressed "
+              f"below {FAIL_BELOW:.1f}x: {failed}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1
+                  else "BENCH_model_selection.json"))

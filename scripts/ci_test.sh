@@ -46,3 +46,28 @@ grep -q "selected k_opt" "$SMOKE_DIR/second.log"
 python -c "import json,sys; r=json.load(open(sys.argv[1])); \
     assert r['n_reused']==1, r" "$SMOKE_DIR/report.json"
 echo "== scheduler smoke OK =="
+
+echo "== ingest -> sweep smoke: tiny TSV -> BCSR -> one sweep unit =="
+# The repro.io path end to end: triple list -> vocab -> COO -> BCSR ->
+# stored-block perturbation ensemble -> k selection + report.
+python - "$SMOKE_DIR/triples.tsv" <<'PY'
+import sys, numpy as np
+rng = np.random.default_rng(0)
+with open(sys.argv[1], "w") as f:
+    for _ in range(400):
+        a, b = rng.integers(0, 24, 2)
+        f.write(f"e{a}\trel{rng.integers(0, 2)}\te{b}\t{rng.random() + 0.1:.3f}\n")
+PY
+python -m repro.launch.rescalk_run --data "$SMOKE_DIR/triples.tsv" --bs 8 \
+    --k-min 2 --k-max 2 --r 2 --iters 30 \
+    --report "$SMOKE_DIR/ingest_report.json" | tee "$SMOKE_DIR/ingest.log"
+grep -q "selected k_opt" "$SMOKE_DIR/ingest.log"
+grep -q "^\[io\]" "$SMOKE_DIR/ingest.log"
+echo "== ingest smoke OK =="
+
+echo "== perf gate: loop-vs-batched ensemble speedup =="
+# Soft regression gate on the recorded trajectory (BENCH_model_selection
+# .json, refreshed by `python -m benchmarks.run --only model_selection`):
+# any case < 1.0x fails, < 1.2x warns.
+python scripts/check_bench_gate.py BENCH_model_selection.json
+echo "== perf gate OK =="

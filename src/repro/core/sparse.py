@@ -16,6 +16,12 @@ scales with nnzb, recovering the paper's O(m * delta * n^2 * k / p) compute
 bound.  All products below are segment-sum matmuls — exactly the pattern
 the Pallas kernel `kernels/bcsr_spmm.py` implements with explicit VMEM
 tiling; these jnp versions are its oracle and the CPU execution path.
+
+Edge cases (the ingest layer, repro.io, feeds arbitrary real data here):
+``n`` is the *logical* entity count and need not divide the block size —
+the tail block is zero-padded on construction and cropped on the way out
+(`spmm`/`to_dense` return logical shapes); an empty pattern (nnzb == 0)
+is a valid tensor whose products are zero.
 """
 from __future__ import annotations
 
@@ -25,6 +31,10 @@ import jax
 import jax.numpy as jnp
 
 from .rescal import EPS_DEFAULT
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
 
 
 @jax.tree_util.register_dataclass
@@ -52,15 +62,36 @@ class BCSR:
 
     @property
     def nblocks(self) -> int:
-        return self.n // self.bs
+        return cdiv(self.n, self.bs)
+
+    @property
+    def n_pad(self) -> int:
+        """Padded entity count (nblocks * bs >= n; == n when bs | n)."""
+        return self.nblocks * self.bs
+
+
+def _pad_rows(B: jax.Array, n: int, n_pad: int) -> jax.Array:
+    """Zero-pad the leading (entity) axis of B from n to n_pad."""
+    if n_pad == n:
+        return B
+    pad = [(0, n_pad - n)] + [(0, 0)] * (B.ndim - 1)
+    return jnp.pad(B, pad)
+
+
+def tail_mask(n: int, bs: int, nb: int, dtype=jnp.float32) -> jax.Array:
+    """(nb * bs,) mask: 1 for logical entities, 0 for the padded tail."""
+    return (jnp.arange(nb * bs) < n).astype(dtype)
 
 
 def from_dense(X: jax.Array, bs: int = 128, threshold: float = 0.0) -> BCSR:
     """Blockify a dense (m, n, n) tensor, keeping blocks where any slice has
-    |x| > threshold.  Pattern is shared across slices (superset)."""
+    |x| > threshold.  Pattern is shared across slices (superset).  `n` need
+    not divide `bs`: the tail block is zero-padded (and cropped again by
+    `to_dense`/`spmm`)."""
     m, n, _ = X.shape
-    assert n % bs == 0, "n must be divisible by the block size"
-    nb = n // bs
+    nb = cdiv(n, bs)
+    if nb * bs != n:
+        X = jnp.pad(X, ((0, 0), (0, nb * bs - n), (0, nb * bs - n)))
     Xb = X.reshape(m, nb, bs, nb, bs).transpose(1, 3, 0, 2, 4)  # (nb,nb,m,bs,bs)
     keep = jnp.abs(Xb).max(axis=(2, 3, 4)) > threshold          # (nb, nb)
     rows, cols = jnp.nonzero(keep)
@@ -73,20 +104,26 @@ def to_dense(sp: BCSR) -> jax.Array:
     nb, bs, m = sp.nblocks, sp.bs, sp.m
     out = jnp.zeros((m, nb, nb, bs, bs), sp.data.dtype)
     out = out.at[:, sp.block_rows, sp.block_cols].set(sp.data)
-    return out.transpose(0, 1, 3, 2, 4).reshape(m, nb * bs, nb * bs)
+    out = out.transpose(0, 1, 3, 2, 4).reshape(m, nb * bs, nb * bs)
+    return out[:, :sp.n, :sp.n]
 
 
 def random_bcsr(key: jax.Array, m: int, n: int, bs: int = 128,
                 block_density: float = 0.05, dtype=jnp.float32) -> BCSR:
     """Random non-negative BCSR tensor with ~block_density stored blocks
-    (diagonal always stored so every entity has support)."""
-    nb = n // bs
+    (diagonal always stored so every entity has support).  Entries in the
+    padded tail (when bs does not divide n) are zeroed so round-trips
+    through `to_dense`/`from_dense` are exact."""
+    nb = cdiv(n, bs)
     kp, kv = jax.random.split(key)
     keep = jax.random.uniform(kp, (nb, nb)) < block_density
     keep = keep | jnp.eye(nb, dtype=bool)
     rows, cols = jnp.nonzero(keep)
     nnzb = rows.shape[0]
     data = jax.random.uniform(kv, (m, nnzb, bs, bs), dtype, 0.0, 1.0)
+    if nb * bs != n:
+        mask = tail_mask(n, bs, nb, dtype).reshape(nb, bs)
+        data = data * mask[rows][None, :, :, None] * mask[cols][None, :, None, :]
     return BCSR(data=data, block_rows=rows.astype(jnp.int32),
                 block_cols=cols.astype(jnp.int32), n=n)
 
@@ -107,27 +144,29 @@ def spmm(sp: BCSR, B: jax.Array) -> jax.Array:
     """X_t @ B for all t.  B: (n, k) -> (m, n, k)."""
     nb, bs = sp.nblocks, sp.bs
     k = B.shape[1]
-    Bb = B.reshape(nb, bs, k)[sp.block_cols]             # (nnzb, bs, k)
+    Bb = _pad_rows(B, sp.n, nb * bs).reshape(nb, bs, k)[sp.block_cols]
     prod = jnp.einsum("mzab,zbk->mzak", sp.data, Bb)     # (m, nnzb, bs, k)
     out = jax.ops.segment_sum(prod.swapaxes(0, 1), sp.block_rows,
                               num_segments=nb)           # (nb, m, bs, k)
-    return out.transpose(1, 0, 2, 3).reshape(sp.m, sp.n, k)
+    return out.transpose(1, 0, 2, 3).reshape(sp.m, nb * bs, k)[:, :sp.n]
 
 
 def spmm_t(sp: BCSR, B: jax.Array) -> jax.Array:
     """X_t^T @ B for all t (block transpose = swap row/col + transpose tiles).
     B may be (n, k) or (m, n, k) (per-slice operand, used for X^T(A R_t))."""
     nb, bs = sp.nblocks, sp.bs
+    n_pad = nb * bs
     if B.ndim == 2:
-        Bb = B.reshape(nb, bs, -1)[sp.block_rows]         # (nnzb, bs, k)
-        prod = jnp.einsum("mzab,zak->mzbk", sp.data, Bb)
+        Bb = _pad_rows(B, sp.n, n_pad).reshape(nb, bs, -1)[sp.block_rows]
+        prod = jnp.einsum("mzab,zak->mzbk", sp.data, Bb)  # (m, nnzb, bs, k)
     else:
         k = B.shape[-1]
-        Bb = B.reshape(sp.m, nb, bs, k)[:, sp.block_rows]  # (m, nnzb, bs, k)
+        Bp = _pad_rows(B.swapaxes(0, 1), sp.n, n_pad).swapaxes(0, 1)
+        Bb = Bp.reshape(sp.m, nb, bs, k)[:, sp.block_rows]  # (m, nnzb, bs, k)
         prod = jnp.einsum("mzab,mzak->mzbk", sp.data, Bb)
     out = jax.ops.segment_sum(prod.swapaxes(0, 1), sp.block_cols,
                               num_segments=nb)
-    return out.transpose(1, 0, 2, 3).reshape(sp.m, sp.n, -1)
+    return out.transpose(1, 0, 2, 3).reshape(sp.m, n_pad, -1)[:, :sp.n]
 
 
 def sqnorm(sp: BCSR) -> jax.Array:
@@ -164,3 +203,36 @@ def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array) -> jax.Array:
     fit2 = jnp.einsum("ab,mac,cd,mbd->", G, R, G, R)
     err2 = jnp.maximum(x2 - 2.0 * cross + fit2, 0.0)
     return jnp.sqrt(err2) / jnp.sqrt(x2)
+
+
+# ---------------------------------------------------------------------------
+# R regression with A fixed (the sparse twin of core/regression.py, used by
+# the selection sweep's per-k reduction on BCSR operands)
+# ---------------------------------------------------------------------------
+
+def sparse_update_R(sp: BCSR, A: jax.Array, R: jax.Array, G: jax.Array,
+                    eps: float = EPS_DEFAULT) -> jax.Array:
+    """R_t <- R_t * (A^T X_t A) / (G R_t G + eps), X products via spmm."""
+    XA = spmm(sp, A)                                      # (m, n, k)
+    ATXA = jnp.einsum("ia,mib->mab", A, XA)               # (m, k, k)
+    deno = jnp.einsum("ab,mbc,cd->mad", G, R, G)
+    return R * ATXA / (deno + eps)
+
+
+def sparse_regress_R(sp: BCSR, A: jax.Array, *, iters: int = 100,
+                     eps: float = EPS_DEFAULT,
+                     key: jax.Array | None = None) -> jax.Array:
+    """Solve for R (m, k, k) >= 0 with A fixed — identical math (and init
+    key discipline) to regression.regress_R, so a BCSR sweep's reduction
+    matches the dense sweep on the densified tensor."""
+    k = A.shape[1]
+    if key is None:
+        key = jax.random.PRNGKey(17)
+    R = jax.random.uniform(key, (sp.m, k, k), dtype=sp.data.dtype,
+                           minval=0.05, maxval=1.0)
+    G = A.T @ A
+
+    def body(_, R):
+        return sparse_update_R(sp, A, R, G, eps)
+
+    return jax.lax.fori_loop(0, iters, body, R)

@@ -325,20 +325,38 @@ def make_mu_step(mesh: Mesh, cfg: DistRescalConfig, *,
 # Distributed error / GSPMD alternative / driver
 # ---------------------------------------------------------------------------
 
-def local_rel_error(Xl, Ai, R, cd=None):
-    """Distributed relative error via the small-intermediates identity
-    (see core.rescal.rel_error); only k-sized payloads cross the wire.
-    Shard-local body — callable inside any shard_map on the 2D grid (the
-    selection ensemble vmaps it over members)."""
+def _local_rel_error_body(Ai, R, xa_product, sqnorm_local, cd):
+    """Shared tail of the distributed error: the small-intermediates
+    identity (see core.rescal.rel_error) with only k-sized wire payloads.
+    Operand specifics enter as callables: ``xa_product(Aj)`` -> the local
+    X @ A^(j) block and ``sqnorm_local()`` -> the local ||X||^2 term."""
     Aj = diag_broadcast_row_to_col(Ai, cd)
     G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)
-    XA = psum_cast(jnp.einsum("mij,jk->mik", Xl, Aj), COL_AXIS, cd)
+    XA = psum_cast(xa_product(Aj), COL_AXIS, cd)
     ATXA = psum_cast(jnp.einsum("ia,mib->mab", Ai, XA), ROW_AXIS, cd)
-    x2 = jax.lax.psum(jax.lax.psum(jnp.vdot(Xl, Xl), ROW_AXIS), COL_AXIS)
+    x2 = jax.lax.psum(jax.lax.psum(sqnorm_local(), ROW_AXIS), COL_AXIS)
     cross = jnp.vdot(ATXA, R)
     fit2 = jnp.einsum("ab,mac,cd,mbd->", G, R, G, R)
     err2 = jnp.maximum(x2 - 2.0 * cross + fit2, 0.0)
     return jnp.sqrt(err2) / jnp.sqrt(x2)
+
+
+def local_rel_error(Xl, Ai, R, cd=None):
+    """Distributed relative error on a dense X block.  Shard-local body —
+    callable inside any shard_map on the 2D grid (the selection ensemble
+    vmaps it over members)."""
+    return _local_rel_error_body(
+        Ai, R, lambda Aj: jnp.einsum("mij,jk->mik", Xl, Aj),
+        lambda: jnp.vdot(Xl, Xl), cd)
+
+
+def local_rel_error_bcsr(spl, Ai, R, cd=None):
+    """Shard-local relative error on a BCSR block — same collective
+    schedule as the dense twin, X products via spmm.  Used by the
+    selection subsystem's BCSR mesh ensemble."""
+    from repro.core.sparse import spmm, sqnorm
+    return _local_rel_error_body(
+        Ai, R, lambda Aj: spmm(spl, Aj), lambda: sqnorm(spl), cd)
 
 
 def make_dist_error(mesh: Mesh) -> Callable:

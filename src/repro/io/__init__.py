@@ -1,0 +1,45 @@
+"""repro.io — the data subsystem between raw relational data and the
+dist/selection layers (paper §6.2 datasets, §6.3 weak scaling).
+
+The contract, end to end:
+
+    triples (TSV / NPZ COO)                         io.triples
+        -> streaming COO accumulator (O(nnz) host memory)
+        -> balanced 128x128 BCSR shards on the       io.partition
+           (g, g) grid, each device touching only
+           its blocks (greedy nnzb balancing,
+           recorded as a block-entity permutation)
+        -> dataset manifest (shape, digest, nnzb     io.manifest
+           per shard, logical vs resident bytes) —
+           the sweep scheduler's checkpoint guard
+        -> ensemble members on dense / BCSR          repro.selection
+           operands, sharded or single-host
+
+``io.virtual`` replaces the file at the front of that chain with
+shard-local generators: each device materializes its shard from
+``(spec, shard_index)`` alone, so the represented tensor can exceed any
+host's memory by orders of magnitude (the exascale experiments).
+
+Nothing in this package imports repro.selection — the wiring happens in
+launch/rescalk_run.py and benchmarks/ — so io sits cleanly below the
+selection layer.
+"""
+from .manifest import DatasetManifest, manifest_of, operand_dims
+from .partition import (BlockPartition, ShardedBCSR, balanced_partition,
+                        coo_to_bcsr, identity_partition, partition_coo,
+                        partition_dense)
+from .triples import (COOBuilder, COOTensor, Vocab, ingest_npz, ingest_tsv,
+                      read_coo_npz, read_triples_tsv)
+from .virtual import (VirtualSpec, virtual_bcsr_shard, virtual_dense_full,
+                      virtual_dense_shard, virtual_shard_nnzb,
+                      virtual_sharded_bcsr)
+
+__all__ = [
+    "DatasetManifest", "manifest_of", "operand_dims",
+    "BlockPartition", "ShardedBCSR", "balanced_partition", "coo_to_bcsr",
+    "identity_partition", "partition_coo", "partition_dense",
+    "COOBuilder", "COOTensor", "Vocab", "ingest_npz", "ingest_tsv",
+    "read_coo_npz", "read_triples_tsv",
+    "VirtualSpec", "virtual_bcsr_shard", "virtual_dense_full",
+    "virtual_dense_shard", "virtual_shard_nnzb", "virtual_sharded_bcsr",
+]

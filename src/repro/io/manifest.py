@@ -1,0 +1,185 @@
+"""Dataset manifests — one identity for every operand the sweep accepts.
+
+A manifest answers three questions the selection scheduler and the
+benchmarks keep re-deriving ad hoc:
+
+  * **identity** — a content digest (moments of the values + a structural
+    hash of the sparsity pattern / virtual spec), so a resumed sweep can
+    reject a checkpoint directory written for different data instead of
+    silently reusing stale units;
+  * **shape** — (m, n, dtype) plus the factor-space width (``n_factor``:
+    the padded, permuted entity count for sharded operands), which is what
+    unit checkpoints are shaped by;
+  * **bytes** — ``logical_bytes`` (the dense tensor the dataset
+    *represents*) vs ``resident_bytes`` (what is actually held: stored
+    blocks + indices, or per-shard generator state).  The exascale claim
+    is exactly this gap, and benchmarks/ingest.py asserts it.
+
+``manifest_of`` dispatches on operand type: dense array,
+``core.sparse.BCSR``, ``io.partition.ShardedBCSR``, or
+``io.virtual.VirtualSpec``.  ``selection/scheduler.py`` embeds
+``manifest.fingerprint()`` in its ``sweep.json`` guard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BCSR
+
+from .partition import ShardedBCSR
+from .virtual import VirtualSpec, virtual_shard_nnzb
+
+__all__ = ["DatasetManifest", "manifest_of", "operand_dims"]
+
+
+def _moments_digest(x) -> str:
+    """Cheap two-moment content digest (same-shape-different-data shifts
+    it); computable in place on device arrays.  Permutation-BLIND on its
+    own — callers pair it with a structural hash or positional moment."""
+    x = jnp.asarray(x)
+    return f"{float(x.sum()):.6e}/{float((x * x).sum()):.6e}"
+
+
+def _dense_digest(X) -> str:
+    """Dense operand digest: global moments plus entity-index-weighted row
+    and column sums, so a symmetric permutation P X P^T (e.g. the same
+    triples re-ingested in a different order) also shifts it — moments
+    alone are permutation-invariant and would let a resumed sweep silently
+    reuse units computed for reordered data."""
+    X = jnp.asarray(X)
+    e = jnp.arange(X.shape[1], dtype=X.dtype)
+    wr = float(jnp.einsum("mij,i->", X, e))
+    wc = float(jnp.einsum("mij,j->", X, e))
+    return f"{_moments_digest(X)}/{wr:.6e}/{wc:.6e}"
+
+
+def _index_digest(*arrays) -> str:
+    h = hashlib.sha1()
+    for a in arrays:
+        a = np.asarray(a)
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetManifest:
+    kind: str                 # dense | bcsr | bcsr-sharded | virtual-*
+    m: int
+    n: int                    # logical entity count
+    n_factor: int             # factor-space rows (padded/permuted n)
+    dtype: str
+    digest: str
+    logical_bytes: int
+    resident_bytes: int
+    block_size: int | None = None
+    grid: tuple[int, int] | None = None
+    nnzb: tuple[int, ...] | None = None    # per shard, row-major
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def compression(self) -> float:
+        """logical / resident — how much bigger the represented tensor is
+        than what any host actually touches."""
+        return self.logical_bytes / max(self.resident_bytes, 1)
+
+    def fingerprint(self) -> dict[str, Any]:
+        """JSON-able identity for the scheduler's sweep.json guard."""
+        d = dataclasses.asdict(self)
+        d["grid"] = None if self.grid is None else list(self.grid)
+        d["nnzb"] = None if self.nnzb is None else list(self.nnzb)
+        return d
+
+    def save(self, path: str) -> str:
+        from repro.ckpt import atomic_json_dump
+        return atomic_json_dump(path, self.fingerprint(), indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "DatasetManifest":
+        with open(path) as f:
+            d = json.load(f)
+        if d.get("grid") is not None:
+            d["grid"] = tuple(d["grid"])
+        if d.get("nnzb") is not None:
+            d["nnzb"] = tuple(d["nnzb"])
+        return cls(**d)
+
+
+def manifest_of(operand, *, extra: dict | None = None) -> DatasetManifest:
+    """Build the manifest for any sweep operand (see module docstring)."""
+    extra = dict(extra or {})
+    if isinstance(operand, VirtualSpec):
+        spec = operand
+        itemsize = spec.jnp_dtype.itemsize
+        if spec.kind == "dense":
+            shard = spec.m * spec.n_loc * spec.n_loc * itemsize
+            nnzb = None
+            resident = shard * spec.grid * spec.grid
+        else:
+            counts = virtual_shard_nnzb(spec)
+            nnzb = tuple(int(v) for v in counts.reshape(-1))
+            z_max = max(int(counts.max()), 1)
+            resident = (spec.grid * spec.grid
+                        * (spec.m * z_max * spec.bs * spec.bs * itemsize
+                           + 2 * z_max * 4))
+        return DatasetManifest(
+            kind=f"virtual-{spec.kind}", m=spec.m, n=spec.n,
+            n_factor=spec.n, dtype=spec.dtype,
+            digest=hashlib.sha1(
+                spec.spec_string().encode()).hexdigest()[:16],
+            logical_bytes=spec.logical_bytes, resident_bytes=resident,
+            block_size=spec.bs if spec.kind == "bcsr" else None,
+            grid=(spec.grid, spec.grid), nnzb=nnzb,
+            extra={"spec": spec.spec_string(), **extra})
+    if isinstance(operand, ShardedBCSR):
+        itemsize = operand.data.dtype.itemsize
+        logical = operand.m * operand.n * operand.n * itemsize
+        return DatasetManifest(
+            kind="bcsr-sharded", m=operand.m, n=operand.n,
+            n_factor=operand.n_pad, dtype=str(operand.data.dtype),
+            digest=(_moments_digest(operand.data) + ":" + _index_digest(
+                operand.rows, operand.cols, operand.part.perm)),
+            logical_bytes=logical, resident_bytes=operand.resident_bytes,
+            block_size=operand.bs, grid=(operand.g, operand.g),
+            nnzb=tuple(int(v) for v in operand.nnzb.reshape(-1)),
+            extra=extra)
+    if isinstance(operand, BCSR):
+        sp = operand
+        itemsize = sp.data.dtype.itemsize
+        resident = (sp.data.size * itemsize
+                    + sp.block_rows.size * 4 + sp.block_cols.size * 4)
+        return DatasetManifest(
+            kind="bcsr", m=sp.m, n=sp.n, n_factor=sp.n,
+            dtype=str(sp.data.dtype),
+            digest=(_moments_digest(sp.data) + ":" + _index_digest(
+                sp.block_rows, sp.block_cols)),
+            logical_bytes=sp.m * sp.n * sp.n * itemsize,
+            resident_bytes=resident, block_size=sp.bs, nnzb=(sp.nnzb,),
+            extra=extra)
+    # dense (m, n, n) array
+    X = operand
+    m, n, n2 = X.shape
+    assert n == n2, f"dense operand must be (m, n, n), got {X.shape}"
+    nbytes = m * n * n * jnp.dtype(X.dtype).itemsize
+    return DatasetManifest(
+        kind="dense", m=m, n=n, n_factor=n, dtype=str(X.dtype),
+        digest=_dense_digest(X), logical_bytes=nbytes,
+        resident_bytes=nbytes, extra=extra)
+
+
+def operand_dims(operand) -> tuple[int, int]:
+    """(m, n_factor) of any sweep operand — the dims unit checkpoints and
+    ensemble factor shapes derive from."""
+    if isinstance(operand, VirtualSpec):
+        return operand.m, operand.n
+    if isinstance(operand, ShardedBCSR):
+        return operand.m, operand.n_pad
+    if isinstance(operand, BCSR):
+        return operand.m, operand.n
+    return operand.shape[0], operand.shape[1]

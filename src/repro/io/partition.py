@@ -1,0 +1,346 @@
+"""Balanced BCSR sharding — COO to per-device block-sparse shards.
+
+The paper's enabler for the 9-exabyte sparse run is that every rank holds
+only its own blocks of the adjacency tensor.  This module produces that
+layout for the repo's ("data", "model") square grids:
+
+  1. blockify: COO coordinates -> 128x128 (configurable) block ids, the
+     pattern shared across the m relation slices (core/sparse.py layout);
+  2. balance: a greedy assignment of *block-slabs* (one block-row + its
+     mirror block-column — rows and columns are the same entities, so one
+     permutation must serve both) to the g grid rows, weighted by stored-
+     block counts, so per-shard nnzb stays near total / g^2 even on
+     power-law data;
+  3. shard: per-(i, j) ``core.sparse.BCSR`` construction in shard-local
+     coordinates, padded to a common nnzb so the shards stack into the
+     ``(g, g, m, nnzb_loc, bs, bs)`` operand ``dist.engine.make_mu_step``
+     consumes.
+
+The assignment is a block-granular entity permutation, recorded in
+``BlockPartition``: a factorization of the sharded tensor lives in the
+*permuted* entity space, and ``permute_factor`` / ``unpermute_factor``
+translate factors in and out (X_perm = P X P^T, A_perm = P A).
+
+``choose_grid`` from dist.elastic sizes g from the device count (the
+diagonal broadcasts of Alg. 3 need a square grid).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BCSR, cdiv
+from repro.dist.elastic import choose_grid
+
+from .triples import COOTensor
+
+__all__ = ["BlockPartition", "ShardedBCSR", "balanced_partition",
+           "choose_grid", "coo_to_bcsr", "partition_coo", "partition_dense"]
+
+
+# ---------------------------------------------------------------------------
+# Identity-layout single BCSR (the no-mesh ingest target)
+# ---------------------------------------------------------------------------
+
+def coo_to_bcsr(coo: COOTensor, bs: int = 128, dtype=np.float32) -> BCSR:
+    """COO -> one global BCSR in the original entity order (single-host
+    sweeps).  Blocks are row-major sorted; the pattern is the union over
+    relation slices.  Memory is O(nnzb * bs^2), never O(n^2)."""
+    nb = cdiv(coo.n, bs)
+    brow = coo.rows // bs
+    bcol = coo.cols // bs
+    keys = brow * nb + bcol
+    ukeys, z = np.unique(keys, return_inverse=True)       # row-major sorted
+    nnzb = ukeys.shape[0]
+    data = np.zeros((coo.m, nnzb, bs, bs), dtype)
+    np.add.at(data, (coo.rels, z, coo.rows % bs, coo.cols % bs), coo.vals)
+    return BCSR(data=jnp.asarray(data),
+                block_rows=jnp.asarray(ukeys // nb, jnp.int32),
+                block_cols=jnp.asarray(ukeys % nb, jnp.int32), n=coo.n)
+
+
+# ---------------------------------------------------------------------------
+# The balanced block-slab partition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPartition:
+    """Block-granular entity permutation onto a (g, g) grid.
+
+    ``perm[slot] = global block id`` (-1 for padding slots); ``pos`` is its
+    inverse.  Grid row i owns slots [i * nb_loc, (i+1) * nb_loc); the same
+    assignment serves the column axis (square grid, one entity
+    permutation)."""
+    n: int                    # logical entities
+    bs: int
+    grid: int                 # g (square)
+    nb: int                   # real blocks = ceil(n / bs)
+    nb_loc: int               # block slots per grid row
+    perm: np.ndarray          # (g * nb_loc,) int64, -1 = padding slot
+    pos: np.ndarray           # (nb,) int64 slot of each global block
+
+    @property
+    def n_loc(self) -> int:
+        return self.nb_loc * self.bs
+
+    @property
+    def n_pad(self) -> int:
+        return self.grid * self.n_loc
+
+    def owner(self, block: np.ndarray) -> np.ndarray:
+        """Grid row owning each global block id."""
+        return self.pos[block] // self.nb_loc
+
+    def local(self, block: np.ndarray) -> np.ndarray:
+        """Block index within the owner's slab."""
+        return self.pos[block] % self.nb_loc
+
+    # -- factor translation --------------------------------------------------
+
+    def permute_factor(self, A) -> np.ndarray:
+        """A (n, k) in original order -> (n_pad, k) in permuted slot order
+        (padding slots zero)."""
+        A = np.asarray(A)
+        out = np.zeros((self.n_pad,) + A.shape[1:], A.dtype)
+        for slot, b in enumerate(self.perm):
+            if b < 0:
+                continue
+            lo, hi = b * self.bs, min((b + 1) * self.bs, self.n)
+            out[slot * self.bs: slot * self.bs + (hi - lo)] = A[lo:hi]
+        return out
+
+    def unpermute_factor(self, A_perm) -> np.ndarray:
+        """(n_pad, k) in slot order -> (n, k) in original entity order."""
+        A_perm = np.asarray(A_perm)
+        out = np.zeros((self.n,) + A_perm.shape[1:], A_perm.dtype)
+        for slot, b in enumerate(self.perm):
+            if b < 0:
+                continue
+            lo, hi = b * self.bs, min((b + 1) * self.bs, self.n)
+            out[lo:hi] = A_perm[slot * self.bs: slot * self.bs + (hi - lo)]
+        return out
+
+
+def balanced_partition(weights: np.ndarray, g: int, *, n: int, bs: int
+                       ) -> BlockPartition:
+    """Greedy nnzb balancing: heaviest block-slab first, to the least
+    loaded grid row with free slots.  Every grid row gets exactly
+    ``nb_loc = ceil(nb / g)`` slots (equal A-shard sizes); short rows are
+    padded with empty slots."""
+    nb = int(weights.shape[0])
+    nb_loc = cdiv(nb, g)
+    loads = np.zeros(g)
+    counts = np.zeros(g, np.int64)
+    groups: list[list[int]] = [[] for _ in range(g)]
+    for b in np.argsort(-weights, kind="stable"):
+        free = np.flatnonzero(counts < nb_loc)
+        tgt = free[np.argmin(loads[free])]
+        groups[int(tgt)].append(int(b))
+        loads[tgt] += weights[b]
+        counts[tgt] += 1
+    perm = np.full(g * nb_loc, -1, np.int64)
+    pos = np.full(nb, -1, np.int64)
+    for i, grp in enumerate(groups):
+        grp.sort()            # keep original order within a slab (stable)
+        for s, b in enumerate(grp):
+            slot = i * nb_loc + s
+            perm[slot] = b
+            pos[b] = slot
+    return BlockPartition(n=n, bs=bs, grid=g, nb=nb, nb_loc=nb_loc,
+                          perm=perm, pos=pos)
+
+
+def identity_partition(n: int, bs: int, g: int) -> BlockPartition:
+    """Contiguous (unpermuted) assignment — virtual generators choose
+    their own balanced layout, so no reshuffle is needed."""
+    nb = cdiv(n, bs)
+    nb_loc = cdiv(nb, g)
+    perm = np.full(g * nb_loc, -1, np.int64)
+    perm[:nb] = np.arange(nb)
+    pos = np.arange(nb, dtype=np.int64)
+    return BlockPartition(n=n, bs=bs, grid=g, nb=nb, nb_loc=nb_loc,
+                          perm=perm, pos=pos)
+
+
+# ---------------------------------------------------------------------------
+# Sharded BCSR — the mesh operand
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBCSR:
+    """Per-device BCSR shards stacked into the engine's operand layout.
+
+    ``data`` (g, g, m, nnzb_loc, bs, bs) with ``rows``/``cols``
+    (g, g, nnzb_loc) in shard-local block coordinates, row-major sorted
+    per shard.  Shards are front-padded with zero blocks at (0, 0) to a
+    common nnzb_loc (zero data: products unaffected, ordering preserved);
+    ``nnzb`` records each shard's real stored-block count."""
+    part: BlockPartition
+    data: jnp.ndarray        # (g, g, m, nnzb_loc, bs, bs)
+    rows: jnp.ndarray        # (g, g, nnzb_loc) int32
+    cols: jnp.ndarray        # (g, g, nnzb_loc) int32
+    nnzb: np.ndarray         # (g, g) int64 real (unpadded) blocks
+
+    @property
+    def g(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.data.shape[2]
+
+    @property
+    def bs(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def n(self) -> int:
+        return self.part.n
+
+    @property
+    def n_loc(self) -> int:
+        return self.part.n_loc
+
+    @property
+    def n_pad(self) -> int:
+        return self.part.n_pad
+
+    @property
+    def nnzb_total(self) -> int:
+        return int(self.nnzb.sum())
+
+    @property
+    def balance(self) -> float:
+        """max shard nnzb / ideal (total / g^2); 1.0 is perfect."""
+        total = self.nnzb_total
+        if total == 0:
+            return 1.0
+        return float(self.nnzb.max() * self.g * self.g / total)
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes actually stored across all shards (data + indices)."""
+        return (self.data.size * self.data.dtype.itemsize
+                + self.rows.size * 4 + self.cols.size * 4)
+
+    def shard(self, i: int, j: int) -> BCSR:
+        """Device (i, j)'s local tensor (shard-local coordinates)."""
+        return BCSR(data=self.data[i, j], block_rows=self.rows[i, j],
+                    block_cols=self.cols[i, j], n=self.n_loc)
+
+    def with_data(self, data) -> "ShardedBCSR":
+        return dataclasses.replace(self, data=data)
+
+    def to_bcsr(self) -> BCSR:
+        """Merge shards into one global BCSR over the *permuted, padded*
+        entity space (n_pad) — the host-reference operand for mesh parity
+        tests and the scheduler's reduce step."""
+        g, nb_loc = self.g, self.part.nb_loc
+        rows_l, cols_l, data_l = [], [], []
+        for i in range(g):
+            for j in range(g):
+                z0 = self.rows.shape[-1] - int(self.nnzb[i, j])  # pad front
+                rows_l.append(np.asarray(self.rows[i, j][z0:]) + i * nb_loc)
+                cols_l.append(np.asarray(self.cols[i, j][z0:]) + j * nb_loc)
+                data_l.append(np.asarray(self.data[i, j][:, z0:]))
+        rows = np.concatenate(rows_l)
+        cols = np.concatenate(cols_l)
+        data = np.concatenate(data_l, axis=1)
+        order = np.lexsort((cols, rows))                 # row-major sort
+        return BCSR(data=jnp.asarray(data[:, order]),
+                    block_rows=jnp.asarray(rows[order], jnp.int32),
+                    block_cols=jnp.asarray(cols[order], jnp.int32),
+                    n=self.n_pad)
+
+    def to_dense(self) -> np.ndarray:
+        """(m, n, n) dense in the ORIGINAL entity order (reference only)."""
+        from repro.core.sparse import to_dense as bcsr_to_dense
+        dense_perm = np.asarray(bcsr_to_dense(self.to_bcsr()))
+        part = self.part
+        sel = np.zeros(part.n, np.int64)     # permuted index of each entity
+        for slot, b in enumerate(part.perm):
+            if b < 0:
+                continue
+            lo, hi = b * part.bs, min((b + 1) * part.bs, part.n)
+            sel[lo:hi] = slot * part.bs + np.arange(hi - lo)
+        out = dense_perm[:, sel][:, :, sel]
+        return out
+
+
+def partition_coo(coo: COOTensor, *, bs: int = 128,
+                  grid: int | None = None, n_devices: int | None = None,
+                  part: BlockPartition | None = None,
+                  dtype=np.float32) -> ShardedBCSR:
+    """COO -> balanced BCSR shards on a (g, g) grid.
+
+    ``grid`` fixes g directly; otherwise ``choose_grid(n_devices)`` sizes
+    it.  Pass ``part`` to reuse a previously computed assignment (e.g. to
+    lay a second tensor out identically) — its block size and entity count
+    override ``bs`` and must match the COO."""
+    if part is None:
+        if grid is None:
+            if n_devices is None:
+                raise ValueError("need grid=, n_devices= or part=")
+            grid = choose_grid(n_devices)
+        nb = cdiv(coo.n, bs)
+        brow = coo.rows // bs
+        bcol = coo.cols // bs
+        ukeys = np.unique(brow * nb + bcol)
+        weights = np.zeros(nb)
+        np.add.at(weights, ukeys // nb, 1.0)
+        np.add.at(weights, ukeys % nb, 1.0)
+        part = balanced_partition(weights, grid, n=coo.n, bs=bs)
+    else:
+        if part.n != coo.n:
+            raise ValueError(f"partition was built for n={part.n}, "
+                             f"tensor has n={coo.n}")
+        bs = part.bs          # the reused layout fixes the block size
+        nb = part.nb
+        brow = coo.rows // bs
+        bcol = coo.cols // bs
+
+    g, nb_loc = part.grid, part.nb_loc
+    # shard + local coordinates of every entry's block
+    own_r, loc_r = part.owner(brow), part.local(brow)
+    own_c, loc_c = part.owner(bcol), part.local(bcol)
+    # per-shard distinct blocks, row-major sorted within the shard
+    ekey = ((own_r * g + own_c) * nb_loc + loc_r) * nb_loc + loc_c
+    ukeys, z = np.unique(ekey, return_inverse=True)
+    shard_of = ukeys // (nb_loc * nb_loc)
+    nnzb = np.zeros((g, g), np.int64)
+    np.add.at(nnzb.reshape(-1), shard_of, 1)
+    z_max = int(nnzb.max()) if ukeys.size else 0
+    z_max = max(z_max, 1)                     # >= 1 slot (all-empty shards)
+    # front padding: real block u sits at slot pad(shard) + rank-in-shard
+    rank = np.arange(ukeys.shape[0]) - np.concatenate(
+        ([0], np.cumsum(np.bincount(shard_of,
+                                    minlength=g * g))))[shard_of]
+    pad = z_max - nnzb.reshape(-1)
+    slot_of = pad[shard_of] + rank
+
+    data = np.zeros((g, g, coo.m, z_max, part.bs, part.bs), dtype)
+    np.add.at(data, (own_r, own_c, coo.rels, slot_of[z],
+                     coo.rows % bs, coo.cols % bs), coo.vals)
+    rows = np.zeros((g, g, z_max), np.int32)
+    cols = np.zeros((g, g, z_max), np.int32)
+    sh_i, sh_j = shard_of // g, shard_of % g
+    rows[sh_i, sh_j, slot_of] = ((ukeys // nb_loc) % nb_loc).astype(np.int32)
+    cols[sh_i, sh_j, slot_of] = (ukeys % nb_loc).astype(np.int32)
+    return ShardedBCSR(part=part, data=jnp.asarray(data),
+                       rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+                       nnzb=nnzb)
+
+
+def partition_dense(X, *, bs: int = 128, grid: int = 1,
+                    threshold: float = 0.0) -> ShardedBCSR:
+    """Dense (m, n, n) -> balanced shards (test/reference convenience)."""
+    X = np.asarray(X)
+    rels, rows, cols = np.nonzero(np.abs(X) > threshold)
+    # keep the operand's own precision (float64 in, float64 stored) —
+    # COO values only narrow to float32 on the file-ingest path
+    coo = COOTensor(rels=rels.astype(np.int64), rows=rows.astype(np.int64),
+                    cols=cols.astype(np.int64), vals=X[rels, rows, cols],
+                    n=X.shape[1], m=X.shape[0])
+    return partition_coo(coo, bs=bs, grid=grid, dtype=X.dtype)

@@ -1,0 +1,212 @@
+"""Chunked triple-list ingest — raw relational data to streaming COO.
+
+The paper's pipeline never materializes the full (m, n, n) tensor on any
+host: data arrives as triple lists ((head, relation, tail) with an optional
+weight) and each rank keeps only coordinates + values for its own share.
+This module is the host side of that contract:
+
+  * ``read_triples_tsv`` / ``read_coo_npz`` — chunked readers.  TSV rows
+    are string triples (``head \\t relation \\t tail [\\t weight]``); NPZ
+    files carry pre-numbered COO arrays (``row``/``rel``/``col``/``val``).
+    Both yield bounded-size chunks so ingest memory is O(chunk), not
+    O(file).
+  * ``Vocab`` — entity/relation string -> id maps in first-appearance
+    order (deterministic for a fixed file, the property the manifest
+    digest relies on).
+  * ``COOBuilder`` — the streaming accumulator: appends chunks, then
+    ``finalize()`` sorts lexicographically and merges duplicate
+    coordinates by summation.  Peak memory is O(nnz); the n x n dense
+    tensor never exists.
+
+Downstream: ``io.partition`` turns a ``COOTensor`` into balanced BCSR
+shards; ``io.manifest`` fingerprints it for the sweep scheduler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
+
+DEFAULT_CHUNK = 1 << 16
+
+
+@dataclasses.dataclass(frozen=True)
+class COOTensor:
+    """Deduplicated COO relational tensor (relation-major coordinates)."""
+    rels: np.ndarray   # (nnz,) int64 relation ids in [0, m)
+    rows: np.ndarray   # (nnz,) int64 entity ids in [0, n)
+    cols: np.ndarray   # (nnz,) int64
+    vals: np.ndarray   # (nnz,) float32 from file ingest (other float
+                       # dtypes allowed when built directly, e.g.
+                       # partition_dense keeps the operand's precision)
+    n: int             # entities
+    m: int             # relations
+
+    @property
+    def nnz(self) -> int:
+        return int(self.rels.shape[0])
+
+    def to_dense(self, dtype=np.float32) -> np.ndarray:
+        """Materialize (m, n, n) — test/reference use only."""
+        X = np.zeros((self.m, self.n, self.n), dtype)
+        np.add.at(X, (self.rels, self.rows, self.cols), self.vals)
+        return X
+
+
+class Vocab:
+    """Entity/relation id assignment in first-appearance order."""
+
+    def __init__(self):
+        self.entities: dict[str, int] = {}
+        self.relations: dict[str, int] = {}
+
+    @property
+    def n(self) -> int:
+        return len(self.entities)
+
+    @property
+    def m(self) -> int:
+        return len(self.relations)
+
+    def entity_id(self, name: str) -> int:
+        eid = self.entities.get(name)
+        if eid is None:
+            eid = self.entities[name] = len(self.entities)
+        return eid
+
+    def relation_id(self, name: str) -> int:
+        rid = self.relations.get(name)
+        if rid is None:
+            rid = self.relations[name] = len(self.relations)
+        return rid
+
+    def encode(self, heads: Sequence[str], rels: Sequence[str],
+               tails: Sequence[str]) -> tuple[np.ndarray, np.ndarray,
+                                              np.ndarray]:
+        h = np.fromiter((self.entity_id(x) for x in heads), np.int64,
+                        len(heads))
+        r = np.fromiter((self.relation_id(x) for x in rels), np.int64,
+                        len(rels))
+        t = np.fromiter((self.entity_id(x) for x in tails), np.int64,
+                        len(tails))
+        return h, r, t
+
+
+def read_triples_tsv(path: str, *, chunk: int = DEFAULT_CHUNK
+                     ) -> Iterator[tuple[list[str], list[str], list[str],
+                                         np.ndarray]]:
+    """Yield (heads, rels, tails, vals) string chunks from a TSV triple
+    list.  Blank lines and ``#`` comments are skipped; a missing 4th column
+    means weight 1.0."""
+    heads: list[str] = []
+    rels: list[str] = []
+    tails: list[str] = []
+    vals: list[float] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split("\t")
+            if len(parts) < 3:
+                raise ValueError(f"malformed triple line: {line!r}")
+            heads.append(parts[0])
+            rels.append(parts[1])
+            tails.append(parts[2])
+            vals.append(float(parts[3]) if len(parts) > 3 else 1.0)
+            if len(heads) >= chunk:
+                yield heads, rels, tails, np.asarray(vals, np.float32)
+                heads, rels, tails, vals = [], [], [], []
+    if heads:
+        yield heads, rels, tails, np.asarray(vals, np.float32)
+
+
+def read_coo_npz(path: str, *, chunk: int = DEFAULT_CHUNK
+                 ) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray]]:
+    """Yield (rows, rels, cols, vals) id chunks from an NPZ COO file with
+    arrays ``row``/``rel``/``col`` and optional ``val`` (default 1.0)."""
+    with np.load(path) as data:
+        rows = np.asarray(data["row"], np.int64)
+        rels = np.asarray(data["rel"], np.int64)
+        cols = np.asarray(data["col"], np.int64)
+        vals = (np.asarray(data["val"], np.float32) if "val" in data
+                else np.ones(rows.shape[0], np.float32))
+    if not (rows.shape == rels.shape == cols.shape == vals.shape):
+        raise ValueError(f"COO arrays disagree: {rows.shape} {rels.shape} "
+                         f"{cols.shape} {vals.shape}")
+    for s in range(0, rows.shape[0], chunk):
+        e = s + chunk
+        yield rows[s:e], rels[s:e], cols[s:e], vals[s:e]
+
+
+class COOBuilder:
+    """Streaming COO accumulator: O(nnz) memory, duplicate coordinates sum.
+
+    ``add`` appends one id chunk; ``finalize`` lexsorts (rel, row, col) and
+    merges duplicates with ``np.add.reduceat`` — no dense intermediate at
+    any point."""
+
+    def __init__(self):
+        self._rels: list[np.ndarray] = []
+        self._rows: list[np.ndarray] = []
+        self._cols: list[np.ndarray] = []
+        self._vals: list[np.ndarray] = []
+
+    def add(self, rels: np.ndarray, rows: np.ndarray, cols: np.ndarray,
+            vals: np.ndarray) -> "COOBuilder":
+        self._rels.append(np.asarray(rels, np.int64))
+        self._rows.append(np.asarray(rows, np.int64))
+        self._cols.append(np.asarray(cols, np.int64))
+        self._vals.append(np.asarray(vals, np.float32))
+        return self
+
+    def finalize(self, *, n: int | None = None, m: int | None = None
+                 ) -> COOTensor:
+        if not self._rels:
+            return COOTensor(rels=np.zeros(0, np.int64),
+                             rows=np.zeros(0, np.int64),
+                             cols=np.zeros(0, np.int64),
+                             vals=np.zeros(0, np.float32),
+                             n=n or 0, m=m or 0)
+        rels = np.concatenate(self._rels)
+        rows = np.concatenate(self._rows)
+        cols = np.concatenate(self._cols)
+        vals = np.concatenate(self._vals)
+        n = n if n is not None else int(max(rows.max(), cols.max())) + 1
+        m = m if m is not None else int(rels.max()) + 1
+        if (rows.min() < 0 or cols.min() < 0 or rels.min() < 0
+                or rows.max() >= n or cols.max() >= n or rels.max() >= m):
+            raise ValueError("coordinate out of bounds for declared (m, n)")
+        order = np.lexsort((cols, rows, rels))
+        rels, rows, cols, vals = (rels[order], rows[order], cols[order],
+                                  vals[order])
+        new = np.empty(rels.shape[0], bool)
+        new[0] = True
+        new[1:] = ((rels[1:] != rels[:-1]) | (rows[1:] != rows[:-1])
+                   | (cols[1:] != cols[:-1]))
+        starts = np.flatnonzero(new)
+        vals = np.add.reduceat(vals, starts).astype(np.float32)
+        return COOTensor(rels=rels[starts], rows=rows[starts],
+                         cols=cols[starts], vals=vals, n=n, m=m)
+
+
+def ingest_tsv(path: str, *, chunk: int = DEFAULT_CHUNK
+               ) -> tuple[COOTensor, Vocab]:
+    """One-pass TSV ingest: build the vocab while accumulating COO chunks."""
+    vocab = Vocab()
+    builder = COOBuilder()
+    for heads, rels, tails, vals in read_triples_tsv(path, chunk=chunk):
+        h, r, t = vocab.encode(heads, rels, tails)
+        builder.add(r, h, t, vals)
+    return builder.finalize(n=vocab.n, m=vocab.m), vocab
+
+
+def ingest_npz(path: str, *, n: int | None = None, m: int | None = None,
+               chunk: int = DEFAULT_CHUNK) -> COOTensor:
+    """Chunked NPZ COO ingest (ids already assigned upstream)."""
+    builder = COOBuilder()
+    for rows, rels, cols, vals in read_coo_npz(path, chunk=chunk):
+        builder.add(rels, rows, cols, vals)
+    return builder.finalize(n=n, m=m)

@@ -1,0 +1,257 @@
+"""Virtual datasets — shard-local generation of tensors that never exist.
+
+The paper's 11 TB dense and 9 EB sparse experiments (§6.3) work because
+each rank *generates* its shard in place: the global tensor is a
+mathematical object, not a file.  This module mirrors
+``data/synthetic.py``'s generator (Gaussian-bump ground-truth features,
+Exponential(1) core, uniform multiplicative noise — same key discipline)
+but emits exactly one shard from ``(spec, i, j)``:
+
+  * factor-sized state only: every shard recomputes the (n, k) ground
+    truth A and the (m, k, k) core R from the spec seed (O(nk) work — the
+    weak-scaling contract is that no per-shard object scales with n^2);
+  * shard-local noise/pattern keys fold the shard's linear grid index into
+    the root key (the paper's per-rank seeding), so the global tensor is
+    well-defined and any shard is reproducible in isolation;
+  * ``virtual_dense_full`` / ``ShardedBCSR.to_dense`` assemble the global
+    tensor on one host — the parity oracle for small specs, never the
+    execution path.
+
+Spec strings (the ``rescalk_run --data`` syntax):
+
+    virtual:dense:n=1024,m=4,k=5,grid=2,noise=0.01,seed=0
+    virtual:bcsr:n=16384,m=4,k=5,bs=128,grid=1,density=0.02,seed=0
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sparse import BCSR
+from repro.data.synthetic import gaussian_features
+
+from .partition import ShardedBCSR, identity_partition
+
+__all__ = ["VirtualSpec", "virtual_bcsr_shard", "virtual_dense_full",
+           "virtual_dense_shard", "virtual_shard_nnzb",
+           "virtual_sharded_bcsr"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualSpec:
+    """Deterministic description of a virtual dataset; the manifest
+    fingerprint is a pure function of this."""
+    kind: str                  # "dense" | "bcsr"
+    n: int
+    m: int
+    k: int
+    bs: int = 128
+    grid: int = 1              # g (square, matches the mesh)
+    density: float = 0.02      # stored-block density (bcsr)
+    noise: float = 0.01
+    seed: int = 0
+    correlated: bool = False
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.kind not in ("dense", "bcsr"):
+            raise ValueError(f"unknown virtual kind {self.kind!r}")
+        if self.kind == "bcsr":
+            if self.n % (self.grid * self.bs):
+                raise ValueError(
+                    f"virtual bcsr requires grid*bs | n "
+                    f"({self.grid}*{self.bs} vs n={self.n})")
+        elif self.n % self.grid:
+            raise ValueError(f"virtual dense requires grid | n "
+                             f"({self.grid} vs n={self.n})")
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def n_loc(self) -> int:
+        return self.n // self.grid
+
+    @property
+    def nb(self) -> int:
+        return self.n // self.bs
+
+    @property
+    def nb_loc(self) -> int:
+        return self.nb // self.grid
+
+    @property
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def logical_bytes(self) -> int:
+        """Bytes of the dense (m, n, n) tensor this dataset represents."""
+        return self.m * self.n * self.n * self.jnp_dtype.itemsize
+
+    def spec_string(self) -> str:
+        fields = [f"n={self.n}", f"m={self.m}", f"k={self.k}"]
+        if self.kind == "bcsr":
+            fields += [f"bs={self.bs}", f"density={self.density:g}"]
+        fields += [f"grid={self.grid}", f"noise={self.noise:g}",
+                   f"seed={self.seed}"]
+        if self.correlated:
+            fields.append("correlated=1")
+        if self.dtype != "float32":
+            fields.append(f"dtype={self.dtype}")
+        return f"virtual:{self.kind}:" + ",".join(fields)
+
+    @classmethod
+    def parse(cls, s: str) -> "VirtualSpec":
+        """Parse a ``virtual:<kind>:k1=v1,k2=v2`` spec string."""
+        parts = s.split(":")
+        if len(parts) != 3 or parts[0] != "virtual":
+            raise ValueError(
+                f"bad virtual spec {s!r} (want virtual:<kind>:k=v,...)")
+        kind = parts[1]
+        kw: dict = {}
+        casts = {"n": int, "m": int, "k": int, "bs": int, "grid": int,
+                 "seed": int, "density": float, "noise": float,
+                 "correlated": lambda v: bool(int(v)), "dtype": str}
+        for item in filter(None, parts[2].split(",")):
+            key, _, val = item.partition("=")
+            if key not in casts:
+                raise ValueError(f"unknown virtual spec field {key!r}")
+            kw[key] = casts[key](val)
+        for req in ("n", "m", "k"):
+            if req not in kw:
+                raise ValueError(f"virtual spec needs {req}= ({s!r})")
+        return cls(kind=kind, **kw)
+
+    # -- ground truth (factor-sized; recomputed per shard) -------------------
+    def _keys(self):
+        root = jax.random.PRNGKey(self.seed)
+        return jax.random.split(root, 4)       # ka, kr, kp, kn
+
+    def ground_truth(self) -> tuple[jax.Array, jax.Array]:
+        """(A_true (n, k), R_true (m, k, k)) — same generator family as
+        data/synthetic.synthetic_rescal."""
+        ka, kr, _, _ = self._keys()
+        A = gaussian_features(ka, self.n, self.k,
+                              correlated=self.correlated
+                              ).astype(self.jnp_dtype)
+        R = jax.random.exponential(kr, (self.m, self.k, self.k),
+                                   self.jnp_dtype)
+        return A, R
+
+
+# ---------------------------------------------------------------------------
+# Dense shards
+# ---------------------------------------------------------------------------
+
+def virtual_dense_shard(spec: VirtualSpec, i: int, j: int) -> jax.Array:
+    """Block X^(i, j) (m, n_loc, n_loc) of the virtual dense tensor,
+    generated from (spec, shard index) alone."""
+    A, R = spec.ground_truth()
+    nl = spec.n_loc
+    Ai = jax.lax.dynamic_slice_in_dim(A, i * nl, nl)
+    Aj = jax.lax.dynamic_slice_in_dim(A, j * nl, nl)
+    X0 = jnp.einsum("ia,mab,jb->mij", Ai, R, Aj)
+    _, _, _, kn = spec._keys()
+    kij = jax.random.fold_in(kn, i * spec.grid + j)
+    delta = jax.random.uniform(kij, X0.shape, spec.jnp_dtype,
+                               1.0 - spec.noise, 1.0 + spec.noise)
+    return X0 * delta
+
+
+def virtual_dense_full(spec: VirtualSpec) -> jax.Array:
+    """Assemble the full (m, n, n) tensor from its shards (parity oracle /
+    small single-host runs; memory O(n^2) — use only when that fits)."""
+    rows = [jnp.concatenate([virtual_dense_shard(spec, i, j)
+                             for j in range(spec.grid)], axis=2)
+            for i in range(spec.grid)]
+    return jnp.concatenate(rows, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (BCSR) shards
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=256)
+def _shard_pattern(spec: VirtualSpec, i: int, j: int) -> np.ndarray:
+    """(nb_loc, nb_loc) bool stored-block pattern of shard (i, j) —
+    uniform density, diagonal blocks always stored (every entity keeps
+    support).  Deterministic in (spec, i, j); memoized because the
+    manifest (nnzb accounting), the stacking pass and the per-shard data
+    generation all consult the same pattern."""
+    _, _, kp, _ = spec._keys()
+    kij = jax.random.fold_in(kp, i * spec.grid + j)
+    keep = np.array(jax.random.uniform(kij, (spec.nb_loc, spec.nb_loc))
+                    < spec.density)
+    if i == j:
+        keep |= np.eye(spec.nb_loc, dtype=bool)
+    return keep
+
+
+def virtual_bcsr_shard(spec: VirtualSpec, i: int, j: int,
+                       pad_to: int | None = None) -> BCSR:
+    """Shard (i, j)'s local BCSR: low-rank Gaussian-bump content on the
+    stored blocks only, with shard-local multiplicative noise.  Memory is
+    O(nnzb_loc * bs^2) — the dense block X^(i,j) never exists.
+
+    ``pad_to`` front-pads with zero blocks at (0, 0) to a fixed nnzb (the
+    stacking contract of io.partition.ShardedBCSR)."""
+    keep = _shard_pattern(spec, i, j)
+    rows, cols = np.nonzero(keep)             # row-major sorted
+    A, R = spec.ground_truth()
+    bs, nl = spec.bs, spec.n_loc
+    Ab = A.reshape(spec.nb, bs, spec.k)
+    Ar = Ab[i * spec.nb_loc + rows]           # (nnzb, bs, k)
+    Ac = Ab[j * spec.nb_loc + cols]
+    data = jnp.einsum("zak,mkl,zbl->mzab", Ar, R, Ac)
+    _, _, _, kn = spec._keys()
+    kij = jax.random.fold_in(kn, i * spec.grid + j)
+    delta = jax.random.uniform(kij, data.shape, spec.jnp_dtype,
+                               1.0 - spec.noise, 1.0 + spec.noise)
+    data = (data * delta).astype(spec.jnp_dtype)
+    rows = rows.astype(np.int32)
+    cols = cols.astype(np.int32)
+    if pad_to is not None and pad_to > rows.shape[0]:
+        pad = pad_to - rows.shape[0]
+        data = jnp.concatenate(
+            [jnp.zeros((spec.m, pad, bs, bs), data.dtype), data], axis=1)
+        rows = np.concatenate([np.zeros(pad, np.int32), rows])
+        cols = np.concatenate([np.zeros(pad, np.int32), cols])
+    return BCSR(data=data, block_rows=jnp.asarray(rows),
+                block_cols=jnp.asarray(cols), n=nl)
+
+
+def virtual_shard_nnzb(spec: VirtualSpec) -> np.ndarray:
+    """(g, g) stored-block counts — index-only accounting, no block data
+    is generated (what the manifest reports for huge specs)."""
+    g = spec.grid
+    return np.array([[int(_shard_pattern(spec, i, j).sum())
+                      for j in range(g)] for i in range(g)], np.int64)
+
+
+def virtual_sharded_bcsr(spec: VirtualSpec) -> ShardedBCSR:
+    """All shards of a virtual sparse dataset, stacked into the engine
+    operand layout.  The partition is the identity (the generator lays
+    blocks out balanced by construction)."""
+    if spec.kind != "bcsr":
+        raise ValueError("virtual_sharded_bcsr needs a bcsr spec")
+    g = spec.grid
+    nnzb = virtual_shard_nnzb(spec)
+    z_max = max(int(nnzb.max()), 1)
+    data, rows, cols = [], [], []
+    for i in range(g):
+        drow, rrow, crow = [], [], []
+        for j in range(g):
+            sh = virtual_bcsr_shard(spec, i, j, pad_to=z_max)
+            drow.append(sh.data)
+            rrow.append(sh.block_rows)
+            crow.append(sh.block_cols)
+        data.append(jnp.stack(drow))
+        rows.append(jnp.stack(rrow))
+        cols.append(jnp.stack(crow))
+    part = identity_partition(spec.n, spec.bs, g)
+    return ShardedBCSR(part=part, data=jnp.stack(data),
+                       rows=jnp.stack(rows), cols=jnp.stack(cols),
+                       nnzb=nnzb)

@@ -54,10 +54,21 @@ def _kernel(rows_ref, cols_ref, data_ref, b_ref, out_ref):
 def bcsr_spmm(sp: BCSR, B: jax.Array, *, interpret: bool = False
               ) -> jax.Array:
     """sp: BCSR (m, nnzb, bs, bs) with row-major-sorted blocks; B: (n, k)
-    -> (m, n, k)."""
+    -> (m, n, k).
+
+    Ingest edge cases (ISSUE 3): an empty pattern short-circuits to zeros
+    (a 0-sized grid axis is invalid), and a logical n that the block size
+    does not divide is handled by zero-padding B's entity axis to the
+    blocked extent and cropping the output back — the stored tail blocks
+    are already zero-masked by construction (core/sparse.py).
+    """
     m, nnzb, bs, _ = sp.data.shape
-    nb = sp.n // bs
+    nb = sp.nblocks
     k = B.shape[1]
+    if nnzb == 0:
+        return jnp.zeros((m, sp.n, k), B.dtype)
+    if nb * bs != sp.n:
+        B = jnp.pad(B, ((0, nb * bs - sp.n), (0, 0)))
     Bb = B.reshape(nb, bs, k)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -79,4 +90,4 @@ def bcsr_spmm(sp: BCSR, B: jax.Array, *, interpret: bool = False
         interpret=interpret,
         name="bcsr_spmm",
     )(sp.block_rows, sp.block_cols, sp.data, Bb)
-    return out.reshape(m, sp.n, k)
+    return out.reshape(m, nb * bs, k)[:, :sp.n]

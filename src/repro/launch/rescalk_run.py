@@ -8,8 +8,24 @@ checkpoints make an interrupted sweep resumable without recomputing
 completed units (checkpoint tags derive from the unit's (k, member-range)
 identity — never from PRNG key internals).
 
+Data sources (``--data``, the repro.io ingest layer):
+
+    (default)             synthetic dense tensor (data/synthetic.py)
+    path.tsv              triple list -> vocab -> COO -> BCSR (--bs blocks)
+    path.npz              pre-numbered COO arrays -> BCSR
+    virtual:dense:n=...   shard-generated dense tensor (io/virtual.py)
+    virtual:bcsr:n=...    shard-generated block-sparse tensor; the dense
+                          tensor it represents never exists anywhere
+
+Sparse operands run the stored-block perturbation ensemble (paper §4.2);
+the printed manifest line shows logical vs resident bytes — the exascale
+gap this layer exists to open.
+
     PYTHONPATH=src python -m repro.launch.rescalk_run \
         --n 256 --m 4 --k-true 5 --k-min 2 --k-max 7 --iters 300
+
+    PYTHONPATH=src python -m repro.launch.rescalk_run \
+        --data virtual:bcsr:n=4096,m=3,k=4,density=0.05 --k-min 3 --k-max 5
 
 Interrupt/resume drill (what scripts/ci_test.sh exercises):
 
@@ -37,6 +53,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--k-max", type=int, default=7)
     ap.add_argument("--r", type=int, default=4)
     ap.add_argument("--iters", type=int, default=300)
+    ap.add_argument("--data", default=None,
+                    help="dataset: a .tsv/.npz triple file or a "
+                         "virtual:{dense|bcsr}:k=v,... spec (default: "
+                         "synthetic dense from --n/--m/--k-true)")
+    ap.add_argument("--bs", type=int, default=128,
+                    help="BCSR block size for .tsv/.npz ingest")
     ap.add_argument("--schedule", default="batched",
                     choices=("batched", "sliced"))
     ap.add_argument("--init", default="random", choices=("random", "nndsvd"))
@@ -57,14 +79,58 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
+def load_operand(args):
+    """Resolve --data into a sweep operand + a descriptive label.
+
+    Returns (operand, A_true | None): ground truth only exists for the
+    default synthetic tensor (used for the correlation report)."""
+    from repro.io import manifest_of
+    if args.data is None:
+        key = jax.random.PRNGKey(0)
+        X, A_true, _ = synthetic_rescal(key, n=args.n, m=args.m,
+                                        k=args.k_true)
+        return X, A_true
+    if args.data.startswith("virtual:"):
+        from repro.io import (VirtualSpec, virtual_dense_full,
+                              virtual_sharded_bcsr)
+        spec = VirtualSpec.parse(args.data)
+        man = manifest_of(spec)
+        print(f"[io] {man.kind} logical "
+              f"{man.logical_bytes / 2**30:.2f} GiB -> resident "
+              f"{man.resident_bytes / 2**30:.3f} GiB "
+              f"({man.compression:.0f}x)")
+        if spec.kind == "dense":
+            return virtual_dense_full(spec), None
+        sharded = virtual_sharded_bcsr(spec)
+        # single-host run: collapse one-shard layouts to the plain BCSR
+        return (sharded.to_bcsr() if spec.grid == 1 else sharded), None
+    from repro.io import coo_to_bcsr, ingest_npz, ingest_tsv
+    if args.data.endswith(".tsv"):
+        coo, vocab = ingest_tsv(args.data)
+        print(f"[io] {args.data}: {vocab.n} entities, {vocab.m} relations, "
+              f"{coo.nnz} triples")
+    elif args.data.endswith(".npz"):
+        coo = ingest_npz(args.data)
+        print(f"[io] {args.data}: n={coo.n} m={coo.m} nnz={coo.nnz}")
+    else:
+        raise SystemExit(f"--data must be .tsv, .npz or virtual:..., "
+                         f"got {args.data!r}")
+    sp = coo_to_bcsr(coo, bs=args.bs)
+    man = manifest_of(sp)
+    print(f"[io] bcsr bs={args.bs} nnzb={sp.nnzb} logical "
+          f"{man.logical_bytes / 2**20:.1f} MiB -> resident "
+          f"{man.resident_bytes / 2**20:.1f} MiB")
+    return sp, None
+
+
 def main():
     args = build_parser().parse_args()
 
-    key = jax.random.PRNGKey(0)
-    X, A_true, _ = synthetic_rescal(key, n=args.n, m=args.m, k=args.k_true)
-    print(f"tensor {X.shape}, planted k={args.k_true}, "
-          f"schedule={args.schedule}, mode={args.mode}, "
-          f"criterion={args.criterion}")
+    X, A_true = load_operand(args)
+    from repro.io import operand_dims
+    m, n = operand_dims(X)
+    print(f"operand m={m} n={n}, schedule={args.schedule}, "
+          f"mode={args.mode}, criterion={args.criterion}")
 
     cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
                         n_perturbations=args.r, rescal_iters=args.iters,
@@ -83,14 +149,15 @@ def main():
         return
 
     print("\n" + res.summary())
-    print(f"\nselected k_opt = {res.k_opt} (planted {args.k_true})")
+    print(f"\nselected k_opt = {res.k_opt}"
+          + (f" (planted {args.k_true})" if A_true is not None else ""))
     if sched.report is not None:
         rep = sched.report
         print(f"[sweep] {len(rep.units)} units, {rep.n_reused} reused, "
               f"{rep.total_seconds:.2f}s compute")
-    med = res.per_k[res.k_opt].A_median
-    A = np.asarray(A_true)
-    if res.k_opt == args.k_true:
+    if A_true is not None and res.k_opt == args.k_true:
+        med = res.per_k[res.k_opt].A_median
+        A = np.asarray(A_true)
         corrs = [max(abs(np.corrcoef(A[:, c], med[:, j])[0, 1])
                      for j in range(med.shape[1]))
                  for c in range(args.k_true)]

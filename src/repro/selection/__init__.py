@@ -28,15 +28,20 @@ the historical API and delegates here; new code should import from
 from .types import KResult, RescalkConfig, RescalkResult
 from .criteria import CRITERIA, select
 from .ensemble import (EnsembleResult, member_keys, perturb_blocked,
-                       run_ensemble, run_ensemble_reference)
+                       perturb_sharded_blocked, run_ensemble,
+                       run_ensemble_bcsr_dense_reference,
+                       run_ensemble_bcsr_sharded_reference,
+                       run_ensemble_reference)
 from .report import SelectionReport, UnitRecord
 from .scheduler import (SweepInterrupted, SweepScheduler, WorkUnit,
                         plan_sweep, reduce_k)
 
 __all__ = [
     "CRITERIA", "select",
-    "EnsembleResult", "member_keys", "perturb_blocked", "run_ensemble",
-    "run_ensemble_reference",
+    "EnsembleResult", "member_keys", "perturb_blocked",
+    "perturb_sharded_blocked", "run_ensemble",
+    "run_ensemble_bcsr_dense_reference",
+    "run_ensemble_bcsr_sharded_reference", "run_ensemble_reference",
     "SelectionReport", "UnitRecord",
     "KResult", "RescalkConfig", "RescalkResult", "SweepInterrupted",
     "SweepScheduler", "WorkUnit", "plan_sweep", "reduce_k",

@@ -31,9 +31,22 @@ of one (k, member-set) work unit as **one jitted program**:
     tensors live on device, which for huge (m, n, n) can exceed HBM; the
     loop bounds residency to one member.
 
-Mesh limitations (ROADMAP open items): dense operands only (BCSR ensemble
-members pending) and ``init="random"`` only (NNDSVD needs a distributed
-eigensolve; randomized_eigh is distMM-compatible but not wired up yet).
+  * **BCSR operands** (ISSUE 3 / paper §4.2) — every mode also accepts
+    block-sparse tensors: a plain ``core.sparse.BCSR`` runs the batched
+    vmap (or loop) program with the perturbation applied to the *stored
+    blocks only* (``perturb_bcsr`` — the sparsity pattern is data, not
+    noise), and an ``io.partition.ShardedBCSR`` + mesh runs the sharded
+    program built from ``dist.engine.get_mu_iter("bcsr", ...)`` with
+    shard-local stored-block perturbation.  ``run_ensemble_bcsr_dense_
+    reference`` replays the identical noise through the dense MU pipeline
+    (sparse==dense member-for-member is the acceptance contract);
+    ``run_ensemble_bcsr_sharded_reference`` replays the mesh path's
+    blocked noise on a single host for multi-device parity.
+
+Mesh limitation (ROADMAP open item): ``init="random"`` only (NNDSVD needs
+a distributed eigensolve; randomized_eigh is distMM-compatible but not
+wired up yet); BCSR operands are random-init only for the same reason
+(NNDSVD eigensolves the dense tensor).
 """
 from __future__ import annotations
 
@@ -112,6 +125,219 @@ def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
 
     A, R, errs = jax.vmap(one_member)(keys)
     return A, R, errs
+
+
+# ---------------------------------------------------------------------------
+# BCSR members (stored-block perturbation, paper §4.2)
+# ---------------------------------------------------------------------------
+
+def _is_sharded_bcsr(X) -> bool:
+    from repro.io.partition import ShardedBCSR
+    return isinstance(X, ShardedBCSR)
+
+
+def _require_random_init(cfg, what: str):
+    if cfg.init != "random":
+        raise NotImplementedError(
+            f"{what} supports init='random' only (NNDSVD eigensolves the "
+            f"dense tensor; distributed/sparse NNDSVD is a ROADMAP item)")
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "delta", "eps"))
+def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
+                          eps: float):
+    """All members of one unit on a BCSR operand as one vmapped program.
+    Same (pkey, fkey) split discipline as the dense program; the
+    perturbation draws noise for the stored blocks only."""
+    from repro.core.sparse import (perturb_bcsr, sparse_mu_step,
+                                   sparse_rel_error)
+    n, m = sp.n, sp.m
+
+    def one_member(member_key):
+        pkey, fkey = jax.random.split(member_key)
+        sp_q = perturb_bcsr(pkey, sp, delta)
+        st = init_factors(fkey, n, m, k, dtype=sp.data.dtype)
+
+        def body(_, c):
+            return sparse_mu_step(sp_q, c[0], c[1], eps)
+
+        A, R = jax.lax.fori_loop(0, iters, body, (st.A, st.R))
+        st = normalize(RescalState(A=A, R=R, step=st.step))
+        return st.A, st.R, sparse_rel_error(sp, st.A, st.R)
+
+    return jax.vmap(one_member)(keys)
+
+
+def _loop_members_bcsr(sp, keys, k: int, cfg) -> EnsembleResult:
+    """Sequential BCSR members — the memory-bound fallback (one perturbed
+    pattern's blocks live at a time, vs r copies in the batched program)."""
+    from repro.core.sparse import (perturb_bcsr, sparse_mu_step,
+                                   sparse_rel_error)
+    from repro.core.rescal import EPS_DEFAULT as eps
+    A_l, R_l, errs = [], [], []
+    for mkey in keys:
+        pkey, fkey = jax.random.split(mkey)
+        sp_q = perturb_bcsr(pkey, sp, cfg.perturbation_delta)
+        st = init_factors(fkey, sp.n, sp.m, k, dtype=sp.data.dtype)
+        A, R = st.A, st.R
+        for _ in range(cfg.rescal_iters):
+            A, R = sparse_mu_step(sp_q, A, R, eps)
+        st = normalize(RescalState(A=A, R=R, step=st.step))
+        A_l.append(st.A)
+        R_l.append(st.R)
+        errs.append(sparse_rel_error(sp, st.A, st.R))
+    return EnsembleResult(A=jnp.stack(A_l), R=jnp.stack(R_l),
+                          errors=jnp.stack(errs))
+
+
+def run_ensemble_bcsr_dense_reference(sp, k: int, cfg, *,
+                                      members: Sequence[int] | None = None
+                                      ) -> EnsembleResult:
+    """The acceptance oracle: replay each BCSR member's exact stored-block
+    noise through the DENSE member pipeline (densify the perturbed tensor,
+    run the dense batched MU).  Same member keys, same init draws — so
+    batched BCSR members must match this member-for-member to float
+    tolerance."""
+    from repro.core.rescal import EPS_DEFAULT as eps
+    from repro.core.rescal import mu_step_batched, rel_error
+    from repro.core.sparse import perturb_bcsr, to_dense
+    r = cfg.n_perturbations
+    members = tuple(members) if members is not None else tuple(range(r))
+    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    X_ref = to_dense(sp)
+    A_l, R_l, errs = [], [], []
+    for mkey in keys:
+        pkey, fkey = jax.random.split(mkey)
+        X_q = to_dense(perturb_bcsr(pkey, sp, cfg.perturbation_delta))
+        st = init_factors(fkey, sp.n, sp.m, k, dtype=X_q.dtype)
+        for _ in range(cfg.rescal_iters):
+            st = mu_step_batched(X_q, st, eps)
+        st = normalize(st)
+        A_l.append(st.A)
+        R_l.append(st.R)
+        errs.append(rel_error(X_ref, st.A, st.R))
+    return EnsembleResult(A=jnp.stack(A_l), R=jnp.stack(R_l),
+                          errors=jnp.stack(errs))
+
+
+def perturb_sharded_blocked(key: jax.Array, sharded, q,
+                            delta: float = 0.02):
+    """Host emulation of the BCSR mesh path's shard-local perturbation:
+    perturb each (i, j) shard's stored blocks with ``perturb_shard`` keyed
+    by (member id, linear grid index) — bit-identical noise to the sharded
+    program (the sparse twin of ``perturb_blocked``)."""
+    g = sharded.g
+    rows = []
+    for i in range(g):
+        cols = []
+        for j in range(g):
+            cols.append(perturb_shard(key, sharded.data[i, j], q,
+                                      i * g + j, delta))
+        rows.append(jnp.stack(cols))
+    return sharded.with_data(jnp.stack(rows))
+
+
+def run_ensemble_bcsr_sharded_reference(sharded, k: int, cfg, *,
+                                        members: Sequence[int] | None = None
+                                        ) -> EnsembleResult:
+    """Single-host sequential run replaying the mesh program's blocked
+    noise on a ShardedBCSR — the oracle for BCSR mesh-vs-host parity."""
+    from repro.core.rescal import EPS_DEFAULT as eps
+    from repro.core.sparse import sparse_mu_step, sparse_rel_error
+    r = cfg.n_perturbations
+    members = tuple(members) if members is not None else tuple(range(r))
+    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    sp_ref = sharded.to_bcsr()
+    A_l, R_l, errs = [], [], []
+    for mkey, q in zip(keys, members):
+        pkey, fkey = jax.random.split(mkey)
+        sp_q = perturb_sharded_blocked(pkey, sharded, q,
+                                       cfg.perturbation_delta).to_bcsr()
+        st = init_factors(fkey, sharded.n_pad, sharded.m, k,
+                          dtype=sp_q.data.dtype)
+        A, R = st.A, st.R
+        for _ in range(cfg.rescal_iters):
+            A, R = sparse_mu_step(sp_q, A, R, eps)
+        st = normalize(RescalState(A=A, R=R, step=st.step))
+        A_l.append(st.A)
+        R_l.append(st.R)
+        errs.append(sparse_rel_error(sp_ref, st.A, st.R))
+    return EnsembleResult(A=jnp.stack(A_l), R=jnp.stack(R_l),
+                          errors=jnp.stack(errs))
+
+
+@functools.lru_cache(maxsize=64)
+def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
+                            grid: int, schedule: str = "batched",
+                            delta: float = 0.02, iters: int = 200,
+                            dtype=jnp.float32, key_ndim: int = 2):
+    """The BCSR twin of ``make_mesh_ensemble``: a jitted sharded program
+    ``(data, rows, cols, keys, ids) -> (A_ens, R_ens, errs)`` over the
+    stacked shard layout of ``io.partition.ShardedBCSR``.  Each device
+    holds only its (m, nnzb_loc, bs, bs) blocks; perturbation multiplies
+    the stored blocks shard-locally (zero padding blocks stay zero), so
+    neither the global tensor nor any member copy of it ever exists."""
+    from jax.experimental.shard_map import shard_map
+    from repro.core.sparse import BCSR
+    from repro.dist import sharding as sh
+    from repro.dist.engine import (DistRescalConfig, get_mu_iter,
+                                   local_normalize, local_rel_error_bcsr)
+
+    gr = mesh.shape[sh.ROW_AXIS]
+    gc = mesh.shape[sh.COL_AXIS]
+    if gr != gc:
+        raise ValueError(f"BCSR ensembles need a square grid, got "
+                         f"({gr}, {gc})")
+    if grid != gr:
+        # shard_map would happily re-split a mismatched leading (g, g)
+        # axis and the local body would keep only data[0, 0] — silently
+        # dropping shards — so the layouts must match exactly
+        raise ValueError(f"operand was partitioned for a {grid}x{grid} "
+                         f"grid but the mesh grid is {gr}x{gc}; "
+                         f"re-partition for this mesh")
+    if n_pad % gr:
+        raise ValueError(f"the grid side {gr} must divide n_pad={n_pad}")
+    pods = dict(mesh.shape).get(sh.ENSEMBLE_AXIS, 1)
+    if r_run % pods:
+        raise ValueError(f"r_run={r_run} members are not divisible by "
+                         f"pods={pods}")
+
+    dcfg = DistRescalConfig(schedule=schedule)
+    it = get_mu_iter("bcsr", schedule)
+    mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
+    x_spec, i_spec, _, _ = sh.bcsr_specs()
+    n_loc = n_pad // gr
+
+    def local(data, rows, cols, keys_l, ids_l):
+        spl = BCSR(data=data[0, 0], block_rows=rows[0, 0],
+                   block_cols=cols[0, 0], n=n_loc)
+        i = jax.lax.axis_index(sh.ROW_AXIS)
+        j = jax.lax.axis_index(sh.COL_AXIS)
+        lin = i * gc + j
+
+        def one_member(mkey, q):
+            pkey, fkey = jax.random.split(mkey)
+            sp_q = spl._replace(
+                data=perturb_shard(pkey, spl.data, q, lin, delta))
+            st0 = init_factors(fkey, n_pad, m, k, dtype=dtype)
+            Ai = jax.lax.dynamic_slice_in_dim(st0.A, i * n_loc, n_loc,
+                                              axis=0)
+
+            def body(_, c):
+                return it(sp_q, c[0], c[1], dcfg)
+
+            Ai, R = jax.lax.fori_loop(0, iters, body, (Ai, st0.R))
+            Ai, R = local_normalize(Ai, R)
+            return Ai, R, local_rel_error_bcsr(spl, Ai, R)
+
+        return jax.vmap(one_member)(keys_l, ids_l)
+
+    sharded = shard_map(
+        local, mesh=mesh,
+        in_specs=(x_spec, i_spec, i_spec, mspecs["keys"], mspecs["ids"]),
+        out_specs=(mspecs["A"], mspecs["R"], mspecs["err"]),
+        check_rep=False)
+    return jax.jit(sharded)
 
 
 # ---------------------------------------------------------------------------
@@ -227,30 +453,64 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
                  mesh=None, mode: str = "batched") -> EnsembleResult:
     """Run the perturbation-ensemble members of candidate rank k.
 
+    `X` is the operand: a dense (m, n, n) array, a ``core.sparse.BCSR``
+    (stored-block perturbation, single host), or an
+    ``io.partition.ShardedBCSR`` (balanced shards; with `mesh` the fully
+    sharded program, without it the merged single-host equivalent).
     `cfg` is a RescalkConfig-shaped object (duck-typed: n_perturbations,
     perturbation_delta, rescal_iters, schedule, init, seed).  `members`
     selects a subset of the r member ids (a scheduler work unit); default
     all.  `mesh` switches to the sharded program; `mode` selects batched
     vs sequential-loop execution on a single host.
     """
+    from repro.core.sparse import BCSR
     r = cfg.n_perturbations
     members = tuple(members) if members is not None else tuple(range(r))
     keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    sharded = X if _is_sharded_bcsr(X) else None
     if mesh is not None:
         if mode != "batched":
             raise ValueError(
                 f"mode={mode!r} is host-only; the mesh path is always the "
                 f"batched sharded program (drop mesh= for the sequential "
                 f"loop)")
+        ids = jnp.asarray(members, dtype=jnp.int32)
+        if sharded is not None:
+            _require_random_init(cfg, "the BCSR mesh ensemble")
+            prog = make_mesh_ensemble_bcsr(
+                mesh, k=k, n_pad=sharded.n_pad, m=sharded.m,
+                r_run=len(members), grid=sharded.g, schedule=cfg.schedule,
+                delta=cfg.perturbation_delta, iters=cfg.rescal_iters,
+                dtype=sharded.data.dtype, key_ndim=keys.ndim)
+            A, R, errs = prog(sharded.data, sharded.rows, sharded.cols,
+                              keys, ids)
+            return EnsembleResult(A=A, R=R, errors=errs)
+        if isinstance(X, BCSR):
+            raise ValueError(
+                "a plain BCSR cannot be mesh-sharded — partition it "
+                "(io.partition.partition_coo / partition_dense) and pass "
+                "the ShardedBCSR")
         m, n, _ = X.shape
         prog = make_mesh_ensemble(
             mesh, k=k, n=n, m=m, r_run=len(members),
             schedule=cfg.schedule, delta=cfg.perturbation_delta,
             iters=cfg.rescal_iters, init=cfg.init, dtype=X.dtype,
             key_ndim=keys.ndim)
-        ids = jnp.asarray(members, dtype=jnp.int32)
         A, R, errs = prog(X, keys, ids)
         return EnsembleResult(A=A, R=R, errors=errs)
+    if sharded is not None or isinstance(X, BCSR):
+        # single host: a sharded operand collapses to its merged global
+        # BCSR (permuted entity space — same space the mesh factors use)
+        sp = sharded.to_bcsr() if sharded is not None else X
+        _require_random_init(cfg, "BCSR ensembles")
+        if mode == "batched":
+            A, R, errs = _batched_members_bcsr(
+                sp, keys, k=k, iters=cfg.rescal_iters,
+                delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+            return EnsembleResult(A=A, R=R, errors=errs)
+        if mode == "loop":
+            return _loop_members_bcsr(sp, keys, k, cfg)
+        raise ValueError(f"unknown ensemble mode {mode!r}")
     if mode == "batched":
         A, R, errs = _batched_members(
             X, keys, k=k, iters=cfg.rescal_iters, schedule=cfg.schedule,

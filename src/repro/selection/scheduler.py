@@ -98,11 +98,18 @@ def reduce_k(X, cfg: RescalkConfig, k: int, A_ens, R_ens,
     clustering), score stability (silhouettes), regress R against the
     median factor, and measure the robust reconstruction error.  Shared by
     the scheduler and the legacy core.rescalk loop so the two paths cannot
-    drift."""
+    drift.  `X` may be dense or a ``core.sparse.BCSR`` (the regression and
+    error swap to their spmm twins; clustering is factor-only either way)."""
+    from repro.core.sparse import BCSR, sparse_regress_R, sparse_rel_error
     clus: ClusterResult = custom_cluster(A_ens, R_ens)
     sil: SilhouetteResult = silhouettes(clus.A_aligned)
-    R_reg = regress_R(X, clus.A_median, iters=cfg.regress_iters)
-    err = float(rel_error(X, clus.A_median, R_reg))
+    if isinstance(X, BCSR):
+        A_med = jax.numpy.asarray(clus.A_median)
+        R_reg = sparse_regress_R(X, A_med, iters=cfg.regress_iters)
+        err = float(sparse_rel_error(X, A_med, R_reg))
+    else:
+        R_reg = regress_R(X, clus.A_median, iters=cfg.regress_iters)
+        err = float(rel_error(X, clus.A_median, R_reg))
     return KResult(
         k=k, s_min=float(sil.s_min), s_mean=float(sil.s_mean),
         rel_err=err, A_median=np.asarray(clus.A_median),
@@ -192,18 +199,17 @@ class SweepScheduler:
     def _fingerprint(self, X) -> dict:
         """What a unit checkpoint's validity depends on: the full sweep
         config, the execution mode (batched/loop agree to tolerance but the
-        mesh's blocked noise does not), the mesh layout, and the operand
-        shape.  Unit tags alone are deliberately config-blind (pure grid
-        identity), so this guard is what stops a resumed sweep from
-        silently reusing units computed under a different configuration."""
+        mesh's blocked noise does not), the mesh layout, and the operand's
+        ``io.manifest`` fingerprint (shape + dtype + content digest +
+        sparsity structure — the digest that used to be inlined here as an
+        ad-hoc two-moment hash).  Unit tags alone are deliberately
+        config-blind (pure grid identity), so this guard is what stops a
+        resumed sweep from silently reusing units computed under a
+        different configuration or against different data."""
+        from repro.io.manifest import manifest_of
         fp = dataclasses.asdict(self.cfg)
-        # cheap content digest: same-shape-different-data X must also
-        # invalidate the dir (two moments catch permutations too).
-        # Computed in place — works for device arrays without a host copy.
-        fp.update(mode=self.mode, x_shape=list(X.shape),
-                  x_dtype=str(X.dtype),
-                  x_sum=f"{float(X.sum()):.6e}",
-                  x_sumsq=f"{float((X * X).sum()):.6e}",
+        fp.update(mode=self.mode,
+                  manifest=manifest_of(X).fingerprint(),
                   mesh=None if self.mesh is None else
                   {str(a): int(s) for a, s in dict(self.mesh.shape).items()})
         return fp
@@ -228,13 +234,19 @@ class SweepScheduler:
 
     # -- unit execution -----------------------------------------------------
 
+    @staticmethod
+    def _operand_dtype(X):
+        return getattr(X, "dtype", None) or X.data.dtype
+
     def _unit_like(self, X, unit: WorkUnit) -> dict:
-        m, n, _ = X.shape
+        from repro.io.manifest import operand_dims
+        m, n = operand_dims(X)
+        dtype = self._operand_dtype(X)
         r_u, k = len(unit.members), unit.k
         sds = jax.ShapeDtypeStruct
-        return {"A": sds((r_u, n, k), X.dtype),
-                "R": sds((r_u, m, k, k), X.dtype),
-                "errors": sds((r_u,), X.dtype)}
+        return {"A": sds((r_u, n, k), dtype),
+                "R": sds((r_u, m, k, k), dtype),
+                "errors": sds((r_u,), dtype)}
 
     def _try_restore(self, X, unit: WorkUnit) -> UnitOutcome | None:
         if not self.ckpt_dir:
@@ -275,17 +287,25 @@ class SweepScheduler:
     # -- the sweep ----------------------------------------------------------
 
     def run(self, X) -> RescalkResult:
+        from .ensemble import _is_sharded_bcsr
         cfg = self.cfg
         ks = cfg.ks
         if self.ckpt_dir:
             self._check_ckpt_config(X)
+        # the per-k reduction runs on one host: a sharded operand collapses
+        # to its merged global BCSR (same permuted factor space).  Without
+        # a mesh the units execute on the merged tensor too — merged ONCE
+        # here, not per unit (run_ensemble would otherwise re-merge on
+        # every call).
+        X_red = X.to_bcsr() if _is_sharded_bcsr(X) else X
+        X_exec = X if self.mesh is not None else X_red
         expected = {k: sum(1 for u in self.units if u.k == k) for k in ks}
         pending: dict[int, list[UnitOutcome]] = {k: [] for k in ks}
         per_k: dict[int, KResult] = {}
         records: list[UnitRecord] = []
         executed = 0
         for pos, unit in enumerate(self.units):
-            out = self._try_restore(X, unit)
+            out = self._try_restore(X_exec, unit)
             if out is None:
                 # cap checked BEFORE computing, so stop_after_units=N
                 # really means "compute at most N" (0 = resume-only)
@@ -293,7 +313,7 @@ class SweepScheduler:
                         and executed >= self.stop_after_units):
                     raise SweepInterrupted(executed, pos, len(self.units),
                                            resumable=bool(self.ckpt_dir))
-                out = self._execute_unit(X, unit)
+                out = self._execute_unit(X_exec, unit)
                 executed += 1
             pending[unit.k].append(out)
             if len(pending[unit.k]) < expected[unit.k]:
@@ -308,7 +328,7 @@ class SweepScheduler:
                                    for o in outs])
             for o in outs:
                 o.result = None
-            per_k[k] = reduce_k(X, cfg, k, A_ens, R_ens, errs)
+            per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
             records.extend(
                 UnitRecord(uid=o.unit.uid, k=k, members=list(o.unit.members),
                            seconds=o.seconds, reused=o.reused,

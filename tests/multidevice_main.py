@@ -270,6 +270,51 @@ def check_selection_mesh_ensemble():
                                    rtol=5e-4, atol=1e-5)
 
 
+def check_selection_mesh_ensemble_bcsr():
+    """The BCSR mesh ensemble (io.partition shards, stored-block
+    perturbation fused in shard-locally) must match the single-host
+    reference replaying the same blocked noise on the merged tensor —
+    with and without a pod axis."""
+    from repro.io import partition_coo
+    from repro.io.triples import COOBuilder
+    from repro.selection import (RescalkConfig, run_ensemble,
+                                 run_ensemble_bcsr_sharded_reference)
+
+    rng = np.random.default_rng(0)
+    n, m, nnz = 128, 2, 1500
+    ii = np.minimum(rng.zipf(1.5, nnz) - 1, n - 1)
+    jj = rng.integers(0, n, nnz)
+    rr = rng.integers(0, m, nnz)
+    vv = (rng.random(nnz) + 0.1).astype(np.float32)
+    coo = COOBuilder().add(rr, ii, jj, vv).finalize(n=n, m=m)
+    sharded = partition_coo(coo, bs=16, grid=2)
+    assert sharded.balance <= 1.5, sharded.balance
+
+    cfg = RescalkConfig(k_min=3, k_max=3, n_perturbations=4,
+                        rescal_iters=40, init="random", seed=4)
+    # a partition built for a different grid must be rejected, not
+    # silently re-split (shard_map would drop shards)
+    wrong = partition_coo(coo, bs=16, grid=1)
+    try:
+        run_ensemble(wrong, 3, cfg, mesh=mesh2x2())
+    except ValueError as e:
+        assert "re-partition" in str(e), e
+    else:
+        raise AssertionError("grid mismatch was not rejected")
+
+    res_ref = run_ensemble_bcsr_sharded_reference(sharded, 3, cfg)
+    for mesh in (mesh_pod(), mesh2x2()):
+        res_mesh = run_ensemble(sharded, 3, cfg, mesh=mesh)
+        # float32 segment-sum order differs shard-local vs merged: keep a
+        # slightly wider band than the dense check
+        np.testing.assert_allclose(res_mesh.errors, res_ref.errors,
+                                   rtol=1e-3, atol=5e-5)
+        np.testing.assert_allclose(res_mesh.A, res_ref.A, rtol=2e-3,
+                                   atol=5e-5)
+        np.testing.assert_allclose(res_mesh.R, res_ref.R, rtol=2e-3,
+                                   atol=5e-5)
+
+
 def check_clustering_sharded_similarity():
     """The clustering similarity einsum under pjit == host einsum."""
     from repro.core.clustering import _similarity

@@ -1,0 +1,210 @@
+"""repro.io: chunked triple ingest, vocab, streaming COO, manifests, and
+shard-local virtual generators."""
+import numpy as np
+import pytest
+
+from repro.io import (COOBuilder, DatasetManifest, Vocab, VirtualSpec,
+                      coo_to_bcsr, ingest_npz, ingest_tsv, manifest_of,
+                      operand_dims, partition_coo, read_triples_tsv,
+                      virtual_bcsr_shard, virtual_dense_full,
+                      virtual_dense_shard, virtual_sharded_bcsr,
+                      virtual_shard_nnzb)
+from repro.core import sparse as sp
+
+
+TSV = """\
+# comment line
+
+alice\tknows\tbob\t2.0
+bob\tknows\tcarol
+alice\tlikes\tcarol\t0.5
+carol\tlikes\talice
+alice\tknows\tbob\t1.0
+"""
+
+
+@pytest.fixture
+def tsv_path(tmp_path):
+    p = tmp_path / "triples.tsv"
+    p.write_text(TSV)
+    return str(p)
+
+
+class TestTriples:
+    def test_reader_chunks_and_skips(self, tsv_path):
+        chunks = list(read_triples_tsv(tsv_path, chunk=2))
+        assert [len(c[0]) for c in chunks] == [2, 2, 1]
+        flat = [h for c in chunks for h in c[0]]
+        assert flat == ["alice", "bob", "alice", "carol", "alice"]
+
+    def test_vocab_first_appearance_order(self, tsv_path):
+        coo, vocab = ingest_tsv(tsv_path)
+        assert vocab.entities == {"alice": 0, "bob": 1, "carol": 2}
+        assert vocab.relations == {"knows": 0, "likes": 1}
+        assert (coo.n, coo.m) == (3, 2)
+
+    def test_duplicates_sum(self, tsv_path):
+        coo, _ = ingest_tsv(tsv_path)
+        X = coo.to_dense()
+        assert X[0, 0, 1] == pytest.approx(3.0)   # alice-knows-bob 2.0 + 1.0
+        assert X[0, 1, 2] == pytest.approx(1.0)   # default weight
+        assert coo.nnz == 4                       # 5 lines, 1 duplicate
+
+    def test_chunk_size_invariance(self, tsv_path):
+        a, _ = ingest_tsv(tsv_path, chunk=1)
+        b, _ = ingest_tsv(tsv_path, chunk=1000)
+        np.testing.assert_array_equal(a.rows, b.rows)
+        np.testing.assert_allclose(a.vals, b.vals)
+
+    def test_malformed_line_raises(self, tmp_path):
+        p = tmp_path / "bad.tsv"
+        p.write_text("only_two\tcols\n")
+        with pytest.raises(ValueError, match="malformed"):
+            list(read_triples_tsv(str(p)))
+
+    def test_npz_roundtrip(self, tmp_path):
+        rng = np.random.default_rng(0)
+        row = rng.integers(0, 50, 200)
+        col = rng.integers(0, 50, 200)
+        rel = rng.integers(0, 3, 200)
+        val = rng.random(200).astype(np.float32)
+        p = tmp_path / "coo.npz"
+        np.savez(p, row=row, col=col, rel=rel, val=val)
+        coo = ingest_npz(str(p), n=50, m=3, chunk=7)
+        X = np.zeros((3, 50, 50), np.float32)
+        np.add.at(X, (rel, row, col), val)
+        np.testing.assert_allclose(coo.to_dense(), X, rtol=1e-6)
+
+    def test_builder_empty(self):
+        coo = COOBuilder().finalize(n=4, m=2)
+        assert coo.nnz == 0 and coo.to_dense().shape == (2, 4, 4)
+
+    def test_out_of_bounds_rejected(self):
+        b = COOBuilder().add([0], [5], [0], [1.0])
+        with pytest.raises(ValueError, match="out of bounds"):
+            b.finalize(n=3, m=1)
+
+    def test_negative_ids_rejected(self):
+        for rel, row, col in ([-1, 0, 0], [0, -1, 0], [0, 0, -1]):
+            b = COOBuilder().add([rel], [row], [col], [1.0])
+            with pytest.raises(ValueError, match="out of bounds"):
+                b.finalize(n=3, m=1)
+
+
+class TestManifest:
+    def test_dense_digest_detects_content_change(self, key):
+        import jax
+        X = jax.random.uniform(key, (2, 8, 8))
+        m1 = manifest_of(X)
+        m2 = manifest_of(X * 1.001)
+        assert m1.digest != m2.digest
+        assert m1.kind == "dense"
+        assert m1.logical_bytes == m1.resident_bytes == 2 * 8 * 8 * 4
+
+    def test_dense_digest_detects_entity_permutation(self, key):
+        """P X P^T has identical moments; the positional terms in the
+        digest are what reject a resume against reordered data."""
+        import jax
+        X = np.array(jax.random.uniform(key, (2, 8, 8)))
+        perm = np.random.default_rng(0).permutation(8)
+        Xp = X[:, perm][:, :, perm]
+        assert manifest_of(X).digest != manifest_of(Xp).digest
+
+    def test_bcsr_digest_detects_pattern_change(self, key):
+        s = sp.random_bcsr(key, m=2, n=64, bs=16, block_density=0.4)
+        m1 = manifest_of(s)
+        # same data, different pattern coordinates
+        s2 = s._replace(block_rows=(s.block_rows + 1) % s.nblocks)
+        assert m1.digest != manifest_of(s2).digest
+        assert m1.resident_bytes < m1.logical_bytes or s.nnzb == s.nblocks ** 2
+
+    def test_fingerprint_json_roundtrip(self, key, tmp_path):
+        s = sp.random_bcsr(key, m=2, n=64, bs=16)
+        man = manifest_of(s)
+        p = str(tmp_path / "manifest.json")
+        man.save(p)
+        assert DatasetManifest.load(p) == man
+
+    def test_operand_dims(self, key):
+        import jax
+        X = jax.random.uniform(key, (3, 16, 16))
+        assert operand_dims(X) == (3, 16)
+        s = sp.random_bcsr(key, m=2, n=64, bs=16)
+        assert operand_dims(s) == (2, 64)
+        spec = VirtualSpec(kind="dense", n=32, m=4, k=2)
+        assert operand_dims(spec) == (4, 32)
+
+    def test_virtual_manifest_accounts_compression(self):
+        spec = VirtualSpec(kind="bcsr", n=1024, m=2, k=3, bs=64,
+                           density=0.05)
+        man = manifest_of(spec)
+        assert man.logical_bytes == 2 * 1024 * 1024 * 4
+        assert man.resident_bytes < man.logical_bytes
+        assert man.kind == "virtual-bcsr"
+        # digest is a pure function of the spec
+        assert man.digest == manifest_of(VirtualSpec.parse(
+            spec.spec_string())).digest
+
+
+class TestVirtual:
+    def test_spec_parse_roundtrip(self):
+        s = "virtual:bcsr:n=256,m=2,k=3,bs=32,density=0.2,grid=2,noise=0.01,seed=7"
+        spec = VirtualSpec.parse(s)
+        assert spec == VirtualSpec.parse(spec.spec_string())
+        with pytest.raises(ValueError, match="unknown virtual spec field"):
+            VirtualSpec.parse("virtual:bcsr:n=8,m=1,k=1,zap=3")
+        with pytest.raises(ValueError):
+            VirtualSpec.parse("notvirtual:dense:n=8")
+
+    def test_dense_shard_equals_full_slice(self):
+        spec = VirtualSpec(kind="dense", n=48, m=2, k=3, grid=2, seed=1)
+        X = virtual_dense_full(spec)
+        for i in range(2):
+            for j in range(2):
+                blk = virtual_dense_shard(spec, i, j)
+                np.testing.assert_allclose(
+                    X[:, i * 24:(i + 1) * 24, j * 24:(j + 1) * 24], blk,
+                    rtol=1e-6)
+
+    def test_bcsr_shard_equals_assembly_slice(self):
+        spec = VirtualSpec(kind="bcsr", n=128, m=2, k=3, bs=16, grid=2,
+                           density=0.3, seed=0)
+        sh = virtual_sharded_bcsr(spec)
+        Xd = sh.to_dense()
+        blk = virtual_bcsr_shard(spec, 1, 0)
+        np.testing.assert_allclose(np.asarray(sp.to_dense(blk)),
+                                   Xd[:, 64:, :64], rtol=1e-6)
+
+    def test_nnzb_accounting_matches_generation(self):
+        spec = VirtualSpec(kind="bcsr", n=128, m=2, k=3, bs=16, grid=2,
+                           density=0.3, seed=0)
+        counts = virtual_shard_nnzb(spec)
+        sh = virtual_sharded_bcsr(spec)
+        np.testing.assert_array_equal(counts, sh.nnzb)
+        # diagonal support: every diagonal shard stores its diagonal blocks
+        for i in range(2):
+            shard = sh.shard(i, i)
+            stored = set(zip(np.asarray(shard.block_rows).tolist(),
+                             np.asarray(shard.block_cols).tolist()))
+            assert all((b, b) in stored for b in range(spec.nb_loc))
+
+    def test_grid_divisibility_validated(self):
+        with pytest.raises(ValueError, match="grid"):
+            VirtualSpec(kind="bcsr", n=100, m=1, k=2, bs=16, grid=2)
+        with pytest.raises(ValueError, match="grid"):
+            VirtualSpec(kind="dense", n=33, m=1, k=2, grid=2)
+
+
+class TestIngestToSweepOperand:
+    """TSV -> COO -> BCSR is a faithful encoding of the triples."""
+
+    def test_tsv_to_bcsr_dense_equivalence(self, tsv_path):
+        coo, _ = ingest_tsv(tsv_path)
+        s = coo_to_bcsr(coo, bs=2)
+        np.testing.assert_allclose(np.asarray(sp.to_dense(s)),
+                                   coo.to_dense(), rtol=1e-6)
+
+    def test_tsv_to_sharded_dense_equivalence(self, tsv_path):
+        coo, _ = ingest_tsv(tsv_path)
+        sh = partition_coo(coo, bs=2, grid=2)
+        np.testing.assert_allclose(sh.to_dense(), coo.to_dense(), rtol=1e-6)

@@ -14,6 +14,7 @@ CHECKS = [
     "dist_rescal_sparse_equals_dense",
     "ensemble_step_pods",
     "selection_mesh_ensemble",
+    "selection_mesh_ensemble_bcsr",
     "fused_engine_matches_reference",
     "sharded_train_matches_single",
     "sharded_decode_matches_single",

@@ -147,6 +147,113 @@ class TestBatchedLoopParity:
                                    atol=1e-5)
 
 
+class TestBCSREnsemble:
+    """BCSR operands (ISSUE 3): stored-block perturbation members must
+    match the dense reference member-for-member (acceptance: 1e-5)."""
+
+    CFG = RescalkConfig(k_min=2, k_max=3, n_perturbations=3,
+                        rescal_iters=60, regress_iters=20, seed=3)
+
+    def small_bcsr(self, n=96, m=2, bs=16, seed=0):
+        from repro.core import sparse as sp
+        return sp.random_bcsr(jax.random.PRNGKey(seed), m=m, n=n, bs=bs,
+                              block_density=0.3)
+
+    def test_batched_matches_dense_reference_1e5(self):
+        from repro.selection import run_ensemble_bcsr_dense_reference
+        s = self.small_bcsr()
+        rb = run_ensemble(s, 3, self.CFG, mode="batched")
+        rd = run_ensemble_bcsr_dense_reference(s, 3, self.CFG)
+        np.testing.assert_allclose(rb.errors, rd.errors, rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(rb.A, rd.A, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(rb.R, rd.R, rtol=1e-4, atol=1e-5)
+
+    def test_loop_matches_batched(self):
+        s = self.small_bcsr()
+        rb = run_ensemble(s, 3, self.CFG, mode="batched")
+        rl = run_ensemble(s, 3, self.CFG, mode="loop")
+        np.testing.assert_allclose(rb.errors, rl.errors, rtol=1e-4,
+                                   atol=1e-6)
+        np.testing.assert_allclose(rb.A, rl.A, rtol=1e-3, atol=1e-5)
+
+    def test_member_subset_matches_full(self):
+        s = self.small_bcsr()
+        full = run_ensemble(s, 3, self.CFG, mode="batched")
+        part = run_ensemble(s, 3, self.CFG, members=(1, 2), mode="batched")
+        np.testing.assert_allclose(part.errors, full.errors[1:3], rtol=1e-5)
+
+    def test_full_sweep_on_bcsr(self):
+        s = self.small_bcsr()
+        res = SweepScheduler(self.CFG).run(s)
+        assert res.k_opt in self.CFG.ks
+        assert res.per_k[res.k_opt].A_median.shape == (96, res.k_opt)
+
+    def test_full_sweep_on_sharded(self):
+        """A ShardedBCSR operand sweeps in the permuted factor space."""
+        from repro.io import partition_dense
+        from repro.core import sparse as sp
+        s = self.small_bcsr()
+        sh = partition_dense(np.asarray(sp.to_dense(s)), bs=16, grid=2)
+        res = SweepScheduler(self.CFG).run(sh)
+        assert res.k_opt in self.CFG.ks
+        assert res.per_k[res.k_opt].A_median.shape == (sh.n_pad, res.k_opt)
+
+    def test_nndsvd_rejected_for_bcsr(self):
+        s = self.small_bcsr()
+        cfg = dataclasses.replace(self.CFG, init="nndsvd")
+        with pytest.raises(NotImplementedError, match="random"):
+            run_ensemble(s, 3, cfg, mode="batched")
+
+    def test_plain_bcsr_with_mesh_rejected(self):
+        s = self.small_bcsr()
+        with pytest.raises(ValueError, match="partition"):
+            run_ensemble(s, 3, self.CFG, mesh=object())
+
+
+class TestManifestGuard:
+    """The scheduler's sweep.json fingerprint now comes from io.manifest:
+    stale data — not just stale config — must reject a resume."""
+
+    CFG = RescalkConfig(k_min=2, k_max=2, n_perturbations=2,
+                        rescal_iters=30, regress_iters=20, seed=1)
+
+    def test_stale_manifest_rejected_dense(self, tmp_path):
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        SweepScheduler(self.CFG, ckpt_dir=d).run(X)
+        with pytest.raises(ValueError,
+                           match="different sweep configuration"):
+            SweepScheduler(self.CFG, ckpt_dir=d).run(X * 1.001)
+
+    def test_stale_manifest_rejected_bcsr_pattern(self, tmp_path):
+        """Same values, different sparsity pattern -> different manifest
+        digest (the structural hash, not just the moments)."""
+        from repro.core import sparse as sp
+        s = sp.random_bcsr(jax.random.PRNGKey(0), m=2, n=64, bs=16,
+                           block_density=0.3)
+        d = str(tmp_path / "ckpt")
+        SweepScheduler(self.CFG, ckpt_dir=d).run(s)
+        moved = s._replace(block_rows=(s.block_rows + 1) % s.nblocks)
+        with pytest.raises(ValueError,
+                           match="different sweep configuration"):
+            SweepScheduler(self.CFG, ckpt_dir=d).run(moved)
+        # unchanged operand still resumes
+        res = SweepScheduler(self.CFG, ckpt_dir=d).run(s)
+        assert res.k_opt in self.CFG.ks
+
+    def test_manifest_fingerprint_in_sweep_json(self, tmp_path):
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        SweepScheduler(self.CFG, ckpt_dir=d).run(X)
+        import os
+        with open(os.path.join(d, "sweep.json")) as f:
+            fp = json.load(f)
+        assert fp["manifest"]["kind"] == "dense"
+        assert fp["manifest"]["n"] == X.shape[1]
+        assert "digest" in fp["manifest"]
+
+
 class TestSchedulerResume:
     CFG = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
                         rescal_iters=30, regress_iters=20, seed=1)

@@ -56,3 +56,85 @@ class TestBCSR:
         e_s = float(sp.sparse_rel_error(bcsr, st.A, st.R))
         e_d = float(rel_error(sp.to_dense(bcsr), st.A, st.R))
         assert abs(e_s - e_d) < 1e-3
+
+
+class TestEdgeCases:
+    """Ingest edge cases (ISSUE 3): nnzb == 0 and n not divisible by bs."""
+
+    def _empty(self, n=100, m=2, bs=32):
+        return sp.BCSR(data=jnp.zeros((m, 0, bs, bs)),
+                       block_rows=jnp.zeros((0,), jnp.int32),
+                       block_cols=jnp.zeros((0,), jnp.int32), n=n)
+
+    def test_empty_pattern_products_are_zero(self, key):
+        e = self._empty()
+        B = jax.random.uniform(key, (100, 5))
+        assert e.nblocks == 4 and e.n_pad == 128
+        for out in (sp.spmm(e, B), sp.spmm_t(e, B)):
+            assert out.shape == (2, 100, 5)
+            assert float(jnp.abs(out).max()) == 0.0
+        assert float(sp.sqnorm(e)) == 0.0
+        assert sp.to_dense(e).shape == (2, 100, 100)
+
+    def test_empty_pattern_kernel_short_circuits(self, key):
+        from repro.kernels import bcsr_spmm
+        e = self._empty()
+        B = jax.random.uniform(key, (100, 5))
+        out = bcsr_spmm(e, B, impl="interpret")
+        assert out.shape == (2, 100, 5)
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_nondivisible_n_roundtrip(self, key):
+        X = jnp.abs(jax.random.normal(key, (2, 100, 100)))
+        X = jnp.where(X > 1.0, X, 0.0)
+        s = sp.from_dense(X, bs=32)
+        assert (s.n, s.nblocks, s.n_pad) == (100, 4, 128)
+        np.testing.assert_allclose(sp.to_dense(s), X, rtol=1e-6)
+
+    def test_nondivisible_n_spmm_matches_dense(self, key):
+        X = jnp.abs(jax.random.normal(key, (2, 100, 100)))
+        X = jnp.where(X > 1.0, X, 0.0)
+        s = sp.from_dense(X, bs=32)
+        B = jax.random.uniform(key, (100, 5))
+        np.testing.assert_allclose(
+            sp.spmm(s, B), jnp.einsum("mij,jk->mik", X, B),
+            rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(
+            sp.spmm_t(s, B), jnp.einsum("mji,jk->mik", X, B),
+            rtol=1e-4, atol=1e-4)
+        B2 = jax.random.uniform(key, (2, 100, 5))
+        np.testing.assert_allclose(
+            sp.spmm_t(s, B2), jnp.einsum("mji,mjk->mik", X, B2),
+            rtol=1e-4, atol=1e-4)
+
+    def test_nondivisible_n_kernel_matches_oracle(self, key):
+        from repro.kernels import bcsr_spmm
+        s = sp.random_bcsr(key, m=2, n=70, bs=32, block_density=0.5)
+        B = jax.random.uniform(key, (70, 4))
+        np.testing.assert_allclose(bcsr_spmm(s, B, impl="interpret"),
+                                   sp.spmm(s, B), rtol=1e-4, atol=1e-5)
+
+    def test_random_bcsr_masks_padded_tail(self, key):
+        s = sp.random_bcsr(key, m=2, n=70, bs=32, block_density=0.5)
+        X = sp.to_dense(s)
+        # round-trip through from_dense keeps exactly the same tensor
+        np.testing.assert_allclose(sp.to_dense(sp.from_dense(X, bs=32)), X,
+                                   rtol=1e-6)
+
+    def test_nondivisible_mu_step_matches_dense(self, key):
+        s = sp.random_bcsr(key, m=2, n=70, bs=32, block_density=0.5)
+        Xd = sp.to_dense(s)
+        st = init_factors(key, 70, 2, 3)
+        A_s, R_s = sp.sparse_mu_step(s, st.A, st.R)
+        st_d = mu_step_batched(Xd, st)
+        np.testing.assert_allclose(A_s, st_d.A, rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(R_s, st_d.R, rtol=2e-4, atol=1e-5)
+
+
+class TestSparseRegression:
+    def test_sparse_regress_matches_dense(self, bcsr, key):
+        from repro.core.regression import regress_R
+        A = jax.random.uniform(key, (bcsr.n, 4), minval=0.1, maxval=1.0)
+        R_s = sp.sparse_regress_R(bcsr, A, iters=40)
+        R_d = regress_R(sp.to_dense(bcsr), A, iters=40)
+        np.testing.assert_allclose(R_s, R_d, rtol=1e-4, atol=1e-6)
