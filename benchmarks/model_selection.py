@@ -11,7 +11,14 @@ Two sections:
     engine regression), so it is recorded with ``expect_recover=False``;
   * ensemble wall-clock: the same (k, r) work unit executed as the
     sequential per-member loop vs one batched vmap program, for growing r
-    — the speedup the subsystem exists to deliver.
+    — the speedup the subsystem exists to deliver;
+  * cross-k grid wall-clock (ISSUE 4): a full k_min..k_max sweep run as
+    per-k batched programs (one XLA compile per rank) vs the cross-k grid
+    program (the whole (k, q) grid padded to k_max, ONE compile per chunk
+    shape).  Measured COLD (jax.clear_caches between modes) because
+    eliminating per-rank compiles is exactly the claim; compile counts are
+    recorded alongside wall time via dist.compat.capture_compiles, and
+    scripts/check_bench_gate.py gates the speedup (fail < 1.0x).
 """
 from __future__ import annotations
 
@@ -23,7 +30,8 @@ import numpy as np
 
 from repro.core import RescalkConfig, rescalk
 from repro.data.synthetic import synthetic_rescal
-from repro.selection import run_ensemble
+from repro.dist.compat import capture_compiles
+from repro.selection import SweepScheduler, run_ensemble
 
 from .common import Report, time_fn
 
@@ -48,10 +56,29 @@ ENSEMBLE_CASES = [
     (64, 2, 5, 4),
 ]
 
+# (n, m, k_min, k_max, r, iters): full sweep, per-k batched vs cross-k grid
+GRID_CASES = [
+    (48, 2, 2, 6, 4, 100),     # 5 ranks — the acceptance scenario (>= 3)
+    (32, 2, 2, 4, 4, 80),      # 3 ranks, the smallest gated sweep
+]
+
+_ENSEMBLE_PROGRAMS = ("_batched_members", "_batched_members_bcsr",
+                      "_grid_members", "_grid_members_bcsr")
+
+
+def _timed_sweep(X, cfg, mode: str) -> tuple[float, int]:
+    """Cold wall seconds + ensemble-program compile count for one sweep."""
+    jax.clear_caches()
+    with capture_compiles() as log:
+        t0 = time.perf_counter()
+        SweepScheduler(cfg, mode=mode).run(X)
+        dt = time.perf_counter() - t0
+    return dt, log.count(*_ENSEMBLE_PROGRAMS)
+
 
 def run(report: Report | None = None, quick: bool = True) -> Report:
     report = report or Report("model_selection")
-    bench = {"selection": [], "ensemble": []}
+    bench = {"selection": [], "ensemble": [], "grid": []}
 
     for i, (n, m, k_true, corr, r, expect) in enumerate(CASES):
         key = jax.random.PRNGKey(100 + i)
@@ -97,6 +124,28 @@ def run(report: Report | None = None, quick: bool = True) -> Report:
             "name": name, "n": n, "m": m, "k": k, "r": r,
             "loop_seconds": t_loop, "batched_seconds": t_bat,
             "speedup": speedup})
+
+    for n, m, k_min, k_max, r, iters in GRID_CASES:
+        key = jax.random.PRNGKey(11)
+        X, _, _ = synthetic_rescal(key, n=n, m=m, k=k_min + 1, noise=0.01)
+        cfg = RescalkConfig(k_min=k_min, k_max=k_max, n_perturbations=r,
+                            rescal_iters=iters, regress_iters=40,
+                            init="random", seed=0)
+        t_perk, c_perk = _timed_sweep(X, cfg, "batched")
+        t_grid, c_grid = _timed_sweep(X, cfg, "grid")
+        speedup = t_perk / t_grid
+        n_ranks = len(cfg.ks)
+        name = f"grid/n{n}m{m}k{k_min}-{k_max}r{r}"
+        report.add(name, seconds=t_grid,
+                   per_k_s=round(t_perk, 4), grid_s=round(t_grid, 4),
+                   speedup=round(speedup, 2),
+                   per_k_compiles=c_perk, grid_compiles=c_grid)
+        bench["grid"].append({
+            "name": name, "n": n, "m": m, "k_min": k_min, "k_max": k_max,
+            "r": r, "n_ranks": n_ranks, "iters": iters,
+            "per_k_seconds": t_perk, "grid_seconds": t_grid,
+            "speedup": speedup,
+            "per_k_compiles": c_perk, "grid_compiles": c_grid})
 
     from repro.ckpt import atomic_json_dump
     atomic_json_dump(BENCH_PATH, bench, indent=1, default=str)

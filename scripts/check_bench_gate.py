@@ -1,12 +1,16 @@
 #!/usr/bin/env python
-"""Soft regression gate on the loop-vs-batched ensemble speedup.
+"""Soft regression gate on the recorded ensemble speedups.
 
-Reads the recorded benchmark trajectory (BENCH_model_selection.json,
-written by ``python -m benchmarks.run --only model_selection``) and grades
-every ensemble case's speedup:
+Reads the benchmark trajectory (BENCH_model_selection.json, written by
+``python -m benchmarks.run --only model_selection``) and grades every
+case's speedup in both gated sections:
 
-    speedup <  FAIL_BELOW (1.0x)  -> exit 1 (the batched program lost to
-                                     the sequential loop: a regression)
+    "ensemble" — batched one-program members vs the sequential loop
+    "grid"     — the cross-k grid program vs per-k batched sweeps
+                 (ISSUE 4: one compile for the whole (k, q) grid)
+
+    speedup <  FAIL_BELOW (1.0x)  -> exit 1 (the fused program lost to
+                                     its baseline: a regression)
     speedup <  WARN_BELOW (1.2x)  -> warn, exit 0 (drifting toward parity)
     otherwise                     -> OK
 
@@ -22,28 +26,33 @@ FAIL_BELOW = 1.0
 WARN_BELOW = 1.2
 
 
+GATED_SECTIONS = ("ensemble", "grid")
+
+
 def main(path: str) -> int:
     with open(path) as f:
         bench = json.load(f)
-    cases = bench.get("ensemble", [])
-    if not cases:
-        print(f"[bench-gate] no ensemble cases in {path}; nothing to gate")
-        return 0
+    graded = 0
     failed = []
-    for case in cases:
-        s = float(case["speedup"])
-        name = case["name"]
-        if s < FAIL_BELOW:
-            print(f"[bench-gate] FAIL {name}: speedup {s:.2f}x < "
-                  f"{FAIL_BELOW:.1f}x")
-            failed.append(name)
-        elif s < WARN_BELOW:
-            print(f"[bench-gate] WARN {name}: speedup {s:.2f}x < "
-                  f"{WARN_BELOW:.1f}x")
-        else:
-            print(f"[bench-gate] OK   {name}: speedup {s:.2f}x")
+    for section in GATED_SECTIONS:
+        for case in bench.get(section, []):
+            graded += 1
+            s = float(case["speedup"])
+            name = case["name"]
+            if s < FAIL_BELOW:
+                print(f"[bench-gate] FAIL {name}: speedup {s:.2f}x < "
+                      f"{FAIL_BELOW:.1f}x")
+                failed.append(name)
+            elif s < WARN_BELOW:
+                print(f"[bench-gate] WARN {name}: speedup {s:.2f}x < "
+                      f"{WARN_BELOW:.1f}x")
+            else:
+                print(f"[bench-gate] OK   {name}: speedup {s:.2f}x")
+    if not graded:
+        print(f"[bench-gate] no gated cases in {path}; nothing to gate")
+        return 0
     if failed:
-        print(f"[bench-gate] {len(failed)}/{len(cases)} cases regressed "
+        print(f"[bench-gate] {len(failed)}/{graded} cases regressed "
               f"below {FAIL_BELOW:.1f}x: {failed}")
         return 1
     return 0

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Compile-count regression guard for the cross-k grid sweep (ISSUE 4).
+
+The point of mode="grid" is ONE device program for the whole (k, q) grid:
+per-cell ranks are data, factors are padded to k_max, so a k_min..k_max
+sweep must compile at most two ensemble programs (the common chunk shape
+plus, when the grid does not divide the chunk size, one ragged tail) —
+never one per candidate rank.  This smoke runs a 3-rank sweep under
+``dist.compat.capture_compiles`` (jax.log_compiles parsing lives there,
+the only module allowed to feature-detect JAX) and fails if per-k
+recompiles ever sneak back:
+
+    grid mode   : ensemble-program compiles must be <= 2
+    batched mode: compiles one program per rank (>= #ranks) — printed, and
+                  asserted to EXCEED the grid count, so the guard itself
+                  is demonstrably measuring the right thing
+
+The count filters on the ensemble module's program names: the regression
+class this guards against is the grid program re-tracing per rank (e.g.
+someone making the rank or the mask a static argument), which shows up
+under exactly these names.  Eager-op compiles (jnp.pad etc. from the
+host-side grid_init) are deliberately out of scope.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.dist.compat import capture_compiles  # noqa: E402
+from repro.selection import RescalkConfig, SweepScheduler  # noqa: E402
+
+# the cross-k programs (host vmap, dense + bcsr) and the per-k program
+GRID_PROGRAMS = ("_grid_members", "_grid_members_bcsr")
+PER_K_PROGRAMS = ("_batched_members", "_batched_members_bcsr")
+
+MAX_GRID_COMPILES = 2
+
+
+def small_tensor(n=24, m=2, k=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.uniform(key, (n, k), minval=0.1, maxval=1.0)
+    R = jax.random.uniform(jax.random.fold_in(key, 1), (m, k, k),
+                           minval=0.1, maxval=1.0)
+    return jnp.einsum("ia,mab,jb->mij", A, R, A)
+
+
+def main() -> int:
+    X = small_tensor()
+    # 3 candidate ranks (the acceptance scenario) with a chunk size that
+    # does NOT divide the 3*2 = 6 grid cells: the worst legitimate case,
+    # one common-shape program + one ragged-tail program.
+    cfg = RescalkConfig(k_min=2, k_max=4, n_perturbations=2,
+                        rescal_iters=20, regress_iters=10, seed=0)
+    n_ranks = len(cfg.ks)
+
+    with capture_compiles() as grid_log:
+        SweepScheduler(cfg, mode="grid", grid_chunk=4).run(X)
+    grid_compiles = grid_log.count(*GRID_PROGRAMS)
+
+    with capture_compiles() as perk_log:
+        SweepScheduler(cfg, mode="batched").run(X)
+    perk_compiles = perk_log.count(*PER_K_PROGRAMS)
+
+    print(f"[compile-guard] grid mode : {grid_compiles} ensemble program "
+          f"compile(s) for a {n_ranks}-rank sweep (limit "
+          f"{MAX_GRID_COMPILES})")
+    print(f"[compile-guard] per-k mode: {perk_compiles} ensemble program "
+          f"compile(s) (one per rank is expected here)")
+
+    if grid_compiles == 0:
+        print("[compile-guard] FAIL: no grid-program compiles observed — "
+              "the log_compiles capture is broken (a JAX message "
+              "reworking?); fix dist/compat.capture_compiles")
+        return 1
+    if grid_compiles > MAX_GRID_COMPILES:
+        print(f"[compile-guard] FAIL: grid mode compiled {grid_compiles} "
+              f"programs (> {MAX_GRID_COMPILES}) — per-k recompiles are "
+              f"back; the rank/mask must stay program DATA, not a static "
+              f"argument")
+        return 1
+    if perk_compiles <= grid_compiles:
+        print("[compile-guard] FAIL: per-k mode did not compile more "
+              "programs than grid mode — the counter is not measuring "
+              "per-rank compiles; fix the capture before trusting the "
+              "guard")
+        return 1
+    print("[compile-guard] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,6 +47,22 @@ python -c "import json,sys; r=json.load(open(sys.argv[1])); \
     assert r['n_reused']==1, r" "$SMOKE_DIR/report.json"
 echo "== scheduler smoke OK =="
 
+echo "== grid-mode smoke: cross-k sweep selects the same k =="
+# The whole (k, q) grid as one padded device program (--mode grid) must
+# finish and pick a k; member-for-member parity with per-k batched mode is
+# covered by tests/test_selection.py, compile counts by check_compiles.py.
+python -m repro.launch.rescalk_run "${SMOKE_ARGS[@]}" --mode grid \
+    --report "$SMOKE_DIR/grid_report.json" | tee "$SMOKE_DIR/grid.log"
+grep -q "selected k_opt" "$SMOKE_DIR/grid.log"
+python -c "import json,sys; r=json.load(open(sys.argv[1])); \
+    assert r['mode']=='grid' and r['units'][0]['cells'], r" \
+    "$SMOKE_DIR/grid_report.json"
+echo "== grid smoke OK =="
+
+echo "== compile-count guard: grid mode stays one program per chunk =="
+python scripts/check_compiles.py
+echo "== compile guard OK =="
+
 echo "== ingest -> sweep smoke: tiny TSV -> BCSR -> one sweep unit =="
 # The repro.io path end to end: triple list -> vocab -> COO -> BCSR ->
 # stored-block perturbation ensemble -> k selection + report.

@@ -131,6 +131,72 @@ MU_SCHEDULES: dict[str, Callable] = {
 
 
 # ---------------------------------------------------------------------------
+# Masked (k_max-padded) factors — the cross-k batching primitives
+# ---------------------------------------------------------------------------
+#
+# The model-selection sweep runs many candidate ranks k; padding every
+# unit's factors to a common k_max lets the whole (k, q) grid execute as
+# ONE device program (selection/ensemble.py vmaps over the flattened unit
+# axis).  The invariant that makes padding sound: with A's masked columns
+# and R's masked rows/cols exactly zero, every MU quantity they touch is
+# exactly zero (G, ATXA, num, S all gain zero blocks) and the updates are
+# multiplicative, so zeros are a fixed point — and the *active* block sees
+# only additional exact-zero terms in its contractions, so padded results
+# equal the unpadded reference bit-for-bit up to reduction order.  The
+# explicit mask multiply after each step makes the invariant structural
+# (masked entries are forced to 0.0 rather than proven to stay there).
+
+def column_mask(k, k_max: int, dtype=jnp.float32) -> jax.Array:
+    """(k_max,) mask: 1 for the first `k` (active) columns, 0 for padding.
+    `k` may be a traced scalar — changing the rank mix never recompiles."""
+    return (jnp.arange(k_max) < k).astype(dtype)
+
+
+def mask_state(state: RescalState, mask: jax.Array) -> RescalState:
+    """Force the masked columns of A (and rows+cols of R) to exact zero."""
+    return RescalState(A=state.A * mask,
+                       R=state.R * (mask[:, None] * mask[None, :]),
+                       step=state.step)
+
+
+def pad_state(state: RescalState, k_max: int) -> RescalState:
+    """Zero-pad (n, k) / (m, k, k) factors to rank k_max.  The pad columns
+    are exact zeros, so the padded state is already mask-invariant."""
+    k = state.A.shape[1]
+    if k == k_max:
+        return state
+    if k > k_max:
+        raise ValueError(f"cannot pad rank {k} down to k_max={k_max}")
+    A = jnp.pad(state.A, ((0, 0), (0, k_max - k)))
+    R = jnp.pad(state.R, ((0, 0), (0, k_max - k), (0, k_max - k)))
+    return RescalState(A=A, R=R, step=state.step)
+
+
+def crop_state(state: RescalState, k: int) -> RescalState:
+    """Drop the padding columns again: the inverse of ``pad_state``."""
+    return RescalState(A=state.A[:, :k], R=state.R[:, :k, :k],
+                       step=state.step)
+
+
+def masked_mu_step(X: jax.Array, state: RescalState, mask: jax.Array,
+                   eps: float = EPS_DEFAULT,
+                   schedule: str = "batched") -> RescalState:
+    """One MU iteration on k_max-padded factors.  Same math as the plain
+    schedules; the trailing mask multiply pins the padded columns to exact
+    zero (multiplying active columns by 1.0 is exact, so active values are
+    untouched)."""
+    return mask_state(MU_SCHEDULES[schedule](X, state, eps), mask)
+
+
+def masked_normalize(state: RescalState, mask: jax.Array,
+                     eps: float = 1e-12) -> RescalState:
+    """``normalize`` on padded factors.  Masked columns have zero norm; the
+    eps clamp keeps the division finite and the mask restores exact zeros.
+    Active columns normalize independently, identically to unpadded."""
+    return mask_state(normalize(state, eps), mask)
+
+
+# ---------------------------------------------------------------------------
 # Normalization & error
 # ---------------------------------------------------------------------------
 

@@ -194,6 +194,18 @@ def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     return A, R
 
 
+def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
+                          mask: jax.Array, eps: float = EPS_DEFAULT):
+    """One MU iteration on k_max-padded factors (the BCSR twin of
+    rescal.masked_mu_step): same algebra, with the padded columns of A and
+    rows/cols of R pinned to exact zero after the update.  Zeros are a
+    fixed point of the multiplicative updates, so active columns match the
+    unpadded ``sparse_mu_step`` exactly (see the cross-k block comment in
+    core/rescal.py)."""
+    A, R = sparse_mu_step(sp, A, R, eps)
+    return A * mask, R * (mask[:, None] * mask[None, :])
+
+
 def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array) -> jax.Array:
     G = A.T @ A
     XA = spmm(sp, A)

@@ -17,9 +17,16 @@ older releases.  Currently shimmed:
   * ``compiled.cost_analysis()`` — returns a dict on newer JAX, a
     one-dict-per-program list on older; ``cost_analysis_dict`` normalizes
     both to a flat {metric: value} dict.
+  * ``jax.log_compiles`` message formats — the logger text that announces
+    an XLA compilation has been reworded across releases;
+    ``capture_compiles`` parses the known spellings so the compile-count
+    CI guard (scripts/check_compiles.py) stays version-blind.
 """
 from __future__ import annotations
 
+import contextlib
+import logging
+import re
 from typing import Any, Sequence
 
 import jax
@@ -29,6 +36,7 @@ __all__ = [
     "AXIS_TYPE",
     "HAS_AXIS_TYPE",
     "axis_types_kwargs",
+    "capture_compiles",
     "cost_analysis_dict",
     "make_mesh",
     "tpu_compiler_params",
@@ -88,6 +96,80 @@ def tpu_compiler_params(**kwargs):
     if cls is None:                                       # pragma: no cover
         return None
     return cls(**kwargs)
+
+
+# "Finished XLA compilation of jit(_grid_members) in 0.1 sec" (current)
+# vs "Finished XLA compilation of _grid_members in 0.1 sec" (older).
+_FINISHED_RE = re.compile(
+    r"Finished XLA compilation of (?:jit\()?([^)\s]+)\)? in")
+# The pxla announcement line, stable for much longer; used as the fallback
+# when a JAX release drops/rewords the "Finished" line.
+_COMPILING_RE = re.compile(r"^Compiling ([^\s]+) with global shapes")
+
+
+class CompileLog:
+    """Compile events observed inside a ``capture_compiles`` block.
+    ``events`` holds one traced-function name per XLA compilation (eager
+    jnp ops appear under their primitive names, e.g. ``_pad`` —
+    ``count()`` filters by name so guards can target specific programs)."""
+
+    def __init__(self):
+        self.finished: list[str] = []
+        self.compiling: list[str] = []
+
+    @property
+    def events(self) -> list[str]:
+        return self.finished if self.finished else self.compiling
+
+    def count(self, *names: str) -> int:
+        """Number of compilations of the named traced functions; with no
+        names, all compilations."""
+        if not names:
+            return len(self.events)
+        return sum(1 for e in self.events if e in names)
+
+
+@contextlib.contextmanager
+def capture_compiles():
+    """Record every XLA compilation in the block as a ``CompileLog``.
+
+    Implemented on ``jax.log_compiles`` + a logging handler rather than
+    any private counter, and tolerant of the message rewordings across
+    JAX releases (see module docstring) — the one place the compile-count
+    CI guard touches a version-dependent surface.
+    """
+    log = CompileLog()
+
+    class _Handler(logging.Handler):
+        def emit(self, record: logging.LogRecord) -> None:
+            msg = record.getMessage()
+            m = _FINISHED_RE.search(msg)
+            if m:
+                log.finished.append(m.group(1))
+                return
+            m = _COMPILING_RE.match(msg)
+            if m:
+                log.compiling.append(m.group(1))
+
+    handler = _Handler(level=logging.DEBUG)
+    logger = logging.getLogger("jax")
+    old_level = logger.level
+    old_propagate = logger.propagate
+    old_handlers = logger.handlers[:]
+    # capture, don't spew: JAX installs its own stderr StreamHandler on
+    # the "jax" logger at import, so swap the handler list rather than
+    # stacking on top of it, and restore verbatim after
+    logger.handlers[:] = [handler]
+    logger.propagate = False
+    if logger.getEffectiveLevel() > logging.WARNING:
+        logger.setLevel(logging.WARNING)     # log_compiles emits at WARNING
+    try:
+        with jax.log_compiles():
+            yield log
+    finally:
+        logger.handlers[:] = old_handlers
+        logger.setLevel(old_level)
+        logger.propagate = old_propagate
 
 
 def cost_analysis_dict(analysis) -> dict[str, float]:

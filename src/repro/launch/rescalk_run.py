@@ -3,10 +3,13 @@ scheduler.
 
 Runs model selection (Alg. 1) through repro.selection: the (k, q) work-unit
 grid is planned by the scheduler, each unit executes as one batched
-ensemble program (or a sequential loop with ``--mode loop``), and per-unit
-checkpoints make an interrupted sweep resumable without recomputing
-completed units (checkpoint tags derive from the unit's (k, member-range)
-identity — never from PRNG key internals).
+ensemble program (a sequential loop with ``--mode loop``, or the whole
+grid padded to k_max as ONE cross-k device program with ``--mode grid`` —
+at most two XLA compiles for any k range; see README "sweep execution
+modes"), and per-unit checkpoints make an interrupted sweep resumable
+without recomputing completed units (checkpoint tags derive from the
+unit's (k, member-range) — or grid chunk's cell-range — identity, never
+from PRNG key internals).
 
 Data sources (``--data``, the repro.io ingest layer):
 
@@ -62,9 +65,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--schedule", default="batched",
                     choices=("batched", "sliced"))
     ap.add_argument("--init", default="random", choices=("random", "nndsvd"))
-    ap.add_argument("--mode", default="batched", choices=("batched", "loop"),
-                    help="ensemble execution: one batched program per unit "
-                         "or the sequential per-member loop")
+    ap.add_argument("--mode", default="batched",
+                    choices=("batched", "loop", "grid"),
+                    help="ensemble execution: one batched program per "
+                         "(k, members) unit, the sequential per-member "
+                         "loop, or the cross-k grid (the whole (k, q) "
+                         "grid padded to k_max as one device program)")
+    ap.add_argument("--grid-chunk", type=int, default=None,
+                    help="mode=grid: cells per chunk (= per checkpoint; "
+                         "default: the whole grid in one chunk)")
     ap.add_argument("--criterion", default="threshold",
                     choices=sorted(CRITERIA),
                     help="k-selection rule (selection/criteria.py)")
@@ -135,8 +144,11 @@ def main():
     cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
                         n_perturbations=args.r, rescal_iters=args.iters,
                         schedule=args.schedule, init=args.init)
+    if args.grid_chunk is not None and args.mode != "grid":
+        raise SystemExit("--grid-chunk requires --mode grid")
     sched = SweepScheduler(cfg, mode=args.mode, ckpt_dir=args.ckpt_dir,
                            criterion=args.criterion,
+                           grid_chunk=args.grid_chunk,
                            max_retries=args.max_retries,
                            stop_after_units=args.stop_after_units,
                            report_path=args.report, verbose=True)

@@ -31,10 +31,11 @@ from .ensemble import (EnsembleResult, member_keys, perturb_blocked,
                        perturb_sharded_blocked, run_ensemble,
                        run_ensemble_bcsr_dense_reference,
                        run_ensemble_bcsr_sharded_reference,
-                       run_ensemble_reference)
+                       run_ensemble_reference, run_sweep_batched,
+                       unit_keys)
 from .report import SelectionReport, UnitRecord
-from .scheduler import (SweepInterrupted, SweepScheduler, WorkUnit,
-                        plan_sweep, reduce_k)
+from .scheduler import (GridChunk, SweepInterrupted, SweepScheduler,
+                        WorkUnit, plan_sweep, reduce_k)
 
 __all__ = [
     "CRITERIA", "select",
@@ -42,7 +43,9 @@ __all__ = [
     "perturb_sharded_blocked", "run_ensemble",
     "run_ensemble_bcsr_dense_reference",
     "run_ensemble_bcsr_sharded_reference", "run_ensemble_reference",
+    "run_sweep_batched", "unit_keys",
     "SelectionReport", "UnitRecord",
-    "KResult", "RescalkConfig", "RescalkResult", "SweepInterrupted",
-    "SweepScheduler", "WorkUnit", "plan_sweep", "reduce_k",
+    "GridChunk", "KResult", "RescalkConfig", "RescalkResult",
+    "SweepInterrupted", "SweepScheduler", "WorkUnit", "plan_sweep",
+    "reduce_k",
 ]

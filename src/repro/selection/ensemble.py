@@ -31,6 +31,16 @@ of one (k, member-set) work unit as **one jitted program**:
     tensors live on device, which for huge (m, n, n) can exceed HBM; the
     loop bounds residency to one member.
 
+  * **Cross-k grid** (``run_sweep_batched``, ISSUE 4) — the per-k batched
+    programs above still compile once per candidate rank; padding every
+    cell's factors to k_max with a per-cell column mask (core.rescal
+    masked MU) runs the entire flattened (k, q) grid — dense or BCSR,
+    single-host vmap or mesh-sharded with the cell axis on the
+    pod/ENSEMBLE_AXIS — as ONE compiled program, with results equal to the
+    per-k batched programs member-for-member (the rank is data, not a
+    static argument).  ``scripts/check_compiles.py`` guards the compile
+    count in CI.
+
   * **BCSR operands** (ISSUE 3 / paper §4.2) — every mode also accepts
     block-sparse tensors: a plain ``core.sparse.BCSR`` runs the batched
     vmap (or loop) program with the perturbation applied to the *stored
@@ -58,7 +68,9 @@ import jax.numpy as jnp
 
 from repro.core.perturb import ensemble_keys, perturb, perturb_shard
 from repro.core.rescal import (EPS_DEFAULT, MU_SCHEDULES, RescalState,
-                               init_factors, normalize, rel_error)
+                               column_mask, init_factors, masked_mu_step,
+                               masked_normalize, normalize, pad_state,
+                               rel_error)
 
 
 class EnsembleResult(NamedTuple):
@@ -74,6 +86,16 @@ def member_keys(seed: int, k: int, r: int) -> jax.Array:
     the legacy core.rescalk loop), so modes agree draw-for-draw."""
     root = jax.random.PRNGKey(seed)
     return ensemble_keys(jax.random.fold_in(root, k), r)
+
+
+def unit_keys(cfg, k: int, members: Sequence[int]) -> jax.Array:
+    """Member keys for one (k, members) work unit — THE single home of the
+    sweep's key selection.  Every execution mode (loop | batched | mesh |
+    grid) and every parity oracle in this module derives its keys here, and
+    the scheduler's unit types expose it as ``WorkUnit.keys`` /
+    ``GridChunk.keys`` — so per-k and cross-k modes provably share one key
+    discipline instead of re-deriving it per call site."""
+    return member_keys(cfg.seed, k, cfg.n_perturbations)[jnp.asarray(members)]
 
 
 def perturb_blocked(key: jax.Array, X: jax.Array, q, grid: tuple[int, int],
@@ -201,9 +223,9 @@ def run_ensemble_bcsr_dense_reference(sp, k: int, cfg, *,
     from repro.core.rescal import EPS_DEFAULT as eps
     from repro.core.rescal import mu_step_batched, rel_error
     from repro.core.sparse import perturb_bcsr, to_dense
-    r = cfg.n_perturbations
-    members = tuple(members) if members is not None else tuple(range(r))
-    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    members = tuple(members) if members is not None else \
+        tuple(range(cfg.n_perturbations))
+    keys = unit_keys(cfg, k, members)
     X_ref = to_dense(sp)
     A_l, R_l, errs = [], [], []
     for mkey in keys:
@@ -244,9 +266,9 @@ def run_ensemble_bcsr_sharded_reference(sharded, k: int, cfg, *,
     noise on a ShardedBCSR — the oracle for BCSR mesh-vs-host parity."""
     from repro.core.rescal import EPS_DEFAULT as eps
     from repro.core.sparse import sparse_mu_step, sparse_rel_error
-    r = cfg.n_perturbations
-    members = tuple(members) if members is not None else tuple(range(r))
-    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    members = tuple(members) if members is not None else \
+        tuple(range(cfg.n_perturbations))
+    keys = unit_keys(cfg, k, members)
     sp_ref = sharded.to_bcsr()
     A_l, R_l, errs = [], [], []
     for mkey, q in zip(keys, members):
@@ -416,6 +438,264 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
 
 
 # ---------------------------------------------------------------------------
+# Cross-k grid programs — the whole (k, q) grid as ONE device program
+# ---------------------------------------------------------------------------
+#
+# Per-k batching (above) still traces and compiles one program per
+# candidate rank, so a k_min..k_max sweep pays O(#k) XLA compiles and the
+# scheduler serializes across ranks.  Padding every cell's factors to
+# k_max = max(cfg.ks) with a per-cell column mask (core.rescal masked MU)
+# collapses the entire flattened (k, q) grid into one vmapped program:
+# the per-cell rank is DATA (an int32 vector), not a static argument, so
+# any rank mix of the same chunk length reuses one compiled executable —
+# the compile-count contract scripts/check_compiles.py guards in CI.
+
+def grid_init(cells, cfg, n: int, m: int, k_max: int, dtype):
+    """Per-cell (keys, ranks, padded init factors) for a grid chunk.
+    ``cells`` is a sequence of flattened (k, q) grid cells.
+
+    Init draws happen at the REFERENCE shape: the exact
+    ``init_factors(fkey, n, m, k)`` draw the per-k batched program makes,
+    zero-padded to k_max.  Drawing at (n, k_max) inside the program would
+    change the random stream (uniform fills shapes row-major), breaking the
+    member-for-member parity contract between grid and per-k modes — this
+    is the grid twin of the mesh ensemble's draw-global-then-slice rule."""
+    keys, kvals, A0, R0 = [], [], [], []
+    per_k_keys: dict[int, jax.Array] = {}
+    for k, q in cells:
+        if k not in per_k_keys:      # one key-set derivation per rank
+            per_k_keys[k] = unit_keys(
+                cfg, k, tuple(range(cfg.n_perturbations)))
+        mkey = per_k_keys[k][q]
+        _, fkey = jax.random.split(mkey)
+        st = pad_state(init_factors(fkey, n, m, k, dtype=dtype), k_max)
+        keys.append(mkey)
+        kvals.append(k)
+        A0.append(st.A)
+        R0.append(st.R)
+    return (jnp.stack(keys), jnp.asarray(kvals, jnp.int32),
+            jnp.stack(A0), jnp.stack(R0))
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "iters", "schedule",
+                                             "delta", "eps"))
+def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
+                  schedule: str, delta: float, eps: float):
+    """A chunk of flattened (k, q) cells as one jitted program over a dense
+    operand.  Same (pkey, fkey) discipline as ``_batched_members`` (the
+    fkey was consumed host-side by ``grid_init``); masked columns stay
+    exactly zero through update/normalize, and ``rel_error`` needs no mask
+    because zero columns contribute exactly zero to every contraction."""
+    def one_cell(mkey, kv, A0u, R0u):
+        mask = column_mask(kv, k_max, X.dtype)
+        pkey, _ = jax.random.split(mkey)
+        X_q = perturb(pkey, X, delta)
+        st = RescalState(A=A0u, R=R0u, step=jnp.zeros((), jnp.int32))
+
+        def body(_, s):
+            return masked_mu_step(X_q, s, mask, eps, schedule)
+
+        st = jax.lax.fori_loop(0, iters, body, st)
+        st = masked_normalize(st, mask)
+        return st.A, st.R, rel_error(X, st.A, st.R)
+
+    return jax.vmap(one_cell)(keys, kvals, A0, R0)
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "iters", "delta",
+                                             "eps"))
+def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
+                       delta: float, eps: float):
+    """The BCSR twin of ``_grid_members``: stored-block perturbation, masked
+    sparse MU, one program for the whole rank mix."""
+    from repro.core.sparse import (masked_sparse_mu_step, perturb_bcsr,
+                                   sparse_rel_error)
+
+    def one_cell(mkey, kv, A0u, R0u):
+        mask = column_mask(kv, k_max, sp.data.dtype)
+        pkey, _ = jax.random.split(mkey)
+        sp_q = perturb_bcsr(pkey, sp, delta)
+
+        def body(_, c):
+            return masked_sparse_mu_step(sp_q, c[0], c[1], mask, eps)
+
+        A, R = jax.lax.fori_loop(0, iters, body, (A0u, R0u))
+        st = masked_normalize(
+            RescalState(A=A, R=R, step=jnp.zeros((), jnp.int32)), mask)
+        return st.A, st.R, sparse_rel_error(sp, st.A, st.R)
+
+    return jax.vmap(one_cell)(keys, kvals, A0, R0)
+
+
+@functools.lru_cache(maxsize=64)
+def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
+                            m: int, u_run: int, grid: int | None = None,
+                            schedule: str = "batched", delta: float = 0.02,
+                            iters: int = 200, dtype=jnp.float32,
+                            key_ndim: int = 2):
+    """The cross-k grid program on the ("pod", "data", "model") mesh: one
+    shard_map program whose flattened (k, q) cell axis rides the
+    pod/`ENSEMBLE_AXIS`, built from the same ``dist.engine.get_mu_iter``
+    per-device bodies as every other distributed path.
+
+    ``operand`` dispatches "dense" (X (m, n, n), signature ``(X, keys,
+    kvals, ids, A0, R0)``) vs "bcsr" (ShardedBCSR stacked shards,
+    ``(data, rows, cols, keys, kvals, ids, A0, R0)``).  Per-cell init
+    arrives row-sharded from ``grid_init`` (reference-shape draws padded to
+    k_max — which also removes the per-k mesh path's redundant every-device
+    global init draw) and per-cell ranks arrive as data, so one compiled
+    program serves any rank mix of the same chunk length.  The perturbation
+    stays shard-local (``perturb_shard`` keyed by member id q + linear grid
+    index), i.e. noise is bit-identical to the per-k mesh ensemble's, which
+    is what makes grid-vs-per-k mesh parity exactly testable."""
+    from jax.experimental.shard_map import shard_map
+    from repro.core.sparse import BCSR
+    from repro.dist import sharding as sh
+    from repro.dist.engine import (DistRescalConfig, get_mu_iter,
+                                   local_normalize, local_rel_error,
+                                   local_rel_error_bcsr)
+
+    gr = mesh.shape[sh.ROW_AXIS]
+    gc = mesh.shape[sh.COL_AXIS]
+    pods = dict(mesh.shape).get(sh.ENSEMBLE_AXIS, 1)
+    if u_run % pods:
+        raise ValueError(f"a grid chunk of {u_run} cells does not shard "
+                         f"evenly over pods={pods}; pick a grid_chunk "
+                         f"divisible by the pod count")
+    if operand == "bcsr":
+        if gr != gc:
+            raise ValueError(f"BCSR ensembles need a square grid, got "
+                             f"({gr}, {gc})")
+        if grid != gr:
+            raise ValueError(f"operand was partitioned for a {grid}x{grid} "
+                             f"grid but the mesh grid is {gr}x{gc}; "
+                             f"re-partition for this mesh")
+    if n % gr or n % gc:
+        raise ValueError(f"n={n} must divide the ({gr}, {gc}) grid")
+
+    dcfg = DistRescalConfig(schedule=schedule)
+    it = get_mu_iter(operand, schedule)
+    mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
+    n_loc = n // gr
+
+    def cell_loop(op_local, keys_l, kv_l, ids_l, A0_l, R0_l, perturb_op,
+                  err_fn):
+        def one_cell(mkey, kv, q, A0u, R0u):
+            mask = column_mask(kv, k_max, dtype)
+            mask2 = mask[:, None] * mask[None, :]
+            pkey, _ = jax.random.split(mkey)
+            op_q = perturb_op(pkey, q)
+
+            def body(_, c):
+                Ai, R = it(op_q, c[0], c[1], dcfg)
+                return Ai * mask, R * mask2
+
+            Ai, R = jax.lax.fori_loop(0, iters, body, (A0u, R0u))
+            Ai, R = local_normalize(Ai, R)
+            Ai, R = Ai * mask, R * mask2
+            return Ai, R, err_fn(op_local, Ai, R)
+
+        return jax.vmap(one_cell)(keys_l, kv_l, ids_l, A0_l, R0_l)
+
+    cell_specs = (mspecs["keys"], mspecs["ids"], mspecs["ids"],
+                  mspecs["A"], mspecs["R"])
+    out_specs = (mspecs["A"], mspecs["R"], mspecs["err"])
+
+    if operand == "dense":
+        def local(Xl, keys_l, kv_l, ids_l, A0_l, R0_l):
+            i = jax.lax.axis_index(sh.ROW_AXIS)
+            j = jax.lax.axis_index(sh.COL_AXIS)
+            lin = i * gc + j
+            return cell_loop(
+                Xl, keys_l, kv_l, ids_l, A0_l, R0_l,
+                lambda pkey, q: perturb_shard(pkey, Xl, q, lin, delta),
+                local_rel_error)
+
+        in_specs = (mspecs["X"],) + cell_specs
+    else:
+        x_spec, i_spec, _, _ = sh.bcsr_specs()
+
+        def local(data, rows, cols, keys_l, kv_l, ids_l, A0_l, R0_l):
+            spl = BCSR(data=data[0, 0], block_rows=rows[0, 0],
+                       block_cols=cols[0, 0], n=n_loc)
+            i = jax.lax.axis_index(sh.ROW_AXIS)
+            j = jax.lax.axis_index(sh.COL_AXIS)
+            lin = i * gc + j
+            return cell_loop(
+                spl, keys_l, kv_l, ids_l, A0_l, R0_l,
+                lambda pkey, q: spl._replace(
+                    data=perturb_shard(pkey, spl.data, q, lin, delta)),
+                local_rel_error_bcsr)
+
+        in_specs = (x_spec, i_spec, i_spec) + cell_specs
+
+    sharded = shard_map(local, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    return jax.jit(sharded)
+
+
+def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
+    """Execute a chunk of flattened (k, q) grid cells as ONE program — the
+    cross-k tentpole.  ``cells`` is a sequence of (k, q) pairs; rows come
+    back padded to k_max = max(cfg.ks) (the scheduler crops each row to its
+    own k before reduction; masked columns are exact zeros).
+
+    Operand dispatch mirrors ``run_ensemble``: dense array or
+    ``core.sparse.BCSR`` on a single host (vmap programs), or with `mesh` a
+    dense array / ``io.partition.ShardedBCSR`` through the sharded grid
+    program (cell axis on the pod/ENSEMBLE_AXIS)."""
+    from repro.core.sparse import BCSR
+    cells = tuple(cells)
+    k_max = max(cfg.ks)
+    _require_random_init(cfg, "the cross-k grid program")
+    sharded = X if _is_sharded_bcsr(X) else None
+    if mesh is not None:
+        ids = jnp.asarray([q for _, q in cells], dtype=jnp.int32)
+        if sharded is not None:
+            keys, kvals, A0, R0 = grid_init(
+                cells, cfg, sharded.n_pad, sharded.m, k_max,
+                sharded.data.dtype)
+            prog = make_mesh_grid_ensemble(
+                mesh, operand="bcsr", k_max=k_max, n=sharded.n_pad,
+                m=sharded.m, u_run=len(cells), grid=sharded.g,
+                schedule=cfg.schedule, delta=cfg.perturbation_delta,
+                iters=cfg.rescal_iters, dtype=sharded.data.dtype,
+                key_ndim=keys.ndim)
+            A, R, errs = prog(sharded.data, sharded.rows, sharded.cols,
+                              keys, kvals, ids, A0, R0)
+            return EnsembleResult(A=A, R=R, errors=errs)
+        if isinstance(X, BCSR):
+            raise ValueError(
+                "a plain BCSR cannot be mesh-sharded — partition it "
+                "(io.partition.partition_coo / partition_dense) and pass "
+                "the ShardedBCSR")
+        m, n, _ = X.shape
+        keys, kvals, A0, R0 = grid_init(cells, cfg, n, m, k_max, X.dtype)
+        prog = make_mesh_grid_ensemble(
+            mesh, operand="dense", k_max=k_max, n=n, m=m, u_run=len(cells),
+            schedule=cfg.schedule, delta=cfg.perturbation_delta,
+            iters=cfg.rescal_iters, dtype=X.dtype, key_ndim=keys.ndim)
+        A, R, errs = prog(X, keys, kvals, ids, A0, R0)
+        return EnsembleResult(A=A, R=R, errors=errs)
+    if sharded is not None or isinstance(X, BCSR):
+        # single host: same merged-global-BCSR collapse as run_ensemble
+        sp = sharded.to_bcsr() if sharded is not None else X
+        keys, kvals, A0, R0 = grid_init(cells, cfg, sp.n, sp.m, k_max,
+                                        sp.data.dtype)
+        A, R, errs = _grid_members_bcsr(
+            sp, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
+            delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+        return EnsembleResult(A=A, R=R, errors=errs)
+    m, n, _ = X.shape
+    keys, kvals, A0, R0 = grid_init(cells, cfg, n, m, k_max, X.dtype)
+    A, R, errs = _grid_members(
+        X, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
+        schedule=cfg.schedule, delta=cfg.perturbation_delta,
+        eps=EPS_DEFAULT)
+    return EnsembleResult(A=A, R=R, errors=errs)
+
+
+# ---------------------------------------------------------------------------
 # Sequential reference loop (and the memory-bound fallback)
 # ---------------------------------------------------------------------------
 
@@ -464,9 +744,9 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
     vs sequential-loop execution on a single host.
     """
     from repro.core.sparse import BCSR
-    r = cfg.n_perturbations
-    members = tuple(members) if members is not None else tuple(range(r))
-    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    members = tuple(members) if members is not None else \
+        tuple(range(cfg.n_perturbations))
+    keys = unit_keys(cfg, k, members)
     sharded = X if _is_sharded_bcsr(X) else None
     if mesh is not None:
         if mode != "batched":
@@ -527,7 +807,7 @@ def run_ensemble_reference(X, k: int, cfg, *, grid: tuple[int, int],
     """Single-host sequential run with the mesh path's blocked perturbation
     — the oracle for mesh-vs-host parity tests (same noise by
     construction)."""
-    r = cfg.n_perturbations
-    members = tuple(members) if members is not None else tuple(range(r))
-    keys = member_keys(cfg.seed, k, r)[jnp.asarray(members)]
+    members = tuple(members) if members is not None else \
+        tuple(range(cfg.n_perturbations))
+    keys = unit_keys(cfg, k, members)
     return _loop_members(X, keys, members, k, cfg, grid=grid)

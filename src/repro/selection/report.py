@@ -19,13 +19,18 @@ from . import criteria
 
 @dataclasses.dataclass
 class UnitRecord:
-    """Execution record for one (k, members) work unit."""
+    """Execution record for one work unit: a (k, members) unit in the
+    per-k modes, or one cross-k grid chunk in mode="grid" — the latter can
+    span several candidate ranks, so it records its (k, q) ``cells`` and
+    uses the sentinel ``k == -1`` / empty ``members``.  Reuse counting is
+    identical either way (one record per scheduled unit)."""
     uid: str
     k: int
     members: list[int]
     seconds: float
     reused: bool
     retries: int
+    cells: list[list[int]] | None = None   # grid chunks only
 
 
 @dataclasses.dataclass

@@ -8,7 +8,10 @@ grid end to end:
     mode one unit covers a contiguous member group per k (grouped with
     ``dist.elastic.ensemble_plan`` when the sweep is split across
     ``n_pods`` hosts); in "loop" mode every (k, q) pair is its own unit
-    (finest checkpoint granularity, the sequential reference).
+    (finest checkpoint granularity, the sequential reference); in "grid"
+    mode the whole (k, q) grid flattens k-major into ``GridChunk``s —
+    each chunk ONE cross-k padded device program and ONE checkpoint
+    (coarsest granularity, fewest compiles).
   * ``SweepScheduler`` executes units via selection/ensemble.py (batched
     vmap program, mesh-sharded program, or sequential loop), with
     per-unit checkpoint/resume (repro.ckpt) and bounded retry.  Unit
@@ -44,13 +47,13 @@ from repro.core.silhouette import SilhouetteResult, silhouettes
 from repro.dist.elastic import ensemble_plan
 
 from . import criteria
-from .ensemble import EnsembleResult, run_ensemble
+from .ensemble import EnsembleResult, run_ensemble, run_sweep_batched
 from .report import SelectionReport, UnitRecord
 from .types import KResult, RescalkConfig, RescalkResult
 
-__all__ = ["KResult", "RescalkConfig", "RescalkResult", "SweepInterrupted",
-           "SweepScheduler", "UnitOutcome", "WorkUnit", "plan_sweep",
-           "reduce_k"]
+__all__ = ["GridChunk", "KResult", "RescalkConfig", "RescalkResult",
+           "SweepInterrupted", "SweepScheduler", "UnitOutcome", "WorkUnit",
+           "plan_sweep", "reduce_k"]
 
 
 # ---------------------------------------------------------------------------
@@ -71,14 +74,72 @@ class WorkUnit:
     def uid(self) -> str:
         return f"unit_k{self.k}_q{self.members[0]}-{self.members[-1]}"
 
+    def keys(self, cfg) -> "jax.Array":
+        """This unit's member keys — delegated to the sweep's single key
+        home (``ensemble.unit_keys``), so every mode shares one
+        discipline."""
+        from .ensemble import unit_keys
+        return unit_keys(cfg, self.k, self.members)
+
+
+@dataclasses.dataclass(frozen=True)
+class GridChunk:
+    """One schedulable chunk of the flattened cross-k (k, q) grid (mode
+    "grid"): a contiguous run of cells in the canonical k-major,
+    member-minor order, executed as ONE padded-to-k_max device program
+    (ensemble.run_sweep_batched).  Because the cells are a contiguous range
+    of a deterministic order, the (first, last) cell pair fully determines
+    the chunk's contents — so ``uid`` stays pure grid identity, and a
+    re-chunked sweep (different grid_chunk) can still legitimately reuse
+    any checkpointed chunk whose cell range coincides."""
+    index: int
+    cells: tuple[tuple[int, int], ...]   # ((k, q), ...)
+    k_max: int
+
+    @property
+    def uid(self) -> str:
+        (k0, q0), (k1, q1) = self.cells[0], self.cells[-1]
+        return f"grid_k{k0}q{q0}-k{k1}q{q1}"
+
+    def keys(self, cfg) -> "jax.Array":
+        """Per-cell member keys, one per (k, q) — same key home as
+        ``WorkUnit.keys``, which is what makes grid and per-k modes
+        provably agree draw-for-draw.  Derived once per rank, then
+        indexed per cell."""
+        from .ensemble import unit_keys
+        per_k = {k: unit_keys(cfg, k, tuple(range(cfg.n_perturbations)))
+                 for k in dict.fromkeys(k for k, _ in self.cells)}
+        return jax.numpy.stack([per_k[k][q] for k, q in self.cells])
+
 
 def plan_sweep(cfg: RescalkConfig, *, mode: str = "batched",
-               n_pods: int = 1) -> list[WorkUnit]:
+               n_pods: int = 1, grid_chunk: int | None = None
+               ) -> list[WorkUnit] | list[GridChunk]:
     """Deterministic unit grid for the sweep.  "batched": members of each k
     grouped contiguously over `n_pods` chunks (dist.elastic.ensemble_plan);
-    "loop": one unit per (k, q)."""
+    "loop": one unit per (k, q); "grid": the whole (k, q) grid flattened
+    k-major and split into chunks of `grid_chunk` cells (default: one
+    chunk per pod), each chunk one cross-k device program and one
+    checkpoint."""
+    if mode == "grid":
+        cells = [(k, q) for k in cfg.ks
+                 for q in range(cfg.n_perturbations)]
+        if grid_chunk is None:
+            grid_chunk = -(-len(cells) // n_pods)
+        if grid_chunk <= 0:
+            raise ValueError(f"grid_chunk must be positive, got "
+                             f"{grid_chunk}")
+        k_max = max(cfg.ks)
+        chunks: list[GridChunk] = []
+        for i in range(0, len(cells), grid_chunk):
+            chunks.append(GridChunk(index=len(chunks),
+                                    cells=tuple(cells[i:i + grid_chunk]),
+                                    k_max=k_max))
+        return chunks
     if mode not in ("batched", "loop"):
         raise ValueError(f"unknown sweep mode {mode!r}")
+    if grid_chunk is not None:
+        raise ValueError("grid_chunk only applies to mode='grid'")
     units: list[WorkUnit] = []
     for k in cfg.ks:
         if mode == "loop":
@@ -141,7 +202,7 @@ class SweepInterrupted(RuntimeError):
 
 @dataclasses.dataclass
 class UnitOutcome:
-    unit: WorkUnit
+    unit: "WorkUnit | GridChunk"
     result: EnsembleResult | None   # dropped (None) once its k is reduced
     seconds: float
     reused: bool
@@ -154,13 +215,23 @@ class SweepScheduler:
     Parameters
     ----------
     cfg : RescalkConfig
-    mode : "batched" (one program per unit, members vmapped) | "loop"
+    mode : "batched" (one program per unit, members vmapped) | "loop" |
+        "grid" (the whole (k, q) grid padded to k_max and chunked into
+        cross-k device programs — ensemble.run_sweep_batched)
     mesh : optional jax Mesh — routes units through the sharded ensemble
-        program (members spread over the pod/ensemble axis when present)
+        program (members — or grid cells — spread over the pod/ensemble
+        axis when present)
     ckpt_dir : per-unit checkpoint root; units found there are reused, not
-        recomputed (the resume contract CI asserts)
+        recomputed (the resume contract CI asserts).  In grid mode the
+        granularity is per-grid-chunk; tags still derive from grid
+        identity (GridChunk.uid) and reuse counting is unchanged
     criterion : key into selection.criteria.CRITERIA
     n_pods : split each k's members into this many host-level units
+        (grid mode: the default chunk count)
+    grid_chunk : cells per grid-mode chunk (default: one chunk per pod).
+        Deliberately NOT part of the checkpoint fingerprint — chunk uids
+        encode their exact cell range, so re-chunking a sweep reuses only
+        chunks whose contents truly coincide
     max_retries : per-unit re-execution budget on failure
     stop_after_units : compute at most this many units (checked before
         each execution; 0 = resume-only), then raise SweepInterrupted —
@@ -173,14 +244,21 @@ class SweepScheduler:
     def __init__(self, cfg: RescalkConfig, *, mode: str = "batched",
                  mesh=None, ckpt_dir: str | None = None,
                  criterion: str = "threshold", n_pods: int = 1,
+                 grid_chunk: int | None = None,
                  max_retries: int = 1, stop_after_units: int | None = None,
                  failure_injector: Callable | None = None,
                  report_path: str | None = None, verbose: bool = False):
         criteria.require(criterion)
-        if mesh is not None and mode != "batched":
+        if mesh is not None and mode not in ("batched", "grid"):
             raise ValueError(
                 "mode='loop' is host-only (the sequential reference / "
                 "memory-bound fallback); drop mesh= or use mode='batched'")
+        if mode == "grid" and cfg.init != "random":
+            # fail before planning, not after max_retries wasted attempts
+            raise NotImplementedError(
+                "mode='grid' supports init='random' only (NNDSVD depends "
+                "on the perturbed tensor, which only exists inside the "
+                "grid program); use mode='batched' for nndsvd")
         self.cfg = cfg
         self.mode = mode
         self.mesh = mesh
@@ -191,7 +269,19 @@ class SweepScheduler:
         self.failure_injector = failure_injector
         self.report_path = report_path
         self.verbose = verbose
-        self.units = plan_sweep(cfg, mode=mode, n_pods=n_pods)
+        self.units = plan_sweep(cfg, mode=mode, n_pods=n_pods,
+                                grid_chunk=grid_chunk)
+        if mesh is not None and mode == "grid":
+            # deterministic config error: surface it here, not inside unit
+            # execution after max_retries identical failures
+            from repro.dist.sharding import ENSEMBLE_AXIS
+            pods = dict(mesh.shape).get(ENSEMBLE_AXIS, 1)
+            bad = [u.uid for u in self.units if len(u.cells) % pods]
+            if bad:
+                raise ValueError(
+                    f"grid chunks {bad} do not shard evenly over "
+                    f"pods={pods}; pick a grid_chunk (or n_pods) that "
+                    f"keeps every chunk divisible by the pod count")
         self.report: SelectionReport | None = None
 
     # -- checkpoint-config guard --------------------------------------------
@@ -238,12 +328,17 @@ class SweepScheduler:
     def _operand_dtype(X):
         return getattr(X, "dtype", None) or X.data.dtype
 
-    def _unit_like(self, X, unit: WorkUnit) -> dict:
+    def _unit_like(self, X, unit: WorkUnit | GridChunk) -> dict:
         from repro.io.manifest import operand_dims
         m, n = operand_dims(X)
         dtype = self._operand_dtype(X)
-        r_u, k = len(unit.members), unit.k
         sds = jax.ShapeDtypeStruct
+        if isinstance(unit, GridChunk):
+            c, km = len(unit.cells), unit.k_max
+            return {"A": sds((c, n, km), dtype),
+                    "R": sds((c, m, km, km), dtype),
+                    "errors": sds((c,), dtype)}
+        r_u, k = len(unit.members), unit.k
         return {"A": sds((r_u, n, k), dtype),
                 "R": sds((r_u, m, k, k), dtype),
                 "errors": sds((r_u,), dtype)}
@@ -267,8 +362,13 @@ class SweepScheduler:
                 if self.failure_injector is not None:
                     self.failure_injector(unit, attempt)
                 t0 = time.perf_counter()
-                res = run_ensemble(X, unit.k, self.cfg, members=unit.members,
-                                   mesh=self.mesh, mode=self.mode)
+                if isinstance(unit, GridChunk):
+                    res = run_sweep_batched(X, unit.cells, self.cfg,
+                                            mesh=self.mesh)
+                else:
+                    res = run_ensemble(X, unit.k, self.cfg,
+                                       members=unit.members,
+                                       mesh=self.mesh, mode=self.mode)
                 jax.block_until_ready(res.A)
                 dt = time.perf_counter() - t0
                 break
@@ -299,11 +399,50 @@ class SweepScheduler:
         # every call).
         X_red = X.to_bcsr() if _is_sharded_bcsr(X) else X
         X_exec = X if self.mesh is not None else X_red
-        expected = {k: sum(1 for u in self.units if u.k == k) for k in ks}
-        pending: dict[int, list[UnitOutcome]] = {k: [] for k in ks}
+        grid = self.mode == "grid"
+        if grid:
+            # one cell per (k, q): a chunk may span several ks
+            expected = {k: cfg.n_perturbations for k in ks}
+        else:
+            expected = {k: sum(1 for u in self.units if u.k == k)
+                        for k in ks}
+        # per-k accumulator: UnitOutcomes in unit modes, cropped
+        # (q, A, R, err) cell rows in grid mode
+        pending: dict[int, list] = {k: [] for k in ks}
         per_k: dict[int, KResult] = {}
         records: list[UnitRecord] = []
         executed = 0
+
+        def reduce_ready(k: int) -> None:
+            # all of k's members arrived: reduce now and DROP the factor
+            # arrays — peak memory stays one k's ensemble, not the sweep's
+            if grid:
+                rows = sorted(pending.pop(k), key=lambda t: t[0])
+                A_ens = np.stack([a for _, a, _, _ in rows])
+                R_ens = np.stack([r for _, _, r, _ in rows])
+                errs = np.asarray([e for _, _, _, e in rows])
+            else:
+                outs = sorted(pending.pop(k),
+                              key=lambda o: o.unit.members[0])
+                A_ens = np.concatenate([np.asarray(o.result.A)
+                                        for o in outs])
+                R_ens = np.concatenate([np.asarray(o.result.R)
+                                        for o in outs])
+                errs = np.concatenate([np.asarray(o.result.errors)
+                                       for o in outs])
+                for o in outs:
+                    o.result = None
+                records.extend(
+                    UnitRecord(uid=o.unit.uid, k=k,
+                               members=list(o.unit.members),
+                               seconds=o.seconds, reused=o.reused,
+                               retries=o.retries) for o in outs)
+            per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
+            if self.verbose:
+                r = per_k[k]
+                print(f"[sweep] k={k:3d} s_min={r.s_min:6.3f} "
+                      f"s_mean={r.s_mean:6.3f} err={r.rel_err:7.4f}")
+
         for pos, unit in enumerate(self.units):
             out = self._try_restore(X_exec, unit)
             if out is None:
@@ -315,28 +454,32 @@ class SweepScheduler:
                                            resumable=bool(self.ckpt_dir))
                 out = self._execute_unit(X_exec, unit)
                 executed += 1
-            pending[unit.k].append(out)
-            if len(pending[unit.k]) < expected[unit.k]:
+            if grid:
+                # crop each padded cell row to its own k and hand it to
+                # that k's accumulator; the chunk's padded block is dropped
+                A = np.asarray(out.result.A)
+                R = np.asarray(out.result.R)
+                errs = np.asarray(out.result.errors)
+                out.result = None
+                records.append(UnitRecord(
+                    uid=unit.uid, k=-1, members=[], seconds=out.seconds,
+                    reused=out.reused, retries=out.retries,
+                    cells=[list(c) for c in unit.cells]))
+                done: list[int] = []
+                for row, (k, q) in enumerate(unit.cells):
+                    # .copy(): a cropped VIEW would pin the whole padded
+                    # chunk block until its last straddling k reduces
+                    pending[k].append((q, A[row][:, :k].copy(),
+                                       R[row][:, :k, :k].copy(),
+                                       errs[row]))
+                    if len(pending[k]) == expected[k]:
+                        done.append(k)
+                for k in done:
+                    reduce_ready(k)
                 continue
-            # last unit of this k: reduce now and DROP the factor arrays —
-            # peak memory stays one k's ensemble, not the whole sweep's
-            k = unit.k
-            outs = sorted(pending.pop(k), key=lambda o: o.unit.members[0])
-            A_ens = np.concatenate([np.asarray(o.result.A) for o in outs])
-            R_ens = np.concatenate([np.asarray(o.result.R) for o in outs])
-            errs = np.concatenate([np.asarray(o.result.errors)
-                                   for o in outs])
-            for o in outs:
-                o.result = None
-            per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
-            records.extend(
-                UnitRecord(uid=o.unit.uid, k=k, members=list(o.unit.members),
-                           seconds=o.seconds, reused=o.reused,
-                           retries=o.retries) for o in outs)
-            if self.verbose:
-                r = per_k[k]
-                print(f"[sweep] k={k:3d} s_min={r.s_min:6.3f} "
-                      f"s_mean={r.s_mean:6.3f} err={r.rel_err:7.4f}")
+            pending[unit.k].append(out)
+            if len(pending[unit.k]) == expected[unit.k]:
+                reduce_ready(unit.k)
 
         s_min = np.array([per_k[k].s_min for k in ks])
         s_mean = np.array([per_k[k].s_mean for k in ks])

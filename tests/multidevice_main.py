@@ -315,6 +315,78 @@ def check_selection_mesh_ensemble_bcsr():
                                    atol=5e-5)
 
 
+def check_selection_grid_mesh():
+    """The cross-k grid program on the mesh (ISSUE 4): the flattened
+    (k, q) cell axis rides the pod axis, per-cell ranks are data, factors
+    are padded to k_max — and every cell must match the per-k mesh
+    ensemble member-for-member (same shard-local noise by construction,
+    same reference-shape init draws), dense AND BCSR."""
+    from repro.io import partition_coo
+    from repro.io.triples import COOBuilder
+    from repro.selection import (RescalkConfig, SweepScheduler,
+                                 run_ensemble, run_sweep_batched)
+
+    mesh = mesh_pod()                      # (pod, data, model) = (2, 2, 2)
+    cfg = RescalkConfig(k_min=2, k_max=4, n_perturbations=2,
+                        rescal_iters=40, init="random", seed=4)
+    cells = [(k, q) for k in cfg.ks for q in range(2)]   # 6 cells % 2 pods
+
+    # ---- dense ----
+    X = lowrank(jax.random.PRNGKey(5), n=32, m=2, k=3)
+    g = run_sweep_batched(X, cells, cfg, mesh=mesh)
+    gA, gR = np.asarray(g.A), np.asarray(g.R)
+    for k in cfg.ks:
+        ref = run_ensemble(X, k, cfg, mesh=mesh)
+        rows = [i for i, (kk, _) in enumerate(cells) if kk == k]
+        np.testing.assert_allclose(np.asarray(g.errors)[rows], ref.errors,
+                                   rtol=5e-4, atol=1e-5)
+        np.testing.assert_allclose(gA[rows][:, :, :k], ref.A, rtol=5e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(gR[rows][:, :, :k, :k], ref.R,
+                                   rtol=5e-4, atol=1e-5)
+        assert (gA[rows][:, :, k:] == 0.0).all()   # masked cols exact 0
+
+    # a chunking that does not divide the pod axis must be rejected at
+    # construction (not after max_retries failed executions)
+    try:
+        SweepScheduler(cfg, mode="grid", mesh=mesh, grid_chunk=5)
+    except ValueError as e:
+        assert "pods" in str(e), e
+    else:
+        raise AssertionError("indivisible grid chunking was not rejected")
+
+    # full sweep through the scheduler on the mesh, chunked so each chunk
+    # still divides the pod axis
+    r_grid = SweepScheduler(cfg, mode="grid", mesh=mesh,
+                            grid_chunk=2).run(X)
+    r_perk = SweepScheduler(cfg, mesh=mesh).run(X)
+    assert r_grid.k_opt == r_perk.k_opt
+    for k in cfg.ks:
+        np.testing.assert_allclose(r_grid.per_k[k].member_errors,
+                                   r_perk.per_k[k].member_errors,
+                                   rtol=5e-4, atol=1e-5)
+
+    # ---- BCSR (balanced shards, stored-block perturbation) ----
+    rng = np.random.default_rng(0)
+    n, m, nnz = 128, 2, 1500
+    ii = np.minimum(rng.zipf(1.5, nnz) - 1, n - 1)
+    jj = rng.integers(0, n, nnz)
+    rr = rng.integers(0, m, nnz)
+    vv = (rng.random(nnz) + 0.1).astype(np.float32)
+    coo = COOBuilder().add(rr, ii, jj, vv).finalize(n=n, m=m)
+    sharded = partition_coo(coo, bs=16, grid=2)
+    gs = run_sweep_batched(sharded, cells, cfg, mesh=mesh)
+    gsA = np.asarray(gs.A)
+    for k in cfg.ks:
+        ref = run_ensemble(sharded, k, cfg, mesh=mesh)
+        rows = [i for i, (kk, _) in enumerate(cells) if kk == k]
+        np.testing.assert_allclose(np.asarray(gs.errors)[rows],
+                                   ref.errors, rtol=1e-3, atol=5e-5)
+        np.testing.assert_allclose(gsA[rows][:, :, :k], ref.A, rtol=2e-3,
+                                   atol=5e-5)
+        assert (gsA[rows][:, :, k:] == 0.0).all()
+
+
 def check_clustering_sharded_similarity():
     """The clustering similarity einsum under pjit == host einsum."""
     from repro.core.clustering import _similarity

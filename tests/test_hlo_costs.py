@@ -64,3 +64,34 @@ class TestLegacyParser:
                "  %c = f32[4,4]{1,0} copy(%d)\n")
         h = hlo_stats.op_histogram(hlo)
         assert h == {"dot": 1, "copy": 1}
+
+
+class TestCaptureCompiles:
+    """dist.compat.capture_compiles — the surface the compile-count CI
+    guard (scripts/check_compiles.py) stands on."""
+
+    def test_counts_named_program_once(self):
+        from repro.dist.compat import capture_compiles
+
+        def freshly_named_probe(x):
+            return x * 2.0 + 1.0
+
+        f = jax.jit(freshly_named_probe)
+        x = jnp.ones((5,))
+        with capture_compiles() as log:
+            f(x)          # compiles (new function identity)
+            f(x)          # cached: must NOT count again
+        assert log.count("freshly_named_probe") == 1
+        assert log.count("freshly_named_probe", "no_such_prog") == 1
+        assert log.count("no_such_prog") == 0
+        assert log.count() >= 1
+
+    def test_restores_logger_state(self):
+        import logging
+        from repro.dist.compat import capture_compiles
+        logger = logging.getLogger("jax")
+        before = (logger.level, logger.propagate, list(logger.handlers))
+        with capture_compiles():
+            jax.jit(lambda x: x + 1)(jnp.zeros(3))
+        after = (logger.level, logger.propagate, list(logger.handlers))
+        assert before == after

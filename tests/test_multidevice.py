@@ -15,6 +15,7 @@ CHECKS = [
     "ensemble_step_pods",
     "selection_mesh_ensemble",
     "selection_mesh_ensemble_bcsr",
+    "selection_grid_mesh",
     "fused_engine_matches_reference",
     "sharded_train_matches_single",
     "sharded_decode_matches_single",

@@ -8,10 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.selection import (CRITERIA, RescalkConfig, SelectionReport,
-                             SweepInterrupted, SweepScheduler, WorkUnit,
-                             criteria, plan_sweep, run_ensemble)
+from repro.selection import (CRITERIA, GridChunk, RescalkConfig,
+                             SelectionReport, SweepInterrupted,
+                             SweepScheduler, WorkUnit, criteria, plan_sweep,
+                             run_ensemble, run_sweep_batched, unit_keys)
 from repro.core.rescalk import rescalk
+from repro.core.rescal import (column_mask, crop_state, init_factors,
+                               mask_state, masked_mu_step, masked_normalize,
+                               mu_step_batched, mu_step_sliced, normalize,
+                               pad_state, rel_error)
 
 
 def small_tensor(n=24, m=2, k=3, seed=0):
@@ -209,6 +214,252 @@ class TestBCSREnsemble:
         s = self.small_bcsr()
         with pytest.raises(ValueError, match="partition"):
             run_ensemble(s, 3, self.CFG, mesh=object())
+
+
+class TestMaskedMU:
+    """The cross-k padding primitives (ISSUE 4): masked columns stay
+    exactly zero through update/normalize, and the active block matches
+    the unpadded reference — what makes grid-mode results comparable to
+    per-k results member-for-member."""
+
+    K, K_MAX = 3, 5
+
+    def setup_method(self, _):
+        key = jax.random.PRNGKey(7)
+        self.X = small_tensor(n=16, m=2, k=self.K, seed=7)
+        self.state = init_factors(jax.random.fold_in(key, 1), 16, 2, self.K)
+        self.mask = column_mask(self.K, self.K_MAX, self.X.dtype)
+
+    def test_column_mask_and_pad_crop_roundtrip(self):
+        np.testing.assert_array_equal(np.asarray(self.mask),
+                                      [1, 1, 1, 0, 0])
+        padded = pad_state(self.state, self.K_MAX)
+        assert padded.A.shape == (16, self.K_MAX)
+        assert padded.R.shape == (2, self.K_MAX, self.K_MAX)
+        cropped = crop_state(padded, self.K)
+        np.testing.assert_array_equal(cropped.A, self.state.A)
+        np.testing.assert_array_equal(cropped.R, self.state.R)
+        with pytest.raises(ValueError, match="pad rank"):
+            pad_state(self.state, self.K - 1)
+
+    def test_masked_step_matches_unpadded_and_zeros_stay_zero(self):
+        ref = self.state
+        padded = pad_state(self.state, self.K_MAX)
+        for schedule in ("batched", "sliced"):
+            st_ref, st_pad = ref, padded
+            for _ in range(8):
+                st_ref = (mu_step_batched if schedule == "batched"
+                          else mu_step_sliced)(self.X, st_ref)
+                st_pad = masked_mu_step(self.X, st_pad, self.mask,
+                                        schedule=schedule)
+            # padded active block == unpadded (identical arithmetic up to
+            # reduction order; zeros contribute exact zeros)
+            np.testing.assert_allclose(st_pad.A[:, :self.K], st_ref.A,
+                                       rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(st_pad.R[:, :self.K, :self.K],
+                                       st_ref.R, rtol=1e-5, atol=1e-6)
+            # masked region: exact zeros, not merely small
+            assert (np.asarray(st_pad.A)[:, self.K:] == 0.0).all()
+            assert (np.asarray(st_pad.R)[:, self.K:, :] == 0.0).all()
+            assert (np.asarray(st_pad.R)[:, :, self.K:] == 0.0).all()
+
+    def test_masked_normalize_and_rel_error(self):
+        st_ref = normalize(mu_step_batched(self.X, self.state))
+        st_pad = masked_normalize(
+            masked_mu_step(self.X, pad_state(self.state, self.K_MAX),
+                           self.mask), self.mask)
+        np.testing.assert_allclose(st_pad.A[:, :self.K], st_ref.A,
+                                   rtol=1e-6, atol=1e-7)
+        assert (np.asarray(st_pad.A)[:, self.K:] == 0.0).all()
+        # rel_error needs no mask: zero columns contribute exactly zero
+        np.testing.assert_allclose(
+            float(rel_error(self.X, st_pad.A, st_pad.R)),
+            float(rel_error(self.X, st_ref.A, st_ref.R)), rtol=1e-6)
+
+    def test_mask_state_is_idempotent(self):
+        st = mask_state(pad_state(self.state, self.K_MAX), self.mask)
+        st2 = mask_state(st, self.mask)
+        np.testing.assert_array_equal(st.A, st2.A)
+        np.testing.assert_array_equal(st.R, st2.R)
+
+
+
+class TestGridPlan:
+    """Grid-mode planning: chunk layout, uid identity, and the shared key
+    discipline (ISSUE 4 satellite: keys hoisted into unit identity)."""
+
+    def test_default_is_one_chunk(self):
+        chunks = plan_sweep(SMALL_CFG, mode="grid")
+        assert len(chunks) == 1
+        assert chunks[0].cells == tuple(
+            (k, q) for k in (2, 3, 4) for q in range(4))
+        assert chunks[0].k_max == 4
+
+    def test_chunking_with_ragged_tail(self):
+        chunks = plan_sweep(SMALL_CFG, mode="grid", grid_chunk=5)
+        assert [len(c.cells) for c in chunks] == [5, 5, 2]
+        flat = [c for ch in chunks for c in ch.cells]
+        assert flat == [(k, q) for k in (2, 3, 4) for q in range(4)]
+        assert plan_sweep(SMALL_CFG, mode="grid", grid_chunk=5) == chunks
+
+    def test_uid_is_pure_grid_identity(self):
+        ch = GridChunk(index=0, cells=((2, 1), (2, 2), (3, 0)), k_max=5)
+        assert ch.uid == "grid_k2q1-k3q0"
+
+    def test_n_pods_sets_default_chunk_count(self):
+        chunks = plan_sweep(SMALL_CFG, mode="grid", n_pods=2)
+        assert len(chunks) == 2
+        assert [len(c.cells) for c in chunks] == [6, 6]
+
+    def test_keys_share_one_discipline(self):
+        """WorkUnit.keys and GridChunk.keys both resolve through
+        unit_keys, so grid cells draw exactly the per-k unit's keys."""
+        unit = WorkUnit(index=0, k=3, members=(0, 1, 2, 3))
+        chunk = plan_sweep(SMALL_CFG, mode="grid")[0]
+        uk = np.asarray(unit.keys(SMALL_CFG))
+        ck = np.asarray(chunk.keys(SMALL_CFG))
+        rows = [i for i, (k, _) in enumerate(chunk.cells) if k == 3]
+        np.testing.assert_array_equal(ck[rows], uk)
+        np.testing.assert_array_equal(uk, np.asarray(
+            unit_keys(SMALL_CFG, 3, (0, 1, 2, 3))))
+
+    def test_grid_chunk_rejected_outside_grid_mode(self):
+        with pytest.raises(ValueError, match="grid_chunk"):
+            plan_sweep(SMALL_CFG, mode="batched", grid_chunk=4)
+        with pytest.raises(ValueError, match="positive"):
+            plan_sweep(SMALL_CFG, mode="grid", grid_chunk=0)
+
+
+class TestGridSweep:
+    """The cross-k tentpole contract: padded-to-k_max grid results equal
+    the per-k batched results member-for-member (<= 1e-5), masked columns
+    are exact zeros, and the grid scheduler keeps the per-unit
+    resume/report behaviour at chunk granularity."""
+
+    # k_max = 5 with ks 2..5: 2, 3, 4 all fail to divide k_max — the
+    # "k_max-indivisible" grid the padding must handle
+    CFG = RescalkConfig(k_min=2, k_max=5, n_perturbations=3,
+                        rescal_iters=60, regress_iters=20, seed=3)
+
+    def _cells(self, cfg=None):
+        cfg = cfg or self.CFG
+        return [(k, q) for k in cfg.ks
+                for q in range(cfg.n_perturbations)]
+
+    def test_dense_matches_per_k_batched_1e5(self):
+        X = small_tensor()
+        g = run_sweep_batched(X, self._cells(), self.CFG)
+        gA, gR = np.asarray(g.A), np.asarray(g.R)
+        for k in self.CFG.ks:
+            b = run_ensemble(X, k, self.CFG, mode="batched")
+            rows = [i for i, (kk, _) in enumerate(self._cells())
+                    if kk == k]
+            np.testing.assert_allclose(np.asarray(g.errors)[rows],
+                                       b.errors, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(gA[rows][:, :, :k], b.A,
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(gR[rows][:, :, :k, :k], b.R,
+                                       rtol=1e-5, atol=1e-5)
+
+    def test_masked_columns_exactly_zero(self):
+        X = small_tensor()
+        g = run_sweep_batched(X, self._cells(), self.CFG)
+        gA, gR = np.asarray(g.A), np.asarray(g.R)
+        for i, (k, _) in enumerate(self._cells()):
+            assert (gA[i][:, k:] == 0.0).all()
+            assert (gR[i][:, k:, :] == 0.0).all()
+            assert (gR[i][:, :, k:] == 0.0).all()
+
+    def test_bcsr_matches_per_k_batched_1e5(self):
+        from repro.core import sparse as sp
+        s = sp.random_bcsr(jax.random.PRNGKey(0), m=2, n=40, bs=8,
+                           block_density=0.3)
+        g = run_sweep_batched(s, self._cells(), self.CFG)
+        gA = np.asarray(g.A)
+        for k in self.CFG.ks:
+            b = run_ensemble(s, k, self.CFG, mode="batched")
+            rows = [i for i, (kk, _) in enumerate(self._cells())
+                    if kk == k]
+            np.testing.assert_allclose(np.asarray(g.errors)[rows],
+                                       b.errors, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(gA[rows][:, :, :k], b.A,
+                                       rtol=1e-5, atol=1e-5)
+            assert (gA[rows][:, :, k:] == 0.0).all()
+
+    def test_grid_scheduler_matches_batched_scheduler(self):
+        """Full sweep through mode='grid' (ragged chunks) == mode='batched'
+        — same k_opt, same member errors, same medians."""
+        X = small_tensor()
+        res_g = SweepScheduler(self.CFG, mode="grid", grid_chunk=5).run(X)
+        res_b = SweepScheduler(self.CFG, mode="batched").run(X)
+        assert res_g.k_opt == res_b.k_opt
+        for k in self.CFG.ks:
+            np.testing.assert_allclose(res_g.per_k[k].member_errors,
+                                       res_b.per_k[k].member_errors,
+                                       rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(res_g.per_k[k].A_median,
+                                       res_b.per_k[k].A_median,
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_grid_interrupt_then_resume(self, tmp_path):
+        """Chunk-granular checkpoints keep the per-unit resume contract:
+        interrupted chunks are reused, not recomputed, and the resumed
+        result is identical to an uninterrupted run."""
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        with pytest.raises(SweepInterrupted) as ei:
+            SweepScheduler(self.CFG, mode="grid", grid_chunk=5,
+                           ckpt_dir=d, stop_after_units=1).run(X)
+        assert ei.value.executed == 1
+
+        executed = []
+        sched = SweepScheduler(
+            self.CFG, mode="grid", grid_chunk=5, ckpt_dir=d,
+            failure_injector=lambda u, a: executed.append(u.uid))
+        res = sched.run(X)
+        assert len(executed) == 2            # 3 chunks, 1 checkpointed
+        assert sched.report.n_reused == 1
+        fresh = SweepScheduler(self.CFG, mode="grid", grid_chunk=5).run(X)
+        assert res.k_opt == fresh.k_opt
+        for k in self.CFG.ks:
+            np.testing.assert_array_equal(res.per_k[k].member_errors,
+                                          fresh.per_k[k].member_errors)
+
+    def test_grid_report_records_chunks(self, tmp_path):
+        X = small_tensor()
+        path = str(tmp_path / "report.json")
+        sched = SweepScheduler(self.CFG, mode="grid", grid_chunk=5,
+                               report_path=path)
+        sched.run(X)
+        rep = SelectionReport.load(path)
+        assert rep.mode == "grid"
+        assert len(rep.units) == 3
+        assert all(u.k == -1 and u.members == [] for u in rep.units)
+        flat = [tuple(c) for u in rep.units for c in u.cells]
+        assert flat == self._cells()
+
+    def test_grid_nndsvd_rejected_early(self):
+        cfg = dataclasses.replace(self.CFG, init="nndsvd")
+        with pytest.raises(NotImplementedError, match="random"):
+            SweepScheduler(cfg, mode="grid")
+
+    def test_rechunked_sweep_reuses_coinciding_chunks(self, tmp_path):
+        """grid_chunk is not in the checkpoint fingerprint: chunk uids
+        encode their exact cell range, so a re-chunked resume reuses
+        chunks whose contents coincide and recomputes the rest."""
+        X = small_tensor()
+        d = str(tmp_path / "ckpt")
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=30, regress_iters=20, seed=1)
+        SweepScheduler(cfg, mode="grid", grid_chunk=2, ckpt_dir=d).run(X)
+        # same cells, same chunking -> full reuse
+        sched = SweepScheduler(cfg, mode="grid", grid_chunk=2, ckpt_dir=d)
+        sched.run(X)
+        assert sched.report.n_reused == 2
+        # different chunking -> different ranges, recomputed from scratch
+        sched = SweepScheduler(cfg, mode="grid", grid_chunk=3, ckpt_dir=d)
+        sched.run(X)
+        assert sched.report.n_reused == 0
 
 
 class TestManifestGuard:

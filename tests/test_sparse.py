@@ -57,6 +57,28 @@ class TestBCSR:
         e_d = float(rel_error(sp.to_dense(bcsr), st.A, st.R))
         assert abs(e_s - e_d) < 1e-3
 
+    def test_masked_sparse_mu_matches_unpadded(self, bcsr, key):
+        """Cross-k padding on the sparse step (ISSUE 4): padded active
+        block == unpadded, masked columns exactly zero."""
+        from repro.core.rescal import column_mask, pad_state
+        k, k_max = 4, 6
+        st = init_factors(key, bcsr.n, bcsr.m, k)
+        mask = column_mask(k, k_max, bcsr.data.dtype)
+        pad = pad_state(st, k_max)
+        A_ref, R_ref = st.A, st.R
+        A_pad, R_pad = pad.A, pad.R
+        for _ in range(5):
+            A_ref, R_ref = sp.sparse_mu_step(bcsr, A_ref, R_ref)
+            A_pad, R_pad = sp.masked_sparse_mu_step(bcsr, A_pad, R_pad,
+                                                    mask)
+        np.testing.assert_allclose(A_pad[:, :k], A_ref, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(R_pad[:, :k, :k], R_ref, rtol=1e-5,
+                                   atol=1e-6)
+        assert (np.asarray(A_pad)[:, k:] == 0.0).all()
+        assert (np.asarray(R_pad)[:, k:, :] == 0.0).all()
+        assert (np.asarray(R_pad)[:, :, k:] == 0.0).all()
+
 
 class TestEdgeCases:
     """Ingest edge cases (ISSUE 3): nnzb == 0 and n not divisible by bs."""
