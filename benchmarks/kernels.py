@@ -1,0 +1,125 @@
+"""Fused-vs-oracle sparse MU kernel benchmarks (ISSUE 5) —
+``BENCH_kernels.json``, gated by scripts/check_bench_gate.py.
+
+The sparse MU iteration is THE hot loop of the paper's exascale regime
+(O(m * delta * n^2 * k / p), §4.2/§6.3).  This module times one engine
+iteration (``dist.engine.get_mu_iter("bcsr", "batched")`` through
+``make_dist_step_sparse`` on a 1x1 mesh — the exact per-device program the
+sweep path runs) with the segment-sum oracle vs the fused single-pass
+form, varying nnzb (density + a zipf-skewed virtual pattern), bs and k:
+
+  oracle : spmm(X, A) sweep + AR einsum + spmm_t(X, AR) sweep — two passes
+           over the stored blocks and a gathered (m, nnzb, bs, k) AR
+           intermediate
+  fused  : ONE pass emits both X @ A and X^T @ A; the fresh R enters via
+           the thin (X^T A) R == X^T (A R) contraction afterwards
+
+Timed **interpret-free** on the jnp ref path (``fused_impl="ref"`` — the
+CPU execution path; interpret mode validates the kernel body in tests but
+its wall time means nothing).  The gate fails any case < 1.0x and warns
+< 1.2x.
+
+The "memory" section is the peak-intermediate accounting: what the oracle
+materializes in HBM per iteration ((m, nnzb, bs, k) product buffers for
+BOTH sweeps plus the gathered AR blocks) vs what the Pallas kernel keeps
+resident instead (two (nb, bs, k) VMEM output panels) — the eliminated
+bytes are the single biggest lever on the paper-faithful sparse regime.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.core import sparse as sp
+from repro.core.rescal import init_factors
+from repro.dist import compat
+from repro.dist.engine import DistRescalConfig, make_dist_step_sparse
+from repro.io.virtual import VirtualSpec, virtual_bcsr_shard
+
+from .common import Report, time_fn
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
+
+# (n, m, bs, block_density, k, skew) — vary nnzb (via density and the
+# zipf block-row skew), block size and rank around the sparse-sweep
+# operating point
+CASES = [
+    (2048, 4, 64, 0.08, 8, 0.0),
+    (1024, 8, 32, 0.10, 4, 0.0),
+    (2048, 4, 128, 0.10, 16, 0.0),
+    (4096, 2, 64, 0.05, 8, 0.0),
+    (2048, 4, 64, 0.08, 8, 1.2),    # power-law pattern (ROADMAP io item)
+]
+
+
+def _operand(key, n, m, bs, density, skew):
+    if skew:
+        spec = VirtualSpec(kind="bcsr", n=n, m=m, k=5, bs=bs,
+                          density=density, skew=skew)
+        return virtual_bcsr_shard(spec, 0, 0)
+    return sp.random_bcsr(key, m, n, bs=bs, block_density=density)
+
+
+def _accounting(s: sp.BCSR, k: int) -> dict:
+    """Per-iteration intermediate bytes: oracle HBM buffers vs the fused
+    kernel's VMEM-resident panels (analytic — shapes are exact)."""
+    item = s.data.dtype.itemsize
+    per_product = s.m * s.nnzb * s.bs * k * item   # (m, nnzb, bs, k)
+    return {
+        "oracle_product_bytes": 2 * per_product,   # spmm + spmm_t prods
+        "oracle_gathered_ar_bytes": per_product,   # spmm_t per-slice gather
+        "kernel_panel_bytes": 2 * s.nblocks * s.bs * k * item,
+        "eliminated_bytes": 3 * per_product,
+    }
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("kernels")
+    bench = {"mu_iteration": [], "memory": []}
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    key = jax.random.PRNGKey(0)
+
+    for n, m, bs, density, k, skew in CASES:
+        s = _operand(key, n, m, bs, density, skew)
+        st = init_factors(key, n, m, k)
+        data = s.data[None, None]
+        rows = s.block_rows[None, None]
+        cols = s.block_cols[None, None]
+        step_o = make_dist_step_sparse(
+            mesh, DistRescalConfig(), n=n, iters=1)
+        step_f = make_dist_step_sparse(
+            mesh, DistRescalConfig(use_fused_kernel=True, fused_impl="ref"),
+            n=n, iters=1)
+        t_o = time_fn(step_o, data, rows, cols, st.A, st.R,
+                      warmup=2, iters=5)
+        t_f = time_fn(step_f, data, rows, cols, st.A, st.R,
+                      warmup=2, iters=5)
+        speedup = t_o / t_f
+        acct = _accounting(s, k)
+        tag = f"n{n}m{m}bs{bs}k{k}" + (f"skew{skew:g}" if skew else "")
+        name = f"mu_iteration/{tag}"
+        report.add(name, seconds=t_f,
+                   oracle_s=round(t_o, 5), fused_s=round(t_f, 5),
+                   speedup=round(speedup, 2), nnzb=int(s.nnzb))
+        bench["mu_iteration"].append({
+            "name": name, "n": n, "m": m, "bs": bs, "k": k,
+            "density": density, "skew": skew, "nnzb": int(s.nnzb),
+            "oracle_seconds": t_o, "fused_seconds": t_f,
+            "speedup": speedup})
+        bench["memory"].append({
+            "name": f"memory/{tag}", "n": n, "m": m, "bs": bs, "k": k,
+            "nnzb": int(s.nnzb), **acct,
+            "eliminated_over_panel":
+                round(acct["eliminated_bytes"]
+                      / max(acct["kernel_panel_bytes"], 1), 1)})
+        report.add(f"memory/{tag}", **acct)
+
+    from repro.ckpt import atomic_json_dump
+    atomic_json_dump(BENCH_PATH, bench, indent=1, default=str)
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

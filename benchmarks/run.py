@@ -13,8 +13,9 @@ import argparse
 import sys
 import traceback
 
-from . import (clustering_bench, ingest, lm_step_bench, model_selection,
-               perf_iterations, roofline, scaling, sparse_bench)
+from . import (clustering_bench, ingest, kernels, lm_step_bench,
+               model_selection, perf_iterations, roofline, scaling,
+               sparse_bench)
 
 MODULES = {
     "model_selection": model_selection,   # paper Fig. 5 / SS6.2
@@ -22,6 +23,7 @@ MODULES = {
     "clustering": clustering_bench,       # paper Fig. 12
     "sparse": sparse_bench,               # paper Figs. 10 / 13b
     "ingest": ingest,                     # io layer + SS6.3 residency
+    "kernels": kernels,                   # fused-vs-oracle sparse MU (ISSUE 5)
     "roofline": roofline,                 # SSRoofline over dry-run cells
     "lm_step": lm_step_bench,             # framework regression numbers
     "perf": perf_iterations,              # SSPerf variant lowerings

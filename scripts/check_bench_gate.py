@@ -1,21 +1,25 @@
 #!/usr/bin/env python
-"""Soft regression gate on the recorded ensemble speedups.
+"""Soft regression gate on the recorded benchmark speedups.
 
-Reads the benchmark trajectory (BENCH_model_selection.json, written by
-``python -m benchmarks.run --only model_selection``) and grades every
-case's speedup in both gated sections:
+Reads the benchmark trajectories and grades every case's speedup in the
+gated sections:
 
-    "ensemble" — batched one-program members vs the sequential loop
-    "grid"     — the cross-k grid program vs per-k batched sweeps
-                 (ISSUE 4: one compile for the whole (k, q) grid)
+  BENCH_model_selection.json  (``benchmarks.run --only model_selection``)
+    "ensemble"     — batched one-program members vs the sequential loop
+    "grid"         — the cross-k grid program vs per-k batched sweeps
+                     (ISSUE 4: one compile for the whole (k, q) grid)
+  BENCH_kernels.json          (``benchmarks.run --only kernels``)
+    "mu_iteration" — the fused single-pass sparse MU iteration vs the
+                     spmm + spmm_t segment-sum oracle (ISSUE 5; timed
+                     interpret-free on the jnp ref path)
 
     speedup <  FAIL_BELOW (1.0x)  -> exit 1 (the fused program lost to
                                      its baseline: a regression)
     speedup <  WARN_BELOW (1.2x)  -> warn, exit 0 (drifting toward parity)
     otherwise                     -> OK
 
-The gate grades the checked-in artifact, so CI stays cheap; regenerating
-the artifact is what refreshes the trajectory (ROADMAP perf-gate item).
+The gate grades the checked-in artifacts, so CI stays cheap; regenerating
+an artifact is what refreshes its trajectory (ROADMAP perf-gate item).
 """
 from __future__ import annotations
 
@@ -26,10 +30,12 @@ FAIL_BELOW = 1.0
 WARN_BELOW = 1.2
 
 
-GATED_SECTIONS = ("ensemble", "grid")
+GATED_SECTIONS = ("ensemble", "grid", "mu_iteration")
+
+DEFAULT_PATHS = ("BENCH_model_selection.json", "BENCH_kernels.json")
 
 
-def main(path: str) -> int:
+def grade(path: str) -> tuple[int, list[str]]:
     with open(path) as f:
         bench = json.load(f)
     graded = 0
@@ -48,9 +54,18 @@ def main(path: str) -> int:
                       f"{WARN_BELOW:.1f}x")
             else:
                 print(f"[bench-gate] OK   {name}: speedup {s:.2f}x")
-    if not graded:
-        print(f"[bench-gate] no gated cases in {path}; nothing to gate")
-        return 0
+    return graded, failed
+
+
+def main(paths: list[str]) -> int:
+    graded = 0
+    failed: list[str] = []
+    for path in paths:
+        g, f = grade(path)
+        if not g:
+            print(f"[bench-gate] no gated cases in {path}; nothing to gate")
+        graded += g
+        failed += f
     if failed:
         print(f"[bench-gate] {len(failed)}/{graded} cases regressed "
               f"below {FAIL_BELOW:.1f}x: {failed}")
@@ -59,5 +74,4 @@ def main(path: str) -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main(sys.argv[1] if len(sys.argv) > 1
-                  else "BENCH_model_selection.json"))
+    sys.exit(main(sys.argv[1:] or list(DEFAULT_PATHS)))

@@ -81,9 +81,11 @@ grep -q "selected k_opt" "$SMOKE_DIR/ingest.log"
 grep -q "^\[io\]" "$SMOKE_DIR/ingest.log"
 echo "== ingest smoke OK =="
 
-echo "== perf gate: loop-vs-batched ensemble speedup =="
-# Soft regression gate on the recorded trajectory (BENCH_model_selection
-# .json, refreshed by `python -m benchmarks.run --only model_selection`):
-# any case < 1.0x fails, < 1.2x warns.
-python scripts/check_bench_gate.py BENCH_model_selection.json
+echo "== perf gate: ensemble, grid and fused-kernel speedups =="
+# Soft regression gate on the recorded trajectories (refreshed by
+# `python -m benchmarks.run --only model_selection` / `--only kernels`):
+# any case < 1.0x fails, < 1.2x warns.  BENCH_kernels.json carries the
+# fused-vs-oracle sparse MU iteration ratio (ISSUE 5).
+python scripts/check_bench_gate.py BENCH_model_selection.json \
+    BENCH_kernels.json
 echo "== perf gate OK =="

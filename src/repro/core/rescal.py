@@ -17,11 +17,12 @@ these pieces in shard_map with the paper's 2D-grid communication schedule.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.dist.compat import donating_jit
 
 EPS_DEFAULT = 1e-16
 
@@ -235,19 +236,31 @@ def reconstruct(A: jax.Array, R: jax.Array) -> jax.Array:
 # Single-device driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("iters", "schedule", "eps"))
-def _run_iters(X, state, iters: int, schedule: str, eps: float):
+def _run_iters_impl(X, state, iters: int, schedule: str, eps: float):
     step = MU_SCHEDULES[schedule]
     def body(_, s):
         return step(X, s, eps)
     return jax.lax.fori_loop(0, iters, body, state)
 
 
+# The incoming factor state is donated (dist.compat shim: only on backends
+# that implement aliasing, so CPU CI stays warning-clean): the MU block
+# rewrites (n, k) + (m, k, k) in place instead of holding input AND output
+# copies live.  Callers on accelerator backends must treat the passed
+# state as consumed.
+_run_iters = donating_jit(_run_iters_impl, donate_argnums=(1,),
+                          static_argnames=("iters", "schedule", "eps"))
+
+
 def rescal(X: jax.Array, k: int, *, key: jax.Array | None = None,
            iters: int = 200, schedule: str = "batched",
            eps: float = EPS_DEFAULT, init: RescalState | None = None,
            normalize_result: bool = True) -> tuple[RescalState, jax.Array]:
-    """Factorize X (m, n, n) at rank k.  Returns (state, rel_error)."""
+    """Factorize X (m, n, n) at rank k.  Returns (state, rel_error).
+
+    NOTE: a passed ``init`` is donated to the MU program on backends that
+    implement buffer aliasing (TPU/GPU) — treat it as consumed there and
+    pass a copy if you need it afterwards (no-op on CPU)."""
     m, n, _ = X.shape
     if init is None:
         if key is None:

@@ -177,13 +177,29 @@ def sqnorm(sp: BCSR) -> jax.Array:
 # Sparse MU step (local; mirrors rescal.mu_step_batched)
 # ---------------------------------------------------------------------------
 
+def sparse_products(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
+                    use_fused: bool = False, impl: str = "auto"):
+    """Both X-sided products (X @ B1, X^T @ B2) for shared (n, k) operands
+    — THE hot pair of every sparse MU iteration.  ``use_fused`` routes
+    through ``kernels.ops.bcsr_xa_xta`` (ONE pass over the stored blocks,
+    no (m, nnzb, bs, k) HBM intermediate; ``impl`` is the kernels/ops.py
+    dispatch: auto|pallas|interpret|ref); the default is the two-pass
+    segment-sum oracle."""
+    if use_fused:
+        from repro.kernels import ops                 # lazy: no cycle
+        return ops.bcsr_xa_xta(sp, B1, B2, impl=impl)
+    return spmm(sp, B1), spmm_t(sp, B2)
+
+
 def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
-                   eps: float = EPS_DEFAULT):
+                   eps: float = EPS_DEFAULT, *, use_fused: bool = False,
+                   impl: str = "auto"):
     """One batched MU iteration on a BCSR tensor.  Identical math to the
-    dense step; only the X products change."""
+    dense step; only the X products change — and with ``use_fused`` they
+    come from ONE pass over the stored blocks (kernels/bcsr_fused.py)
+    instead of the spmm + spmm_t double sweep."""
     G = A.T @ A
-    XA = spmm(sp, A)                                      # (m, n, k)
-    XTA = spmm_t(sp, A)                                   # (m, n, k)
+    XA, XTA = sparse_products(sp, A, A, use_fused=use_fused, impl=impl)
     ATXA = jnp.einsum("ia,mib->mab", A, XA)
     R = R * ATXA / (jnp.einsum("ab,mbc,cd->mad", G, R, G) + eps)
     num = (jnp.einsum("mia,msa->is", XA, R)
@@ -195,20 +211,33 @@ def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
 
 
 def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
-                          mask: jax.Array, eps: float = EPS_DEFAULT):
+                          mask: jax.Array, eps: float = EPS_DEFAULT, *,
+                          use_fused: bool = False, impl: str = "auto"):
     """One MU iteration on k_max-padded factors (the BCSR twin of
     rescal.masked_mu_step): same algebra, with the padded columns of A and
     rows/cols of R pinned to exact zero after the update.  Zeros are a
     fixed point of the multiplicative updates, so active columns match the
     unpadded ``sparse_mu_step`` exactly (see the cross-k block comment in
-    core/rescal.py)."""
-    A, R = sparse_mu_step(sp, A, R, eps)
+    core/rescal.py).  The fused kernel preserves the fixed point: zero
+    columns of A yield exact-zero panel columns (the panels are zeroed
+    before accumulation and the tile products are plain matmuls)."""
+    A, R = sparse_mu_step(sp, A, R, eps, use_fused=use_fused, impl=impl)
     return A * mask, R * (mask[:, None] * mask[None, :])
 
 
-def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array) -> jax.Array:
+def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array, *,
+                     use_fused: bool = False,
+                     impl: str = "auto") -> jax.Array:
+    """Relative error on a BCSR tensor.  Needs only the single X @ A
+    product, so the fused path routes it through the ``bcsr_spmm`` kernel
+    dispatch (one block sweep either way; the kernel removes the HBM
+    product intermediate)."""
     G = A.T @ A
-    XA = spmm(sp, A)
+    if use_fused:
+        from repro.kernels import ops                 # lazy: no cycle
+        XA = ops.bcsr_spmm(sp, A, impl=impl)
+    else:
+        XA = spmm(sp, A)
     ATXA = jnp.einsum("ia,mib->mab", A, XA)
     x2 = sqnorm(sp)
     cross = jnp.vdot(ATXA, R)

@@ -25,6 +25,7 @@ older releases.  Currently shimmed:
 from __future__ import annotations
 
 import contextlib
+import functools
 import logging
 import re
 from typing import Any, Sequence
@@ -38,9 +39,51 @@ __all__ = [
     "axis_types_kwargs",
     "capture_compiles",
     "cost_analysis_dict",
+    "donating_jit",
     "make_mesh",
     "tpu_compiler_params",
 ]
+
+# Backends where XLA implements input-output aliasing.  Donating on CPU
+# aliases nothing and just spews a "Donation is not implemented" warning
+# per call site, so the shim keeps donation off there.
+_DONATING_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def donating_jit(fun, *, donate_argnums: Sequence[int] = (),
+                 static_argnames: Sequence[str] = ()):
+    """``jax.jit`` with buffer donation on backends that implement it.
+
+    Buffer donation lets XLA alias an input buffer to an output (the MU
+    hot loops rewrite factor state in place — donating the incoming state
+    removes one live copy of (n, k) + (m, k, k) per program, which for
+    large-n sweeps is the steady-state HBM difference between fitting and
+    not).  Two things make this a compat concern rather than a plain
+    ``donate_argnums=``:
+
+      * CPU (and some older backends) do not implement aliasing — XLA
+        warns "Some donated buffers were not usable" / "Donation is not
+        implemented" on every call site.  The CI contract is that those
+        warnings stay CLEAN, so the shim resolves the backend lazily (at
+        first call, never at import) and only enables donation where it
+        works.
+      * callers must treat donated operands as consumed on accelerator
+        backends; the host path is unaffected.
+    """
+    plain = jax.jit(fun, static_argnames=static_argnames)
+    donating = None
+
+    @functools.wraps(fun)
+    def wrapper(*args, **kwargs):
+        nonlocal donating
+        if jax.default_backend() in _DONATING_BACKENDS:
+            if donating is None:
+                donating = jax.jit(fun, static_argnames=static_argnames,
+                                   donate_argnums=tuple(donate_argnums))
+            return donating(*args, **kwargs)
+        return plain(*args, **kwargs)
+
+    return wrapper
 
 # jax.sharding.AxisType (Auto/Explicit/Manual) does not exist on 0.4.x.
 AXIS_TYPE = getattr(jax.sharding, "AxisType", None)

@@ -18,14 +18,16 @@ dispatches on:
               loop, O(m) psums/iter).
 
 Fused-kernel path: ``cfg.use_fused_kernel`` routes the two X-sided products
-of each dense MU iteration through kernels/fused_bilinear (via ops.py
-dispatch) — one HBM pass of X emits both X @ A^(j) and X^T @ A^(i),
-halving the dominant memory-roofline term.  The engine exploits
-associativity, (X^T A) R == X^T (A R), so the single-pass products feed the
-exact reference update; ``cfg.fused_impl`` selects pallas / interpret /
+of each MU iteration through the single-X-pass kernels (via ops.py
+dispatch) — dense operands through kernels/fused_bilinear, BCSR operands
+through kernels/bcsr_fused — so one pass over the (stored blocks of) X
+emits both X @ A^(j) and X^T @ A^(i).  The engine exploits associativity,
+(X^T A) R == X^T (A R), so the single-pass products feed the exact
+reference update; on the sparse side this additionally eliminates the
+oracle's (m, nnzb, bs, k) gathered-AR intermediate (spmm_t with a
+per-slice operand).  ``cfg.fused_impl`` selects pallas / interpret /
 jnp-oracle execution (interpret validates the kernel body on CPU).  The
-reference einsum path remains the default and the fallback for sparse
-operands.
+reference segment-sum/einsum path remains the default.
 
 All module-level imports here stay inside repro.dist (jax + sharding);
 repro.core / repro.kernels are imported lazily inside factories so that
@@ -161,21 +163,41 @@ def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
 
 def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
     """Batched MU iteration on a local BCSR block (core/sparse.py).
-    Identical collective schedule to the dense batched iteration."""
-    from repro.core.sparse import spmm, spmm_t
+    Identical collective schedule to the dense batched iteration; with
+    ``cfg.use_fused_kernel`` the two X-sided products come from ONE pass
+    over the stored blocks (core.sparse.sparse_products — the same
+    dispatch the host sweep programs use — onto kernels/bcsr_fused.py),
+    with no second block sweep and no (m, nnzb, bs, k) gathered
+    intermediate."""
+    from repro.core.sparse import sparse_products, spmm, spmm_t
     cd = cfg.comm_jnp_dtype
     eps = cfg.eps
     Aj = diag_broadcast_row_to_col(Ai, cd)
     G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
-    XA = psum_cast(spmm(spl, Aj), COL_AXIS, cd)                  # line 5
+
+    if cfg.use_fused_kernel:
+        XA_loc, XTA_loc = sparse_products(spl, Aj, Ai, use_fused=True,
+                                          impl=cfg.fused_impl)
+        XA = psum_cast(XA_loc, COL_AXIS, cd)                     # line 5
+    else:
+        XA = psum_cast(spmm(spl, Aj), COL_AXIS, cd)              # line 5
+        XTA_loc = None
 
     ATXA = psum_cast(jnp.einsum("ia,mib->mab", Ai, XA), ROW_AXIS, cd)
     R = R * ATXA / (jnp.einsum("ab,mbc,cd->mad", G, R, G) + eps)
 
     XART = jnp.einsum("mia,msa->is", XA, R)
-    AR = jnp.einsum("ia,mab->mib", Ai, R)                        # (m, nr, k)
-    XTAR_m = spmm_t(spl, AR)                                     # (m, nr, k)
-    XTAR_j = psum_cast(XTAR_m.sum(axis=0), ROW_AXIS, cd)
+    if XTA_loc is not None:
+        # (X^T A) R == X^T (A R): the fused block pass already produced
+        # X^T A, so only a (k)-thin contraction with the fresh R remains —
+        # the stored blocks are not re-swept and the oracle's
+        # (m, nnzb, bs, k) gathered-AR intermediate never exists.
+        XTAR_j = psum_cast(jnp.einsum("mja,mab->jb", XTA_loc, R),
+                           ROW_AXIS, cd)
+    else:
+        AR = jnp.einsum("ia,mab->mib", Ai, R)                    # (m, nr, k)
+        XTAR_m = spmm_t(spl, AR)                                 # (m, nr, k)
+        XTAR_j = psum_cast(XTAR_m.sum(axis=0), ROW_AXIS, cd)
     XTAR = diag_broadcast_col_to_row(XTAR_j, cd)
     num = XART + XTAR
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
@@ -189,7 +211,7 @@ def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
     exabyte-tier n the batched schedule's (m, n/√p, k) dense intermediates
     are m x larger than one A shard and blow the 16 GiB HBM budget; slicing
     bounds them to one slice's worth."""
-    from repro.core.sparse import BCSR, spmm, spmm_t
+    from repro.core.sparse import BCSR, sparse_products, spmm, spmm_t
     cd = cfg.comm_jnp_dtype
     eps = cfg.eps
     k = Ai.shape[1]
@@ -203,13 +225,22 @@ def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
         sp_t = BCSR(data=data_t, block_rows=spl.block_rows,
                     block_cols=spl.block_cols, n=spl.n)
         Rt = jax.lax.dynamic_index_in_dim(R_acc, t, 0, keepdims=False)
-        XA = psum_cast(spmm(sp_t, Aj)[0], COL_AXIS, cd)
+        if cfg.use_fused_kernel:
+            XA_loc, XTA_loc = sparse_products(sp_t, Aj, Ai, use_fused=True,
+                                              impl=cfg.fused_impl)
+            XA = psum_cast(XA_loc[0], COL_AXIS, cd)
+        else:
+            XA = psum_cast(spmm(sp_t, Aj)[0], COL_AXIS, cd)
+            XTA_loc = None
         ATXA = psum_cast(Ai.T @ XA, ROW_AXIS, cd)
         Rt = Rt * ATXA / (G @ Rt @ G + eps)
         R_new = jax.lax.dynamic_update_index_in_dim(R_acc, Rt, t, 0)
         XART = XA @ Rt.T
-        AR = Ai @ Rt
-        XTAR_j = psum_cast(spmm_t(sp_t, AR[None])[0], ROW_AXIS, cd)
+        if XTA_loc is not None:
+            XTAR_j = psum_cast(XTA_loc[0] @ Rt, ROW_AXIS, cd)
+        else:
+            AR = Ai @ Rt
+            XTAR_j = psum_cast(spmm_t(sp_t, AR[None])[0], ROW_AXIS, cd)
         XTAR = diag_broadcast_col_to_row(XTAR_j, cd)
         num = num + XART + XTAR
         S = S + (Rt @ G @ Rt.T) + (Rt.T @ G @ Rt)

@@ -21,6 +21,17 @@ Spec strings (the ``rescalk_run --data`` syntax):
 
     virtual:dense:n=1024,m=4,k=5,grid=2,noise=0.01,seed=0
     virtual:bcsr:n=16384,m=4,k=5,bs=128,grid=1,density=0.02,seed=0
+    virtual:bcsr:n=16384,m=4,k=5,bs=128,density=0.02,skew=1.2,seed=0
+
+``skew=a`` (bcsr only) draws the stored-block pattern with zipf
+block-row weights w_r ∝ (r + 1)^-a instead of uniform density — the
+power-law degree distribution real knowledge graphs have (ROADMAP io
+item), so kernel and balancer benchmarks can stress the skewed regime.
+The weights are normalized to preserve the mean block density, the
+diagonal stays always-stored, and the pattern remains a pure function of
+(spec, i, j); skew=0 reproduces the uniform pattern bit-for-bit.  NOTE:
+a skewed identity-layout ShardedBCSR is intentionally IMbalanced — that
+is the point; re-partition through io.partition for balanced shards.
 """
 from __future__ import annotations
 
@@ -52,6 +63,7 @@ class VirtualSpec:
     bs: int = 128
     grid: int = 1              # g (square, matches the mesh)
     density: float = 0.02      # stored-block density (bcsr)
+    skew: float = 0.0          # zipf block-row exponent (bcsr; 0 = uniform)
     noise: float = 0.01
     seed: int = 0
     correlated: bool = False
@@ -60,6 +72,10 @@ class VirtualSpec:
     def __post_init__(self):
         if self.kind not in ("dense", "bcsr"):
             raise ValueError(f"unknown virtual kind {self.kind!r}")
+        if self.skew and self.kind != "bcsr":
+            raise ValueError("skew= applies to bcsr patterns only")
+        if self.skew < 0:
+            raise ValueError(f"skew must be >= 0, got {self.skew}")
         if self.kind == "bcsr":
             if self.n % (self.grid * self.bs):
                 raise ValueError(
@@ -95,6 +111,8 @@ class VirtualSpec:
         fields = [f"n={self.n}", f"m={self.m}", f"k={self.k}"]
         if self.kind == "bcsr":
             fields += [f"bs={self.bs}", f"density={self.density:g}"]
+            if self.skew:
+                fields.append(f"skew={self.skew:g}")
         fields += [f"grid={self.grid}", f"noise={self.noise:g}",
                    f"seed={self.seed}"]
         if self.correlated:
@@ -113,7 +131,8 @@ class VirtualSpec:
         kind = parts[1]
         kw: dict = {}
         casts = {"n": int, "m": int, "k": int, "bs": int, "grid": int,
-                 "seed": int, "density": float, "noise": float,
+                 "seed": int, "density": float, "skew": float,
+                 "noise": float,
                  "correlated": lambda v: bool(int(v)), "dtype": str}
         for item in filter(None, parts[2].split(",")):
             key, _, val = item.partition("=")
@@ -177,14 +196,24 @@ def virtual_dense_full(spec: VirtualSpec) -> jax.Array:
 @functools.lru_cache(maxsize=256)
 def _shard_pattern(spec: VirtualSpec, i: int, j: int) -> np.ndarray:
     """(nb_loc, nb_loc) bool stored-block pattern of shard (i, j) —
-    uniform density, diagonal blocks always stored (every entity keeps
-    support).  Deterministic in (spec, i, j); memoized because the
-    manifest (nnzb accounting), the stacking pass and the per-shard data
-    generation all consult the same pattern."""
+    uniform density (or zipf block-row skew, see module docstring),
+    diagonal blocks always stored (every entity keeps support).
+    Deterministic in (spec, i, j); memoized because the manifest (nnzb
+    accounting), the stacking pass and the per-shard data generation all
+    consult the same pattern."""
     _, _, kp, _ = spec._keys()
     kij = jax.random.fold_in(kp, i * spec.grid + j)
-    keep = np.array(jax.random.uniform(kij, (spec.nb_loc, spec.nb_loc))
-                    < spec.density)
+    draws = np.array(jax.random.uniform(kij, (spec.nb_loc, spec.nb_loc)))
+    if spec.skew:
+        # zipf weights over GLOBAL block rows, normalized to mean 1 so the
+        # expected block density stays `density`; per-row keep probability
+        # is clamped at 1 (very hot rows saturate, like real hub entities)
+        w = (np.arange(spec.nb) + 1.0) ** -spec.skew
+        w *= spec.nb / w.sum()
+        rows_w = w[i * spec.nb_loc:(i + 1) * spec.nb_loc]
+        keep = draws < np.minimum(spec.density * rows_w, 1.0)[:, None]
+    else:
+        keep = draws < spec.density
     if i == j:
         keep |= np.eye(spec.nb_loc, dtype=bool)
     return keep

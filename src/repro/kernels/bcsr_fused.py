@@ -1,0 +1,136 @@
+"""Fused BCSR bilinear Pallas kernel — single-X-pass sparse MU (ISSUE 5).
+
+Every sparse MU iteration needs BOTH X-sided products of the block-sparse
+adjacency tensor (core/sparse.py layout, paper §4.2):
+
+    XA_t  = X_t   @ B1        (B1 = A^(j), shared over the m slices)
+    XTB_t = X_t^T @ B2        (B2 = A^(i), shared — the (X^T A) R == X^T (A R)
+                               restructure keeps the per-slice R out of the
+                               X-sided product, exactly like the dense
+                               engine's fused path)
+
+The segment-sum oracle (`core.sparse.spmm` / `spmm_t`) makes two sweeps
+over the stored blocks and materializes an (m, nnzb, bs, k) product
+intermediate in HBM before each reduction.  X's stored blocks are by far
+the largest operand, so at sparse-RESCAL shapes the memory-roofline term
+is ~2 * bytes(stored blocks) + 2 * the intermediate; this kernel tiles
+each stored block through VMEM **once**, computes both (bs, k) tile
+products on the MXU, and accumulates them straight into two VMEM-resident
+(nb, bs, k) output panels — no HBM intermediate at all.
+
+Grid: (m, nnzb).  Per step (t, z):
+    data : (bs, bs)       stored block z of slice t
+    b1   : (bs, k)        row-block `cols[z]` of B1   (gathered via prefetch)
+    b2   : (bs, k)        row-block `rows[z]` of B2   (gathered via prefetch)
+    xa   : (nb, bs, k)    full output panel of slice t; row `rows[z]`
+                          accumulates data @ b1
+    xtb  : (nb, bs, k)    full output panel of slice t; row `cols[z]`
+                          accumulates data^T @ b2
+
+Both output windows are constant per t (revisits consecutive — the pallas
+pipelining requirement) and are zeroed at z == 0, which is what makes the
+empty-block-row guarantee *kernel-side*: rows that own no stored block
+come out exact zero, with no "every block-row stores >= 1 block"
+precondition (unlike kernels/bcsr_spmm.py, whose per-row output windows
+leave untouched rows undefined).  io.partition's front-padded ShardedBCSR
+shards (all-zero padding blocks at coordinates (0, 0)) and the masked
+cross-k step's zero-column fixed point therefore stay sound on this path.
+
+VMEM: the two resident panels cost 2 * nb * bs * k * itemsize; ops.py
+falls back to the jnp oracle when that exceeds the panel budget
+(panelizing the output like fused_bilinear's xtb window is a ROADMAP
+follow-on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.dist.compat import tpu_compiler_params
+
+from repro.core.sparse import BCSR
+
+
+def _kernel(rows_ref, cols_ref, data_ref, b1_ref, b2_ref, xa_ref, xtb_ref):
+    z = pl.program_id(1)
+
+    # new slice t: zero both resident panels BEFORE the first accumulate,
+    # so block-rows/cols with no stored block yield exact-zero output rows
+    @pl.when(z == 0)
+    def _():
+        xa_ref[0] = jnp.zeros_like(xa_ref[0])
+        xtb_ref[0] = jnp.zeros_like(xtb_ref[0])
+
+    blk = data_ref[0, 0]                               # (bs, bs), read ONCE
+    part_a = jnp.dot(blk, b1_ref[0],
+                     preferred_element_type=jnp.float32)
+    part_t = jnp.dot(blk.T, b2_ref[0],
+                     preferred_element_type=jnp.float32)
+
+    # leading dims indexed with ds(start, 1), not bare ints: integer
+    # indices in pl.load/store tuples are rejected by older pallas
+    idx_a = (pl.ds(0, 1), pl.ds(rows_ref[z], 1), slice(None), slice(None))
+    pl.store(xa_ref, idx_a, pl.load(xa_ref, idx_a)
+             + part_a[None, None].astype(xa_ref.dtype))
+    idx_t = (pl.ds(0, 1), pl.ds(cols_ref[z], 1), slice(None), slice(None))
+    pl.store(xtb_ref, idx_t, pl.load(xtb_ref, idx_t)
+             + part_t[None, None].astype(xtb_ref.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bcsr_xa_xta(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """sp: BCSR (m, nnzb, bs, bs), row-major-sorted blocks; B1, B2: (n, k)
+    -> (X @ B1 (m, n, k), X^T @ B2 (m, n, k)) in ONE pass over the blocks.
+
+    Edge cases live kernel-side (or in this wrapper, which is the kernel's
+    public face): an empty pattern short-circuits to zeros (a 0-sized grid
+    axis is invalid), block-rows/cols without stored blocks come out exact
+    zero (the panels are zeroed before accumulation), and a logical n the
+    block size does not divide is handled by zero-padding the operands'
+    entity axes and cropping the outputs (tail blocks are zero-masked by
+    construction, core/sparse.py)."""
+    m, nnzb, bs, _ = sp.data.shape
+    nb = sp.nblocks
+    k = B1.shape[1]
+    if nnzb == 0:
+        z = jnp.zeros((m, sp.n, k), B1.dtype)
+        return z, z
+    if nb * bs != sp.n:
+        pad = ((0, nb * bs - sp.n), (0, 0))
+        B1 = jnp.pad(B1, pad)
+        B2 = jnp.pad(B2, pad)
+    B1b = B1.reshape(nb, bs, k)
+    B2b = B2.reshape(nb, bs, k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(m, nnzb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs, bs), lambda t, z, rows, cols: (t, z, 0, 0)),
+            pl.BlockSpec((1, bs, k), lambda t, z, rows, cols: (cols[z], 0, 0)),
+            pl.BlockSpec((1, bs, k), lambda t, z, rows, cols: (rows[z], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nb, bs, k), lambda t, z, rows, cols: (t, 0, 0, 0)),
+            pl.BlockSpec((1, nb, bs, k), lambda t, z, rows, cols: (t, 0, 0, 0)),
+        ],
+    )
+    xa, xtb = pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nb, bs, k), B1.dtype),
+            jax.ShapeDtypeStruct((m, nb, bs, k), B2.dtype),
+        ],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+        name="bcsr_xa_xta",
+    )(sp.block_rows, sp.block_cols, sp.data, B1b, B2b)
+    return (xa.reshape(m, nb * bs, k)[:, :sp.n],
+            xtb.reshape(m, nb * bs, k)[:, :sp.n])

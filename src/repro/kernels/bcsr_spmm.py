@@ -9,14 +9,19 @@ scales with the number of *stored* blocks, recovering the paper's
 O(m * delta * n^2 * k) sparse bound on hardware that hates gather/scatter.
 
 Grid: (m, nnzb).  Per step (t, z):
-    data : (bs, bs)  stored block z of slice t
-    b    : (bs, k)   row-block `cols[z]` of B       (gathered via prefetch)
-    out  : (bs, k)   row-block `rows[z]` of out_t   (accumulated; rows are
-                     sorted so identical output windows are consecutive)
+    data : (bs, bs)     stored block z of slice t
+    b    : (bs, k)      row-block `cols[z]` of B    (gathered via prefetch)
+    out  : (nb, bs, k)  full output panel of slice t, zeroed at z == 0;
+                        row `rows[z]` accumulates the tile product
 
-Requirement: every block-row owns >= 1 stored block (guaranteed by the
-generators in core/sparse.py, which always store the diagonal) — otherwise
-untouched output rows would be left undefined.
+The panel-resident output (window constant per t, so revisits are
+consecutive) is what makes the empty-block-row guarantee KERNEL-side:
+block-rows that own no stored block come out exact zero, with no
+"every block-row stores >= 1 block" precondition — the soundness contract
+io.partition's front-padded shards rely on (ISSUE 5; the per-row
+(bs, k)-window variant this replaces left untouched rows undefined).
+VMEM: the panel costs nb * bs * k * itemsize; ops.py falls back to the
+jnp oracle past the panel budget.
 """
 from __future__ import annotations
 
@@ -34,20 +39,20 @@ from repro.core.sparse import BCSR
 
 def _kernel(rows_ref, cols_ref, data_ref, b_ref, out_ref):
     z = pl.program_id(1)
-    row = rows_ref[z]
-    prev_row = rows_ref[jnp.maximum(z - 1, 0)]
-    is_new = jnp.logical_or(z == 0, row != prev_row)
+
+    # new slice t: zero the resident panel BEFORE the first accumulate, so
+    # block-rows with no stored block yield exact-zero output rows
+    @pl.when(z == 0)
+    def _():
+        out_ref[0] = jnp.zeros_like(out_ref[0])
 
     part = jnp.dot(data_ref[0, 0], b_ref[0],
-                   preferred_element_type=jnp.float32).astype(out_ref.dtype)
-
-    @pl.when(is_new)
-    def _():
-        out_ref[0, 0] = part
-
-    @pl.when(jnp.logical_not(is_new))
-    def _():
-        out_ref[0, 0] += part
+                   preferred_element_type=jnp.float32)
+    # leading dims indexed with ds(start, 1), not bare ints: integer
+    # indices in pl.load/store tuples are rejected by older pallas
+    idx = (pl.ds(0, 1), pl.ds(rows_ref[z], 1), slice(None), slice(None))
+    pl.store(out_ref, idx, pl.load(out_ref, idx)
+             + part[None, None].astype(out_ref.dtype))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -79,7 +84,7 @@ def bcsr_spmm(sp: BCSR, B: jax.Array, *, interpret: bool = False
             pl.BlockSpec((1, bs, k), lambda t, z, rows, cols: (cols[z], 0, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, bs, k), lambda t, z, rows, cols: (t, rows[z], 0, 0)),
+            (1, nb, bs, k), lambda t, z, rows, cols: (t, 0, 0, 0)),
     )
     out = pl.pallas_call(
         _kernel,

@@ -21,6 +21,7 @@ from . import ref as _ref
 from .fused_bilinear import fused_xa_xtb as _fused_pallas
 from .mu_ratio import mu_update_a as _mu_pallas
 from .bcsr_spmm import bcsr_spmm as _bcsr_pallas
+from .bcsr_fused import bcsr_xa_xta as _bcsr_fused_pallas
 from .flash_attention import flash_attention as _flash_pallas
 
 VMEM_PANEL_BYTES = 4 * 1024 * 1024   # xtb window budget (pre double-buffer)
@@ -86,11 +87,32 @@ def mu_update_a(A, Num, S, eps: float = 1e-16, *, impl: str = "auto",
     return _mu_pallas(A, Num, S, eps, bm=bm, interpret=impl == "interpret")
 
 
+def _panel_overflow(sp: BCSR, k: int, dtype, n_panels: int) -> bool:
+    """True when the BCSR kernels' VMEM-resident (nb, bs, k) output
+    panel(s) exceed the panel budget (panelized outputs are a ROADMAP
+    follow-on; until then the jnp oracle takes over)."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return n_panels * sp.nblocks * sp.bs * k * itemsize > VMEM_PANEL_BYTES
+
+
 def bcsr_spmm(sp: BCSR, B, *, impl: str = "auto"):
     impl = _resolve(impl)
+    if impl == "pallas" and _panel_overflow(sp, B.shape[1], B.dtype, 1):
+        impl = "ref"
     if impl == "ref":
         return _ref.ref_bcsr_spmm(sp, B)
     return _bcsr_pallas(sp, B, interpret=impl == "interpret")
+
+
+def bcsr_xa_xta(sp: BCSR, B1, B2, *, impl: str = "auto"):
+    """One-pass (X @ B1, X^T @ B2) on a BCSR tensor, B1/B2 shared (n, k)
+    — the sparse twin of `fused_xa_xtb` (kernels/bcsr_fused.py)."""
+    impl = _resolve(impl)
+    if impl == "pallas" and _panel_overflow(sp, B1.shape[1], B1.dtype, 2):
+        impl = "ref"
+    if impl == "ref":
+        return _ref.ref_bcsr_xa_xta(sp, B1, B2)
+    return _bcsr_fused_pallas(sp, B1, B2, interpret=impl == "interpret")
 
 
 def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,

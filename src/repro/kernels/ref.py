@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse import BCSR, spmm as _spmm
+from repro.core.sparse import BCSR, _pad_rows, spmm as _spmm
 
 
 def ref_fused_xa_xtb(X: jax.Array, B1: jax.Array, B2: jax.Array):
@@ -17,6 +17,32 @@ def ref_fused_xa_xtb(X: jax.Array, B1: jax.Array, B2: jax.Array):
     XA = jnp.einsum("mij,jk->mik", X, B1)
     XTB = jnp.einsum("mij,mik->mjk", X, B2)
     return XA, XTB
+
+
+def ref_bcsr_xa_xta(sp: BCSR, B1: jax.Array, B2: jax.Array):
+    """(X @ B1, X^T @ B2) for shared (n, k) operands — the single-pass
+    contract of kernels/bcsr_fused.py expressed in jnp: both tile products
+    are formed from one read of the stored blocks and reduced by ONE
+    combined segment-sum (XA segments = block_rows, XTB segments =
+    block_cols offset by nb), instead of the two independent
+    spmm + spmm_t block sweeps."""
+    m, nnzb, bs, _ = sp.data.shape
+    nb = sp.nblocks
+    n_pad = nb * bs
+    k = B1.shape[1]
+    if nnzb == 0:
+        z = jnp.zeros((m, sp.n, k), B1.dtype)
+        return z, z
+    B1b = _pad_rows(B1, sp.n, n_pad).reshape(nb, bs, k)[sp.block_cols]
+    B2b = _pad_rows(B2, sp.n, n_pad).reshape(nb, bs, k)[sp.block_rows]
+    prod = jnp.concatenate(
+        [jnp.einsum("mzab,zbk->mzak", sp.data, B1b),
+         jnp.einsum("mzab,zak->mzbk", sp.data, B2b)], axis=1)
+    segs = jnp.concatenate([sp.block_rows, sp.block_cols + nb])
+    out = jax.ops.segment_sum(prod.swapaxes(0, 1), segs,
+                              num_segments=2 * nb)      # (2nb, m, bs, k)
+    out = out.transpose(1, 0, 2, 3).reshape(m, 2, n_pad, k)[:, :, :sp.n]
+    return out[:, 0], out[:, 1]
 
 
 def ref_mu_update_a(A: jax.Array, Num: jax.Array, S: jax.Array,

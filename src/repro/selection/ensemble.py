@@ -71,6 +71,7 @@ from repro.core.rescal import (EPS_DEFAULT, MU_SCHEDULES, RescalState,
                                column_mask, init_factors, masked_mu_step,
                                masked_normalize, normalize, pad_state,
                                rel_error)
+from repro.dist.compat import donating_jit
 
 
 class EnsembleResult(NamedTuple):
@@ -165,12 +166,23 @@ def _require_random_init(cfg, what: str):
             f"dense tensor; distributed/sparse NNDSVD is a ROADMAP item)")
 
 
-@functools.partial(jax.jit, static_argnames=("k", "iters", "delta", "eps"))
+def _fused_opts(cfg) -> dict:
+    """The sweep config's fused-kernel selection, duck-typed (older
+    RescalkConfig-shaped objects without the fields mean 'oracle')."""
+    return dict(use_fused=getattr(cfg, "use_fused_kernel", False),
+                impl=getattr(cfg, "fused_impl", "auto"))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "delta", "eps",
+                                             "use_fused", "impl"))
 def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
-                          eps: float):
+                          eps: float, use_fused: bool = False,
+                          impl: str = "auto"):
     """All members of one unit on a BCSR operand as one vmapped program.
     Same (pkey, fkey) split discipline as the dense program; the
-    perturbation draws noise for the stored blocks only."""
+    perturbation draws noise for the stored blocks only.  ``use_fused``
+    routes every MU iteration's X-sided products through the single-pass
+    kernels/bcsr_fused.py (ISSUE 5)."""
     from repro.core.sparse import (perturb_bcsr, sparse_mu_step,
                                    sparse_rel_error)
     n, m = sp.n, sp.m
@@ -181,11 +193,13 @@ def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
         st = init_factors(fkey, n, m, k, dtype=sp.data.dtype)
 
         def body(_, c):
-            return sparse_mu_step(sp_q, c[0], c[1], eps)
+            return sparse_mu_step(sp_q, c[0], c[1], eps,
+                                  use_fused=use_fused, impl=impl)
 
         A, R = jax.lax.fori_loop(0, iters, body, (st.A, st.R))
         st = normalize(RescalState(A=A, R=R, step=st.step))
-        return st.A, st.R, sparse_rel_error(sp, st.A, st.R)
+        return st.A, st.R, sparse_rel_error(sp, st.A, st.R,
+                                            use_fused=use_fused, impl=impl)
 
     return jax.vmap(one_member)(keys)
 
@@ -196,6 +210,7 @@ def _loop_members_bcsr(sp, keys, k: int, cfg) -> EnsembleResult:
     from repro.core.sparse import (perturb_bcsr, sparse_mu_step,
                                    sparse_rel_error)
     from repro.core.rescal import EPS_DEFAULT as eps
+    fused = _fused_opts(cfg)
     A_l, R_l, errs = [], [], []
     for mkey in keys:
         pkey, fkey = jax.random.split(mkey)
@@ -203,11 +218,11 @@ def _loop_members_bcsr(sp, keys, k: int, cfg) -> EnsembleResult:
         st = init_factors(fkey, sp.n, sp.m, k, dtype=sp.data.dtype)
         A, R = st.A, st.R
         for _ in range(cfg.rescal_iters):
-            A, R = sparse_mu_step(sp_q, A, R, eps)
+            A, R = sparse_mu_step(sp_q, A, R, eps, **fused)
         st = normalize(RescalState(A=A, R=R, step=st.step))
         A_l.append(st.A)
         R_l.append(st.R)
-        errs.append(sparse_rel_error(sp, st.A, st.R))
+        errs.append(sparse_rel_error(sp, st.A, st.R, **fused))
     return EnsembleResult(A=jnp.stack(A_l), R=jnp.stack(R_l),
                           errors=jnp.stack(errs))
 
@@ -292,7 +307,8 @@ def run_ensemble_bcsr_sharded_reference(sharded, k: int, cfg, *,
 def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
                             grid: int, schedule: str = "batched",
                             delta: float = 0.02, iters: int = 200,
-                            dtype=jnp.float32, key_ndim: int = 2):
+                            dtype=jnp.float32, key_ndim: int = 2,
+                            use_fused: bool = False, fused_impl: str = "auto"):
     """The BCSR twin of ``make_mesh_ensemble``: a jitted sharded program
     ``(data, rows, cols, keys, ids) -> (A_ens, R_ens, errs)`` over the
     stacked shard layout of ``io.partition.ShardedBCSR``.  Each device
@@ -324,7 +340,8 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
         raise ValueError(f"r_run={r_run} members are not divisible by "
                          f"pods={pods}")
 
-    dcfg = DistRescalConfig(schedule=schedule)
+    dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
+                            fused_impl=fused_impl)
     it = get_mu_iter("bcsr", schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     x_spec, i_spec, _, _ = sh.bcsr_specs()
@@ -370,7 +387,8 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
 def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                        schedule: str = "batched", delta: float = 0.02,
                        iters: int = 200, init: str = "random",
-                       dtype=jnp.float32, key_ndim: int = 2):
+                       dtype=jnp.float32, key_ndim: int = 2,
+                       use_fused: bool = False, fused_impl: str = "auto"):
     """Build the jitted sharded ensemble program ``(X, keys, ids) ->
     (A_ens, R_ens, errs)`` for `r_run` members on `mesh`.
 
@@ -404,7 +422,8 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                          f"pods={pods} (members shard evenly over the "
                          f"ensemble axis)")
 
-    dcfg = DistRescalConfig(schedule=schedule)
+    dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
+                            fused_impl=fused_impl)
     it = get_mu_iter("dense", schedule)
     specs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -477,15 +496,16 @@ def grid_init(cells, cfg, n: int, m: int, k_max: int, dtype):
             jnp.stack(A0), jnp.stack(R0))
 
 
-@functools.partial(jax.jit, static_argnames=("k_max", "iters", "schedule",
-                                             "delta", "eps"))
 def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
                   schedule: str, delta: float, eps: float):
     """A chunk of flattened (k, q) cells as one jitted program over a dense
     operand.  Same (pkey, fkey) discipline as ``_batched_members`` (the
     fkey was consumed host-side by ``grid_init``); masked columns stay
     exactly zero through update/normalize, and ``rel_error`` needs no mask
-    because zero columns contribute exactly zero to every contraction."""
+    because zero columns contribute exactly zero to every contraction.
+    The per-cell init factors A0/R0 are donated (dist.compat shim): they
+    are built fresh per chunk by ``grid_init`` and never reused, and at
+    (cells, n, k_max) they are the chunk's largest factor-sized buffers."""
     def one_cell(mkey, kv, A0u, R0u):
         mask = column_mask(kv, k_max, X.dtype)
         pkey, _ = jax.random.split(mkey)
@@ -502,12 +522,18 @@ def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
     return jax.vmap(one_cell)(keys, kvals, A0, R0)
 
 
-@functools.partial(jax.jit, static_argnames=("k_max", "iters", "delta",
-                                             "eps"))
+_grid_members = donating_jit(
+    _grid_members, donate_argnums=(3, 4),
+    static_argnames=("k_max", "iters", "schedule", "delta", "eps"))
+
+
 def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
-                       delta: float, eps: float):
+                       delta: float, eps: float, use_fused: bool = False,
+                       impl: str = "auto"):
     """The BCSR twin of ``_grid_members``: stored-block perturbation, masked
-    sparse MU, one program for the whole rank mix."""
+    sparse MU, one program for the whole rank mix.  ``use_fused`` swaps the
+    spmm + spmm_t double sweep for the single-pass kernel (the masked-zero
+    fixed point holds either way — see masked_sparse_mu_step)."""
     from repro.core.sparse import (masked_sparse_mu_step, perturb_bcsr,
                                    sparse_rel_error)
 
@@ -517,14 +543,24 @@ def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
         sp_q = perturb_bcsr(pkey, sp, delta)
 
         def body(_, c):
-            return masked_sparse_mu_step(sp_q, c[0], c[1], mask, eps)
+            return masked_sparse_mu_step(sp_q, c[0], c[1], mask, eps,
+                                         use_fused=use_fused, impl=impl)
 
         A, R = jax.lax.fori_loop(0, iters, body, (A0u, R0u))
         st = masked_normalize(
             RescalState(A=A, R=R, step=jnp.zeros((), jnp.int32)), mask)
-        return st.A, st.R, sparse_rel_error(sp, st.A, st.R)
+        return st.A, st.R, sparse_rel_error(sp, st.A, st.R,
+                                            use_fused=use_fused, impl=impl)
 
     return jax.vmap(one_cell)(keys, kvals, A0, R0)
+
+
+# the BCSR chunk program donates its per-cell init factors too (same
+# contract as _grid_members: grid_init builds them fresh per chunk)
+_grid_members_bcsr = donating_jit(
+    _grid_members_bcsr, donate_argnums=(3, 4),
+    static_argnames=("k_max", "iters", "delta", "eps", "use_fused",
+                     "impl"))
 
 
 @functools.lru_cache(maxsize=64)
@@ -532,7 +568,8 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
                             m: int, u_run: int, grid: int | None = None,
                             schedule: str = "batched", delta: float = 0.02,
                             iters: int = 200, dtype=jnp.float32,
-                            key_ndim: int = 2):
+                            key_ndim: int = 2, use_fused: bool = False,
+                            fused_impl: str = "auto"):
     """The cross-k grid program on the ("pod", "data", "model") mesh: one
     shard_map program whose flattened (k, q) cell axis rides the
     pod/`ENSEMBLE_AXIS`, built from the same ``dist.engine.get_mu_iter``
@@ -573,7 +610,8 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
     if n % gr or n % gc:
         raise ValueError(f"n={n} must divide the ({gr}, {gc}) grid")
 
-    dcfg = DistRescalConfig(schedule=schedule)
+    dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
+                            fused_impl=fused_impl)
     it = get_mu_iter(operand, schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -648,6 +686,9 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
     cells = tuple(cells)
     k_max = max(cfg.ks)
     _require_random_init(cfg, "the cross-k grid program")
+    fused = _fused_opts(cfg)
+    mesh_fused = dict(use_fused=fused["use_fused"],
+                      fused_impl=fused["impl"])
     sharded = X if _is_sharded_bcsr(X) else None
     if mesh is not None:
         ids = jnp.asarray([q for _, q in cells], dtype=jnp.int32)
@@ -660,7 +701,7 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
                 m=sharded.m, u_run=len(cells), grid=sharded.g,
                 schedule=cfg.schedule, delta=cfg.perturbation_delta,
                 iters=cfg.rescal_iters, dtype=sharded.data.dtype,
-                key_ndim=keys.ndim)
+                key_ndim=keys.ndim, **mesh_fused)
             A, R, errs = prog(sharded.data, sharded.rows, sharded.cols,
                               keys, kvals, ids, A0, R0)
             return EnsembleResult(A=A, R=R, errors=errs)
@@ -674,7 +715,8 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
         prog = make_mesh_grid_ensemble(
             mesh, operand="dense", k_max=k_max, n=n, m=m, u_run=len(cells),
             schedule=cfg.schedule, delta=cfg.perturbation_delta,
-            iters=cfg.rescal_iters, dtype=X.dtype, key_ndim=keys.ndim)
+            iters=cfg.rescal_iters, dtype=X.dtype, key_ndim=keys.ndim,
+            **mesh_fused)
         A, R, errs = prog(X, keys, kvals, ids, A0, R0)
         return EnsembleResult(A=A, R=R, errors=errs)
     if sharded is not None or isinstance(X, BCSR):
@@ -684,7 +726,7 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
                                         sp.data.dtype)
         A, R, errs = _grid_members_bcsr(
             sp, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
-            delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+            delta=cfg.perturbation_delta, eps=EPS_DEFAULT, **fused)
         return EnsembleResult(A=A, R=R, errors=errs)
     m, n, _ = X.shape
     keys, kvals, A0, R0 = grid_init(cells, cfg, n, m, k_max, X.dtype)
@@ -755,13 +797,16 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
                 f"batched sharded program (drop mesh= for the sequential "
                 f"loop)")
         ids = jnp.asarray(members, dtype=jnp.int32)
+        fused = _fused_opts(cfg)
+        mesh_fused = dict(use_fused=fused["use_fused"],
+                          fused_impl=fused["impl"])
         if sharded is not None:
             _require_random_init(cfg, "the BCSR mesh ensemble")
             prog = make_mesh_ensemble_bcsr(
                 mesh, k=k, n_pad=sharded.n_pad, m=sharded.m,
                 r_run=len(members), grid=sharded.g, schedule=cfg.schedule,
                 delta=cfg.perturbation_delta, iters=cfg.rescal_iters,
-                dtype=sharded.data.dtype, key_ndim=keys.ndim)
+                dtype=sharded.data.dtype, key_ndim=keys.ndim, **mesh_fused)
             A, R, errs = prog(sharded.data, sharded.rows, sharded.cols,
                               keys, ids)
             return EnsembleResult(A=A, R=R, errors=errs)
@@ -775,7 +820,7 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
             mesh, k=k, n=n, m=m, r_run=len(members),
             schedule=cfg.schedule, delta=cfg.perturbation_delta,
             iters=cfg.rescal_iters, init=cfg.init, dtype=X.dtype,
-            key_ndim=keys.ndim)
+            key_ndim=keys.ndim, **mesh_fused)
         A, R, errs = prog(X, keys, ids)
         return EnsembleResult(A=A, R=R, errors=errs)
     if sharded is not None or isinstance(X, BCSR):
@@ -786,7 +831,8 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
         if mode == "batched":
             A, R, errs = _batched_members_bcsr(
                 sp, keys, k=k, iters=cfg.rescal_iters,
-                delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+                delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
+                **_fused_opts(cfg))
             return EnsembleResult(A=A, R=R, errors=errs)
         if mode == "loop":
             return _loop_members_bcsr(sp, keys, k, cfg)

@@ -24,6 +24,11 @@ class RescalkConfig:
     schedule: str = "batched"          # "batched" | "sliced" (paper-faithful)
     seed: int = 0
     sil_threshold: float = 0.75        # stability bar for k selection
+    # single-X-pass kernels on the MU hot loop (kernels/fused_bilinear for
+    # dense operands, kernels/bcsr_fused for BCSR — ISSUE 5); fused_impl is
+    # the kernels/ops.py dispatch: auto | pallas | interpret | ref
+    use_fused_kernel: bool = False
+    fused_impl: str = "auto"
 
     @property
     def ks(self) -> list[int]:

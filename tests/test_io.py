@@ -1,5 +1,7 @@
 """repro.io: chunked triple ingest, vocab, streaming COO, manifests, and
 shard-local virtual generators."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -193,6 +195,60 @@ class TestVirtual:
             VirtualSpec(kind="bcsr", n=100, m=1, k=2, bs=16, grid=2)
         with pytest.raises(ValueError, match="grid"):
             VirtualSpec(kind="dense", n=33, m=1, k=2, grid=2)
+
+
+class TestVirtualSkew:
+    """zipf block-row skew (`skew=a`, ROADMAP io item): power-law virtual
+    patterns so kernel/balancer benchmarks stress realistic KG degree
+    distributions."""
+
+    SPEC = "virtual:bcsr:n=1024,m=2,k=3,bs=32,density=0.08,skew=1.3,seed=0"
+
+    def test_spec_parse_roundtrip_and_validation(self):
+        spec = VirtualSpec.parse(self.SPEC)
+        assert spec.skew == 1.3
+        assert "skew=1.3" in spec.spec_string()
+        assert spec == VirtualSpec.parse(spec.spec_string())
+        with pytest.raises(ValueError, match="bcsr"):
+            VirtualSpec(kind="dense", n=64, m=1, k=2, skew=1.0)
+        with pytest.raises(ValueError, match=">= 0"):
+            VirtualSpec(kind="bcsr", n=64, m=1, k=2, bs=16, skew=-0.5)
+
+    def test_skew_zero_reproduces_uniform_pattern(self):
+        from repro.io.virtual import _shard_pattern
+        spec = VirtualSpec.parse(self.SPEC)
+        uniform = VirtualSpec.parse(
+            self.SPEC.replace("skew=1.3,", ""))
+        assert dataclasses.replace(spec, skew=0.0) == uniform
+        np.testing.assert_array_equal(
+            _shard_pattern(dataclasses.replace(spec, skew=0.0), 0, 0),
+            _shard_pattern(uniform, 0, 0))
+
+    def test_skew_concentrates_head_block_rows(self):
+        from repro.io.virtual import _shard_pattern
+        spec = VirtualSpec.parse(self.SPEC)
+        keep = _shard_pattern(spec, 0, 0)
+        quarter = spec.nb // 4
+        head = keep[:quarter].sum() / quarter
+        tail = keep[-quarter:].sum() / quarter
+        assert head > 2 * tail, (head, tail)
+
+    def test_balancer_stays_within_1_5x_under_skew(self):
+        """The greedy block-slab balancer must hold <= 1.5x of ideal on
+        the skewed pattern (the contract the mesh sharding relies on)."""
+        from repro.io.partition import partition_coo
+        from repro.io.triples import COOBuilder
+        from repro.io.virtual import _shard_pattern
+        spec = VirtualSpec.parse(self.SPEC)
+        rows, cols = np.nonzero(_shard_pattern(spec, 0, 0))
+        # block-granular COO: one entry per stored block == nnzb weights
+        coo = COOBuilder().add(
+            np.zeros(len(rows), np.int64),
+            rows.astype(np.int64) * spec.bs,
+            cols.astype(np.int64) * spec.bs,
+            np.ones(len(rows), np.float32)).finalize(n=spec.n, m=1)
+        sharded = partition_coo(coo, bs=spec.bs, grid=2)
+        assert sharded.balance <= 1.5, sharded.balance
 
 
 class TestIngestToSweepOperand:

@@ -9,8 +9,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import sparse as sp
-from repro.kernels import (bcsr_spmm, flash_attention, fused_xa_xtb,
-                           mu_update_a, ref)
+from repro.kernels import (bcsr_spmm, bcsr_xa_xta, flash_attention,
+                           fused_xa_xtb, mu_update_a, ref)
 
 
 def tol(dtype):
@@ -66,6 +66,16 @@ class TestMuRatio:
                                    **tol(dtype))
 
 
+def _no_support_bcsr(key, m=2, bs=32, nb=4):
+    """A pattern with empty block-rows AND block-cols: blocks only at
+    (0, 2) and (2, 0) — block-row/col 1 and 3 own nothing.  The kernels
+    must emit exact-zero output rows there (the kernel-side guarantee
+    io.partition's front-padded shards rely on)."""
+    data = jax.random.uniform(key, (m, 2, bs, bs))
+    return sp.BCSR(data=data, block_rows=jnp.array([0, 2], jnp.int32),
+                   block_cols=jnp.array([2, 0], jnp.int32), n=nb * bs)
+
+
 class TestBcsrSpmm:
     @pytest.mark.parametrize("bs,density", [(64, 0.2), (128, 0.4)])
     def test_vs_ref(self, key, bs, density):
@@ -74,6 +84,100 @@ class TestBcsrSpmm:
         out = bcsr_spmm(s, B, impl="interpret")
         np.testing.assert_allclose(out, ref.ref_bcsr_spmm(s, B),
                                    rtol=2e-4, atol=2e-4)
+
+    def test_empty_block_rows_exact_zero(self, key):
+        """The panel-resident rewrite (ISSUE 5): block-rows without stored
+        blocks must come out exact zero, not undefined."""
+        s = _no_support_bcsr(key)
+        B = jax.random.uniform(key, (s.n, 8))
+        out = np.asarray(bcsr_spmm(s, B, impl="interpret"))
+        np.testing.assert_allclose(out, sp.spmm(s, B), rtol=1e-5, atol=1e-6)
+        assert (out[:, 32:64] == 0.0).all() and (out[:, 96:] == 0.0).all()
+
+
+class TestBcsrFused:
+    """kernels/bcsr_fused.py — the single-pass (X @ B1, X^T @ B2) contract
+    vs the two-pass segment-sum oracle, at <= 1e-5 (ISSUE 5)."""
+
+    @pytest.mark.parametrize("bs,density,k", [(32, 0.3, 8), (64, 0.2, 16),
+                                              (128, 0.4, 4)])
+    @pytest.mark.parametrize("impl", ["interpret", "ref"])
+    def test_vs_oracle(self, key, bs, density, k, impl):
+        s = sp.random_bcsr(key, m=3, n=4 * bs, bs=bs, block_density=density)
+        B1 = jax.random.uniform(jax.random.fold_in(key, 1), (s.n, k))
+        B2 = jax.random.uniform(jax.random.fold_in(key, 2), (s.n, k))
+        xa, xtb = bcsr_xa_xta(s, B1, B2, impl=impl)
+        np.testing.assert_allclose(xa, sp.spmm(s, B1), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(xtb, sp.spmm_t(s, B2), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_dense_reference_roundtrip(self, key):
+        """from_dense -> fused products == plain dense einsums."""
+        X = jnp.abs(jax.random.normal(key, (2, 128, 128)))
+        X = jnp.where(X > 1.0, X, 0.0)
+        s = sp.from_dense(X, bs=32)
+        B1 = jax.random.uniform(jax.random.fold_in(key, 1), (128, 8))
+        B2 = jax.random.uniform(jax.random.fold_in(key, 2), (128, 8))
+        xa, xtb = bcsr_xa_xta(s, B1, B2, impl="interpret")
+        np.testing.assert_allclose(xa, jnp.einsum("mij,jk->mik", X, B1),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(xtb, jnp.einsum("mji,jk->mik", X, B2),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("impl", ["interpret", "ref"])
+    def test_empty_pattern_is_zero(self, key, impl):
+        e = sp.BCSR(data=jnp.zeros((2, 0, 32, 32)),
+                    block_rows=jnp.zeros((0,), jnp.int32),
+                    block_cols=jnp.zeros((0,), jnp.int32), n=100)
+        B = jax.random.uniform(key, (100, 5))
+        xa, xtb = bcsr_xa_xta(e, B, B, impl=impl)
+        assert xa.shape == xtb.shape == (2, 100, 5)
+        assert float(jnp.abs(xa).max()) == 0.0
+        assert float(jnp.abs(xtb).max()) == 0.0
+
+    @pytest.mark.parametrize("impl", ["interpret", "ref"])
+    def test_empty_block_rows_exact_zero(self, key, impl):
+        """Rows/cols without stored blocks yield exact-zero output rows —
+        kernel-side, no every-row-has-support precondition."""
+        s = _no_support_bcsr(key)
+        B1 = jax.random.uniform(jax.random.fold_in(key, 1), (s.n, 4))
+        B2 = jax.random.uniform(jax.random.fold_in(key, 2), (s.n, 4))
+        xa, xtb = bcsr_xa_xta(s, B1, B2, impl=impl)
+        np.testing.assert_allclose(xa, sp.spmm(s, B1), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(xtb, sp.spmm_t(s, B2), rtol=1e-5,
+                                   atol=1e-6)
+        xa, xtb = np.asarray(xa), np.asarray(xtb)
+        for out in (xa, xtb):          # block-rows/cols 1 and 3 are empty
+            assert (out[:, 32:64] == 0.0).all()
+            assert (out[:, 96:] == 0.0).all()
+
+    @pytest.mark.parametrize("impl", ["interpret", "ref"])
+    def test_tail_blocks(self, key, impl):
+        """bs does not divide n: padded tails crop to exact logical
+        shapes and products match the oracle."""
+        s = sp.random_bcsr(key, m=2, n=70, bs=32, block_density=0.5)
+        B1 = jax.random.uniform(jax.random.fold_in(key, 1), (70, 4))
+        B2 = jax.random.uniform(jax.random.fold_in(key, 2), (70, 4))
+        xa, xtb = bcsr_xa_xta(s, B1, B2, impl=impl)
+        assert xa.shape == xtb.shape == (2, 70, 4)
+        np.testing.assert_allclose(xa, sp.spmm(s, B1), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(xtb, sp.spmm_t(s, B2), rtol=1e-5,
+                                   atol=1e-6)
+
+    def test_pallas_panel_overflow_falls_back(self, key, monkeypatch):
+        """Past the VMEM panel budget the compiled-pallas dispatch takes
+        the oracle path instead of blowing VMEM."""
+        import repro.kernels.ops as ops
+        s = sp.random_bcsr(key, m=2, n=128, bs=32, block_density=0.5)
+        B = jax.random.uniform(key, (s.n, 8))
+        monkeypatch.setattr(ops, "VMEM_PANEL_BYTES", 16)
+        calls = []
+        orig = ref.ref_bcsr_xa_xta
+        monkeypatch.setattr(ops._ref, "ref_bcsr_xa_xta",
+                            lambda *a: calls.append(a) or orig(*a))
+        xa, _ = ops.bcsr_xa_xta(s, B, B, impl="pallas")
+        assert calls, "overflow did not fall back to the ref oracle"
+        np.testing.assert_allclose(xa, sp.spmm(s, B), rtol=1e-5, atol=1e-6)
 
 
 class TestFlashAttention:

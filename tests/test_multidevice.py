@@ -16,7 +16,9 @@ CHECKS = [
     "selection_mesh_ensemble",
     "selection_mesh_ensemble_bcsr",
     "selection_grid_mesh",
+    "selection_mesh_ensemble_bcsr_fused",
     "fused_engine_matches_reference",
+    "fused_engine_matches_reference_bcsr",
     "sharded_train_matches_single",
     "sharded_decode_matches_single",
     "ef_psum",

@@ -216,6 +216,76 @@ class TestBCSREnsemble:
             run_ensemble(s, 3, self.CFG, mesh=object())
 
 
+class TestFusedSweep:
+    """cfg.use_fused_kernel on BCSR sweep programs (ISSUE 5): the fused
+    single-pass members must match the oracle members at <= 1e-5 with no
+    API change, in per-k batched, loop and cross-k grid modes."""
+
+    CFG = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                        rescal_iters=40, regress_iters=20, seed=3)
+
+    def small_bcsr(self, n=96, m=2, bs=16, seed=0):
+        from repro.core import sparse as sp
+        return sp.random_bcsr(jax.random.PRNGKey(seed), m=m, n=n, bs=bs,
+                              block_density=0.3)
+
+    @pytest.mark.parametrize("mode", ["batched", "loop"])
+    def test_per_k_members_match_oracle(self, mode):
+        s = self.small_bcsr()
+        cfg_f = dataclasses.replace(self.CFG, use_fused_kernel=True,
+                                    fused_impl="ref")
+        r_o = run_ensemble(s, 3, self.CFG, mode=mode)
+        r_f = run_ensemble(s, 3, cfg_f, mode=mode)
+        np.testing.assert_allclose(r_f.errors, r_o.errors, rtol=1e-5)
+        np.testing.assert_allclose(r_f.A, r_o.A, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(r_f.R, r_o.R, rtol=1e-5, atol=1e-7)
+
+    def test_grid_cells_match_oracle(self):
+        from repro.selection.ensemble import run_sweep_batched
+        s = self.small_bcsr()
+        cells = [(k, q) for k in self.CFG.ks for q in range(2)]
+        cfg_f = dataclasses.replace(self.CFG, use_fused_kernel=True,
+                                    fused_impl="ref")
+        g_o = run_sweep_batched(s, cells, self.CFG)
+        g_f = run_sweep_batched(s, cells, cfg_f)
+        np.testing.assert_allclose(g_f.errors, g_o.errors, rtol=1e-5)
+        np.testing.assert_allclose(g_f.A, g_o.A, rtol=1e-5, atol=1e-7)
+
+    def test_full_sweep_selects_same_k(self):
+        s = self.small_bcsr()
+        cfg_f = dataclasses.replace(self.CFG, use_fused_kernel=True,
+                                    fused_impl="ref")
+        r_o = SweepScheduler(self.CFG).run(s)
+        r_f = SweepScheduler(cfg_f).run(s)
+        assert r_f.k_opt == r_o.k_opt
+        for k in self.CFG.ks:
+            np.testing.assert_allclose(r_f.per_k[k].member_errors,
+                                       r_o.per_k[k].member_errors,
+                                       rtol=1e-5)
+
+
+class TestDonationClean:
+    """Buffer donation on the hot drivers (ISSUE 5 satellite): the
+    dist.compat shim enables donation only on backends that implement
+    aliasing, so the donating drivers must run with NO no-alias /
+    donation warnings — the contract CI asserts on CPU."""
+
+    def test_run_iters_and_grid_programs_warning_clean(self):
+        import warnings
+        from repro.core.rescal import _run_iters, init_factors
+        X = small_tensor()
+        st = init_factors(jax.random.PRNGKey(0), 24, 2, 3)
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=10, seed=0)
+        cells = [(k, q) for k in cfg.ks for q in range(2)]
+        from repro.selection.ensemble import run_sweep_batched
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")       # any warning -> failure
+            out = _run_iters(X, st, 5, "batched", 1e-16)
+            res = run_sweep_batched(X, cells, cfg)
+            jax.block_until_ready((out.A, res.A))
+
+
 class TestMaskedMU:
     """The cross-k padding primitives (ISSUE 4): masked columns stay
     exactly zero through update/normalize, and the active block matches

@@ -153,6 +153,79 @@ class TestEdgeCases:
         np.testing.assert_allclose(R_s, st_d.R, rtol=2e-4, atol=1e-5)
 
 
+class TestFusedSparseMU:
+    """The fused single-pass MU path (ISSUE 5): `use_fused=True` must
+    reproduce the segment-sum oracle at <= 1e-5, under both the jnp ref
+    dispatch and the actual Pallas kernel body (interpret, CPU CI)."""
+
+    @pytest.mark.parametrize("impl", ["ref", "interpret"])
+    def test_mu_step_matches_oracle(self, bcsr, key, impl):
+        st = init_factors(key, bcsr.n, bcsr.m, 4)
+        A_o, R_o = st.A, st.R
+        A_f, R_f = st.A, st.R
+        for _ in range(3):
+            A_o, R_o = sp.sparse_mu_step(bcsr, A_o, R_o)
+            A_f, R_f = sp.sparse_mu_step(bcsr, A_f, R_f, use_fused=True,
+                                         impl=impl)
+        np.testing.assert_allclose(A_f, A_o, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(R_f, R_o, rtol=1e-5, atol=1e-7)
+
+    @pytest.mark.parametrize("impl", ["ref", "interpret"])
+    def test_masked_step_matches_oracle(self, bcsr, key, impl):
+        """k_max-padded masked step on the fused path: active block equals
+        the unpadded oracle, masked columns stay exact zero (the fixed
+        point survives the kernel)."""
+        from repro.core.rescal import column_mask, pad_state
+        k, k_max = 4, 6
+        st = init_factors(key, bcsr.n, bcsr.m, k)
+        mask = column_mask(k, k_max, bcsr.data.dtype)
+        pad = pad_state(st, k_max)
+        A_ref, R_ref = st.A, st.R
+        A_pad, R_pad = pad.A, pad.R
+        for _ in range(3):
+            A_ref, R_ref = sp.sparse_mu_step(bcsr, A_ref, R_ref)
+            A_pad, R_pad = sp.masked_sparse_mu_step(
+                bcsr, A_pad, R_pad, mask, use_fused=True, impl=impl)
+        np.testing.assert_allclose(A_pad[:, :k], A_ref, rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(R_pad[:, :k, :k], R_ref, rtol=1e-5,
+                                   atol=1e-6)
+        assert (np.asarray(A_pad)[:, k:] == 0.0).all()
+        assert (np.asarray(R_pad)[:, k:, :] == 0.0).all()
+        assert (np.asarray(R_pad)[:, :, k:] == 0.0).all()
+
+    @pytest.mark.parametrize("impl", ["ref", "interpret"])
+    def test_rel_error_matches_oracle(self, bcsr, key, impl):
+        st = init_factors(key, bcsr.n, bcsr.m, 4)
+        e_o = float(sp.sparse_rel_error(bcsr, st.A, st.R))
+        e_f = float(sp.sparse_rel_error(bcsr, st.A, st.R, use_fused=True,
+                                        impl=impl))
+        np.testing.assert_allclose(e_f, e_o, rtol=1e-5)
+
+    def test_tail_blocks_fused(self, key):
+        """bs does not divide n on the fused path."""
+        s = sp.random_bcsr(key, m=2, n=70, bs=32, block_density=0.5)
+        st = init_factors(key, 70, 2, 3)
+        A_o, R_o = sp.sparse_mu_step(s, st.A, st.R)
+        A_f, R_f = sp.sparse_mu_step(s, st.A, st.R, use_fused=True,
+                                     impl="interpret")
+        np.testing.assert_allclose(A_f, A_o, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(R_f, R_o, rtol=1e-5, atol=1e-7)
+
+    def test_empty_pattern_fused(self, key):
+        """nnzb == 0 on the fused path: products are zero, the MU ratio
+        stays finite (eps), and parity with the oracle step holds."""
+        e = sp.BCSR(data=jnp.zeros((2, 0, 32, 32)),
+                    block_rows=jnp.zeros((0,), jnp.int32),
+                    block_cols=jnp.zeros((0,), jnp.int32), n=64)
+        st = init_factors(key, 64, 2, 3)
+        A_o, R_o = sp.sparse_mu_step(e, st.A, st.R)
+        A_f, R_f = sp.sparse_mu_step(e, st.A, st.R, use_fused=True,
+                                     impl="interpret")
+        np.testing.assert_allclose(A_f, A_o, rtol=1e-5, atol=1e-7)
+        np.testing.assert_allclose(R_f, R_o, rtol=1e-5, atol=1e-7)
+
+
 class TestSparseRegression:
     def test_sparse_regress_matches_dense(self, bcsr, key):
         from repro.core.regression import regress_R
