@@ -27,7 +27,6 @@ import numpy as np
 from repro.core import sparse as sp
 from repro.io import (VirtualSpec, ingest_tsv, manifest_of, partition_coo,
                       virtual_sharded_bcsr)
-from repro.io.triples import COOBuilder
 from repro.selection import (RescalkConfig, SweepScheduler, run_ensemble,
                              run_ensemble_bcsr_dense_reference)
 

@@ -12,7 +12,6 @@ projection the roofline table corroborates at p=256/512.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rescal import init_factors, mu_step_batched

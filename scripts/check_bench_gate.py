@@ -35,16 +35,38 @@ GATED_SECTIONS = ("ensemble", "grid", "mu_iteration")
 DEFAULT_PATHS = ("BENCH_model_selection.json", "BENCH_kernels.json")
 
 
+class GateError(Exception):
+    """A missing/malformed artifact — reported as one line, exit 2 (the
+    gate cannot grade), distinct from exit 1 (a graded regression)."""
+
+
 def grade(path: str) -> tuple[int, list[str]]:
-    with open(path) as f:
-        bench = json.load(f)
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except OSError as ex:
+        raise GateError(f"cannot read {path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise GateError(f"{path} is not valid JSON: {ex}")
+    if not isinstance(bench, dict):
+        raise GateError(f"{path}: expected a JSON object of sections, got "
+                        f"{type(bench).__name__}")
     graded = 0
     failed = []
     for section in GATED_SECTIONS:
-        for case in bench.get(section, []):
+        cases = bench.get(section, [])
+        if not isinstance(cases, list):
+            raise GateError(f"{path}: section {section!r} must be a list "
+                            f"of cases, got {type(cases).__name__}")
+        for case in cases:
             graded += 1
-            s = float(case["speedup"])
-            name = case["name"]
+            try:
+                s = float(case["speedup"])
+                name = case["name"]
+            except (TypeError, KeyError, ValueError):
+                raise GateError(f"{path}: malformed case in section "
+                                f"{section!r} (need 'name' + numeric "
+                                f"'speedup'): {case!r}")
             if s < FAIL_BELOW:
                 print(f"[bench-gate] FAIL {name}: speedup {s:.2f}x < "
                       f"{FAIL_BELOW:.1f}x")
@@ -61,7 +83,11 @@ def main(paths: list[str]) -> int:
     graded = 0
     failed: list[str] = []
     for path in paths:
-        g, f = grade(path)
+        try:
+            g, f = grade(path)
+        except GateError as ex:
+            print(f"[bench-gate] ERROR: {ex}")
+            return 2
         if not g:
             print(f"[bench-gate] no gated cases in {path}; nothing to gate")
         graded += g

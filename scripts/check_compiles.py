@@ -50,6 +50,12 @@ def small_tensor(n=24, m=2, k=3, seed=0):
 
 
 def main() -> int:
+    if os.environ.get("RESCAL_CHECK_COMPILES_SELFTEST"):
+        # CI exercises the guarded-exit path without waiting for a real
+        # breakage: any unexpected failure must be one line + exit 2,
+        # never a bare traceback
+        raise RuntimeError("selftest failure injected via "
+                           "RESCAL_CHECK_COMPILES_SELFTEST")
     X = small_tensor()
     # 3 candidate ranks (the acceptance scenario) with a chunk size that
     # does NOT divide the 3*2 = 6 grid cells: the worst legitimate case,
@@ -94,4 +100,10 @@ def main() -> int:
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    try:
+        sys.exit(main())
+    except SystemExit:
+        raise
+    except Exception as ex:  # guard rail: broken capture/sweep, not a count
+        print(f"[compile-guard] ERROR: {type(ex).__name__}: {ex}")
+        sys.exit(2)

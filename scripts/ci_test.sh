@@ -27,6 +27,17 @@ else
         python -m pytest -q -m "not slow"
 fi
 
+echo "== invariant lint: rescal_lint --strict over src =="
+python scripts/rescal_lint.py --strict src
+# conventional hygiene (pyflakes + isort via ruff) when the tool exists —
+# some runtime images ship without it; the dedicated lint CI job always has it
+if python -m ruff --version >/dev/null 2>&1; then
+    python -m ruff check .
+else
+    echo "(ruff not installed here; covered by the lint CI job)"
+fi
+echo "== lint OK =="
+
 echo "== rescalk_run scheduler smoke: interrupt + resume =="
 # First run "dies" after 1 computed unit (deterministic kill); the rerun
 # must reuse that unit's checkpoint instead of recomputing it, then finish
@@ -62,6 +73,57 @@ echo "== grid smoke OK =="
 echo "== compile-count guard: grid mode stays one program per chunk =="
 python scripts/check_compiles.py
 echo "== compile guard OK =="
+
+echo "== sanitizer smoke: corrupted factor caught, clean sweep unhurt =="
+# A deliberately-corrupted input must be caught INSIDE the compiled MU
+# program with a message naming the update site and the bad entries; the
+# same sweep on clean data with --sanitize on must still select a k.
+python - <<'PY'
+import jax, jax.numpy as jnp
+from repro.analysis.sanitizer import last_failure, reset_failures
+from repro.core.rescal import rescal
+from repro.data.synthetic import synthetic_rescal
+
+X, _, _ = synthetic_rescal(jax.random.PRNGKey(0), n=16, m=2, k=3)
+reset_failures()
+caught = ""
+try:
+    s, _ = rescal(X.at[0, 0, 0].set(jnp.nan), 3, key=jax.random.PRNGKey(1),
+                  iters=3, sanitize=True)
+    jax.block_until_ready(s.A)
+    jax.effects_barrier()
+except Exception as ex:          # XlaRuntimeError at the sync point
+    caught = str(ex)
+report = (last_failure() or "") + caught
+assert "non-finite" in report and "sanitizer" in report, report
+print("corruption caught:", (last_failure() or caught).splitlines()[0])
+PY
+python -m repro.launch.rescalk_run "${SMOKE_ARGS[@]}" --sanitize \
+    | tee "$SMOKE_DIR/sanitize.log"
+grep -q "selected k_opt" "$SMOKE_DIR/sanitize.log"
+echo "== sanitizer smoke OK =="
+
+echo "== artifact guards: missing/malformed inputs fail loud, not late =="
+# exit 2 = cannot grade (one-line reason), distinct from exit 1 = graded
+# regression; a guard that tracebacks or exits 0 here would let a broken
+# bench refresh slip through as "gate passed"
+if python scripts/check_bench_gate.py "$SMOKE_DIR/absent.json" \
+        > "$SMOKE_DIR/gate_missing.log" 2>&1; then
+    echo "bench gate accepted a missing artifact"; exit 1
+else test $? -eq 2; fi
+grep -q "\[bench-gate\] ERROR:" "$SMOKE_DIR/gate_missing.log"
+echo '{not json' > "$SMOKE_DIR/broken.json"
+if python scripts/check_bench_gate.py "$SMOKE_DIR/broken.json" \
+        > "$SMOKE_DIR/gate_broken.log" 2>&1; then
+    echo "bench gate accepted malformed JSON"; exit 1
+else test $? -eq 2; fi
+grep -q "\[bench-gate\] ERROR:" "$SMOKE_DIR/gate_broken.log"
+if RESCAL_CHECK_COMPILES_SELFTEST=1 python scripts/check_compiles.py \
+        > "$SMOKE_DIR/guard_selftest.log" 2>&1; then
+    echo "compile guard swallowed an injected failure"; exit 1
+else test $? -eq 2; fi
+grep -q "\[compile-guard\] ERROR:" "$SMOKE_DIR/guard_selftest.log"
+echo "== artifact guards OK =="
 
 echo "== ingest -> sweep smoke: tiny TSV -> BCSR -> one sweep unit =="
 # The repro.io path end to end: triple list -> vocab -> COO -> BCSR ->

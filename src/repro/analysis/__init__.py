@@ -1,0 +1,23 @@
+"""repro.analysis — repo-specific static analysis + runtime sanitizer.
+
+Two halves, deliberately decoupled:
+
+  * ``framework`` / ``rules`` — a pure-stdlib AST lint pass (no jax import,
+    so ``scripts/rescal_lint.py`` runs on any Python, including machines
+    without an accelerator stack).  Rules encode the invariants PRs 1-5
+    established by convention: compat isolation, PRNG key discipline, the
+    <=2-compiled-program grid contract, Pallas panel budgets, donation
+    safety, and sanitizer coverage of every MU step.
+  * ``sanitizer`` — a runtime numeric guard (finite / non-negative /
+    masked-columns-zero) built on ``jax.debug.callback``.  Off by default;
+    importing it pulls in jax, so it is *not* imported here.
+"""
+from .framework import (  # noqa: F401
+    Finding,
+    LintContext,
+    Rule,
+    SourceFile,
+    all_rules,
+    register,
+    run_lint,
+)

@@ -1,0 +1,311 @@
+"""Plugin AST-lint framework for rescal-lint.
+
+Pure stdlib by design: the linter must run anywhere (CI lint job, a
+laptop without jaxlib) in well under a second, so nothing in this module
+or in ``rules/`` may import jax, numpy, or repro runtime code.
+
+Concepts
+--------
+``Rule`` subclasses register themselves with :func:`register`; each rule
+implements ``check_file`` (per-file findings) and/or ``check_project``
+(cross-file findings — e.g. "this kernel's dispatcher lives in ops.py").
+:func:`run_lint` parses every ``.py`` under the given paths once, hands the
+shared :class:`LintContext` to every rule, then applies suppressions.
+
+Suppressions are trailing or preceding comments::
+
+    x = jax.random.normal(key, shape)  # rescal-lint: disable=key-discipline -- why
+
+    # rescal-lint: disable=recompile-hazard -- host-only helper, never traced
+    n = int(arr.max())
+
+    # rescal-lint: disable-file=pallas-kernel -- reference implementations
+
+A suppression without a ``-- justification`` tail is itself reported
+(rule ``suppression``): the repo policy is that every disable carries its
+reason inline.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding", "SourceFile", "LintContext", "Rule", "register",
+    "all_rules", "run_lint", "dotted", "resolve_alias",
+]
+
+ERROR = "error"
+WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str                       # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    severity: str = ERROR
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.severity}: "
+                f"[{self.rule}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+_DISABLE_RE = re.compile(
+    r"#\s*rescal-lint:\s*disable(?P<file>-file)?\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_,\- ]+?)"
+    r"(?:\s+--\s*(?P<why>\S.*))?\s*$")
+
+
+class SourceFile:
+    """One parsed module: AST, raw lines, and suppression tables."""
+
+    def __init__(self, path: Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        # line -> set of disabled rule names; "all" disables everything
+        self.line_disables: Dict[int, set] = {}
+        self.file_disables: set = set()
+        self.bad_suppressions: List[Tuple[int, str]] = []
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _DISABLE_RE.search(tok.string)
+                if not m:
+                    continue
+                row, col = tok.start
+                names = {r.strip() for r in m.group("rules").split(",")
+                         if r.strip()}
+                if not m.group("why"):
+                    self.bad_suppressions.append(
+                        (row, "suppression without a '-- justification' tail"))
+                if m.group("file"):
+                    self.file_disables |= names
+                    continue
+                # trailing comment guards its own line; a standalone comment
+                # guards the next code line (skipping blank/comment lines,
+                # so multi-line justifications stay adjacent)
+                trailing = self.lines[row - 1][:col].strip() != ""
+                target = row
+                if not trailing:
+                    target = row + 1
+                    while target <= len(self.lines):
+                        stripped = self.lines[target - 1].strip()
+                        if stripped and not stripped.startswith("#"):
+                            break
+                        target += 1
+                self.line_disables.setdefault(target, set()).update(names)
+        except tokenize.TokenError:
+            pass
+
+    def suppressed(self, finding: Finding) -> bool:
+        names = self.line_disables.get(finding.line, set()) | \
+            self.file_disables
+        return finding.rule in names or "all" in names
+
+
+class LintContext:
+    """Everything rules can see: all parsed files plus the scan root."""
+
+    def __init__(self, root: Path, files: Sequence[SourceFile]):
+        self.root = root
+        self.files = list(files)
+        self.by_rel = {f.rel: f for f in self.files}
+
+    def files_matching(self, fragment: str) -> List[SourceFile]:
+        return [f for f in self.files if fragment in f.rel]
+
+
+class Rule:
+    """Base class; subclasses set ``name`` and override the check hooks."""
+
+    name: str = ""
+    description: str = ""
+
+    def check_file(self, src: SourceFile,
+                   ctx: LintContext) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, ctx: LintContext) -> Iterable[Finding]:
+        return ()
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the global rule registry."""
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    _REGISTRY[rule.name] = rule
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    # import for side effect: rule modules self-register
+    from . import rules  # noqa: F401
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local name -> fully dotted module/object it refers to."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module and \
+                node.level == 0:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_alias(name: Optional[str], aliases: Dict[str, str]) -> str:
+    """Expand the first segment of a dotted name through the alias map."""
+    if not name:
+        return ""
+    head, _, rest = name.partition(".")
+    full = aliases.get(head, head)
+    return f"{full}.{rest}" if rest else full
+
+
+def attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._rescal_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_rescal_parent", None)
+
+
+# ---------------------------------------------------------------------------
+# driver
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]
+    files_checked: int
+    rules_run: List[str]
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == WARNING]
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "files_checked": self.files_checked,
+            "rules": self.rules_run,
+            "errors": len(self.errors),
+            "warnings": len(self.warnings),
+            "findings": [f.to_json() for f in self.findings],
+        }, indent=2)
+
+    def format_human(self) -> str:
+        lines = [f.format() for f in self.findings]
+        lines.append(f"rescal-lint: {self.files_checked} files, "
+                     f"{len(self.errors)} error(s), "
+                     f"{len(self.warnings)} warning(s)")
+        return "\n".join(lines)
+
+
+def _collect_py(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    # dedupe, keep order
+    seen, uniq = set(), []
+    for p in out:
+        rp = p.resolve()
+        if rp not in seen:
+            seen.add(rp)
+            uniq.append(p)
+    return uniq
+
+
+def run_lint(paths: Sequence[str | Path], *,
+             root: str | Path | None = None,
+             rules: Optional[Sequence[str]] = None) -> LintResult:
+    """Lint every .py under ``paths``; return suppression-filtered findings."""
+    paths = [Path(p) for p in paths]
+    root_path = Path(root) if root else Path.cwd()
+    registry = all_rules()
+    selected = {n: r for n, r in registry.items()
+                if rules is None or n in rules}
+
+    files: List[SourceFile] = []
+    findings: List[Finding] = []
+    for py in _collect_py(paths):
+        try:
+            rel = py.resolve().relative_to(root_path.resolve()).as_posix()
+        except ValueError:
+            rel = py.as_posix()
+        try:
+            files.append(SourceFile(py, rel, py.read_text()))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding("parse", rel,
+                                    getattr(e, "lineno", 1) or 1, 0,
+                                    f"could not parse: {e}", ERROR))
+
+    ctx = LintContext(root_path, files)
+    for src in files:
+        attach_parents(src.tree)
+        for line, why in src.bad_suppressions:
+            findings.append(Finding("suppression", src.rel, line, 0, why,
+                                    ERROR))
+    for name, rule in sorted(selected.items()):
+        for src in files:
+            findings.extend(rule.check_file(src, ctx))
+        findings.extend(rule.check_project(ctx))
+
+    kept = [f for f in findings
+            if f.path not in ctx.by_rel or
+            not ctx.by_rel[f.path].suppressed(f)]
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return LintResult(kept, len(files), sorted(selected))

@@ -1,0 +1,9 @@
+"""Rule modules self-register on import (see framework.register)."""
+from . import (  # noqa: F401
+    compat_isolation,
+    donation_safety,
+    key_discipline,
+    pallas_kernel,
+    recompile_hazard,
+    sanitizer_coverage,
+)

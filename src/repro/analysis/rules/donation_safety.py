@@ -1,0 +1,102 @@
+"""donation-safety: a donated buffer may not be read after the call.
+
+PR 4's grid programs donate their (A0, R0) init stacks via
+``donating_jit(..., donate_argnums=...)``; on TPU/GPU the donated buffer
+is invalidated and any later read returns garbage (or raises).  CPU test
+runs silently skip donation, so this bug class only fires in production
+— exactly what a static check is for.
+
+The rule records module-level ``NAME = donating_jit(fn, donate_argnums=
+(...))`` / ``NAME = jax.jit(fn, donate_argnums=...)`` bindings, then at
+every call of NAME flags a variable passed in a donated position that is
+read again later in the same function without being rebound first.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from ..framework import (
+    ERROR,
+    Finding,
+    Rule,
+    dotted,
+    import_aliases,
+    register,
+    resolve_alias,
+)
+
+DONATING_WRAPPERS_SUFFIXES = ("donating_jit",)
+JIT_NAMES = {"jax.jit"}
+
+
+def _donate_positions(call: ast.Call) -> Tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant) and
+                             isinstance(e.value, int))
+    return ()
+
+
+@register
+class DonationSafety(Rule):
+    name = "donation-safety"
+    description = "donated arguments must not be referenced after the call"
+
+    def check_file(self, src, ctx):
+        aliases = import_aliases(src.tree)
+        donators: Dict[str, Tuple[int, ...]] = {}
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name) and \
+                    isinstance(node.value, ast.Call):
+                full = resolve_alias(dotted(node.value.func), aliases)
+                if full.endswith(DONATING_WRAPPERS_SUFFIXES) or \
+                        full in JIT_NAMES:
+                    pos = _donate_positions(node.value)
+                    if pos:
+                        donators[node.targets[0].id] = pos
+        if not donators:
+            return
+        for fn in ast.walk(src.tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._check_function(fn, donators, src)
+
+    def _check_function(self, fn, donators, src):
+        # line-ordered scan: donation call -> later loads of the same name
+        donated_at: Dict[str, Tuple[int, str]] = {}
+        events: List[Tuple[int, int, str, str, ast.AST]] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id in donators:
+                for pos in donators[node.func.id]:
+                    if pos < len(node.args) and \
+                            isinstance(node.args[pos], ast.Name):
+                        events.append((node.lineno, node.col_offset,
+                                       "donate", node.args[pos].id, node))
+            elif isinstance(node, ast.Name):
+                kind = "load" if isinstance(node.ctx, ast.Load) else "store"
+                events.append((node.lineno, node.col_offset, kind,
+                               node.id, node))
+        events.sort(key=lambda e: (e[0], e[1]))
+        for line, col, kind, name, node in events:
+            if kind == "donate":
+                # key off the call's end line so the argument's own Name
+                # load inside a multi-line call is not self-flagged
+                donated_at[name] = (getattr(node, "end_lineno", line) or
+                                    line, "donated")
+            elif kind == "store":
+                donated_at.pop(name, None)
+            elif name in donated_at and line > donated_at[name][0]:
+                yield Finding(
+                    self.name, src.rel, line, col,
+                    f"'{name}' was donated at line {donated_at[name][0]} "
+                    f"and read again here — the buffer is invalidated on "
+                    f"TPU/GPU (CPU tests silently keep it alive)", ERROR)
+                donated_at.pop(name, None)

@@ -1,0 +1,377 @@
+"""key-discipline: a PRNG key is consumed at most once, via split/fold_in.
+
+Protects the member-key discipline from PRs 2-4: fold the slice index into
+the root key, split per-member keys, split each member key into
+(perturbation, factor) keys.  Reusing a key correlates draws that the
+perturbation ensemble assumes independent; a dead draw silently shifts
+every downstream stream when someone "fixes" it later.
+
+Per function scope the rule tracks
+  * scalar keys — parameters named like keys (``key``, ``fkey``,
+    ``*_key``) and variables assigned from ``PRNGKey``/``fold_in`` or a
+    tuple-unpacked ``split``
+  * key arrays — variables assigned from ``split(key, n)`` or the repo's
+    ensemble helpers (``member_keys``/``unit_keys``/``ensemble_keys``)
+
+and reports
+  * a scalar key consumed twice on non-mutually-exclusive paths (error)
+  * a scalar key bound outside a loop/comprehension but consumed inside
+    one (error — every iteration sees the same key)
+  * a factory-drawn scalar key never consumed (warning)
+  * ``split(key, n)`` arrays indexed only by constants with unused
+    indices — dead draws (warning)
+
+``x is None`` tests, ``.shape``/``.ndim``/``.dtype`` metadata reads and
+f-string interpolation do not count as consumption; if/else arms are
+mutually exclusive.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Tuple
+
+from ..framework import (
+    ERROR,
+    WARNING,
+    Finding,
+    Rule,
+    dotted,
+    import_aliases,
+    register,
+    resolve_alias,
+)
+
+SCALAR_FACTORIES = {"jax.random.PRNGKey", "jax.random.key",
+                    "jax.random.fold_in", "jax.random.wrap_key_data"}
+SPLIT_FACTORIES = {"jax.random.split"}
+ARRAY_HELPER_SUFFIXES = ("member_keys", "unit_keys", "ensemble_keys")
+SCALAR_PARAM_RE = re.compile(r"^(?:[a-z]*key|[a-z_]*_key)$")
+METADATA_ATTRS = {"ndim", "shape", "dtype", "size"}
+
+
+class _Gen:
+    """One generation of a key variable (rebinding starts a new one)."""
+
+    __slots__ = ("name", "kind", "line", "loops", "from_factory", "open",
+                 "consumptions", "index_uses", "bulk_use", "split_n")
+
+    def __init__(self, name: str, kind: str, line: int, loops: tuple,
+                 from_factory: bool, split_n: Optional[int] = None):
+        self.name = name
+        self.kind = kind                 # "scalar" | "array"
+        self.line = line
+        self.loops = loops               # loop-id stack at bind time
+        self.from_factory = from_factory
+        self.open = True
+        self.consumptions: List[Tuple[int, int, tuple, tuple]] = []
+        self.index_uses: set = set()
+        self.bulk_use = False
+        self.split_n = split_n
+
+
+def _exclusive(p1: tuple, p2: tuple) -> bool:
+    """True when two branch paths are on different arms of a shared fork."""
+    for a, b in zip(p1, p2):
+        if a[:2] == b[:2] and a[2] != b[2]:
+            return True
+        if a != b:
+            return False
+    return False
+
+
+class _FuncScope:
+    def __init__(self, fn: ast.FunctionDef, aliases: Dict[str, str],
+                 rel: str, rule_name: str):
+        self.fn = fn
+        self.aliases = aliases
+        self.rel = rel
+        self.rule = rule_name
+        self.findings: List[Finding] = []
+        self.gens: Dict[str, _Gen] = {}
+        self.closed: List[_Gen] = []
+
+    # -- entry ------------------------------------------------------------
+
+    def run(self) -> List[Finding]:
+        a = self.fn.args
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+            if SCALAR_PARAM_RE.match(arg.arg) and not \
+                    arg.arg.startswith("_"):
+                self.gens[arg.arg] = _Gen(arg.arg, "scalar", self.fn.lineno,
+                                          (), from_factory=False)
+        self._stmts(self.fn.body, path=(), loops=())
+        for g in list(self.gens.values()) + self.closed:
+            self._finalize(g)
+        return self.findings
+
+    def _finalize(self, g: _Gen) -> None:
+        if g.kind == "scalar":
+            if g.from_factory and g.open and not g.consumptions:
+                self.findings.append(Finding(
+                    self.rule, self.rel, g.line, 0,
+                    f"key '{g.name}' is drawn but never consumed "
+                    f"(dead draw — fold it in or delete it)", WARNING))
+            return
+        if g.bulk_use or not g.from_factory or g.split_n is None:
+            return
+        if not g.index_uses:
+            self.findings.append(Finding(
+                self.rule, self.rel, g.line, 0,
+                f"key array '{g.name}' = split(..., {g.split_n}) is never "
+                f"consumed", WARNING))
+            return
+        used = {i % g.split_n for i in g.index_uses
+                if -g.split_n <= i < g.split_n}
+        missing = sorted(set(range(g.split_n)) - used)
+        if missing:
+            self.findings.append(Finding(
+                self.rule, self.rel, g.line, 0,
+                f"'{g.name}' = split(..., {g.split_n}) draws "
+                f"{g.split_n} keys but index(es) {missing} are never "
+                f"consumed — dead draws; split exactly what is used",
+                WARNING))
+
+    # -- statement walk ---------------------------------------------------
+
+    def _stmts(self, body, path, loops) -> None:
+        for i, stmt in enumerate(body):
+            # `if c: ... return` makes the rest of the block the implicit
+            # else arm — consumptions across it are mutually exclusive
+            if isinstance(stmt, ast.If) and not stmt.orelse and \
+                    _terminates(stmt.body):
+                self._expr(stmt.test, path, loops)
+                self._stmts(stmt.body,
+                            path + (("if", id(stmt), "then"),), loops)
+                self._stmts(body[i + 1:],
+                            path + (("if", id(stmt), "else"),), loops)
+                return
+            self._stmt(stmt, path, loops)
+
+    def _stmt(self, stmt, path, loops) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            rebound = _bound_names(stmt)
+            inner = path + (("def", id(stmt), "body"),)
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load) and \
+                        node.id in self.gens and node.id not in rebound:
+                    self._use(node, inner, loops)
+            return
+        if isinstance(stmt, ast.If):
+            self._expr(stmt.test, path, loops)
+            self._stmts(stmt.body, path + (("if", id(stmt), "then"),), loops)
+            self._stmts(stmt.orelse, path + (("if", id(stmt), "else"),),
+                        loops)
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._expr(stmt.iter, path, loops)
+            inner = loops + (id(stmt),)
+            self._bind_target(stmt.target, stmt.iter, path, inner)
+            self._stmts(stmt.body, path, inner)
+            self._stmts(stmt.orelse, path, loops)
+            return
+        if isinstance(stmt, ast.While):
+            inner = loops + (id(stmt),)
+            self._expr(stmt.test, path, inner)
+            self._stmts(stmt.body, path, inner)
+            self._stmts(stmt.orelse, path, loops)
+            return
+        if isinstance(stmt, ast.Try):
+            self._stmts(stmt.body, path + (("try", id(stmt), "body"),),
+                        loops)
+            for h in stmt.handlers:
+                self._stmts(h.body, path + (("try", id(stmt), "except"),),
+                            loops)
+            self._stmts(stmt.orelse, path + (("try", id(stmt), "body"),),
+                        loops)
+            self._stmts(stmt.finalbody, path, loops)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._expr(item.context_expr, path, loops)
+            self._stmts(stmt.body, path, loops)
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = stmt.value
+            if value is not None:
+                self._expr(value, path, loops)
+            targets = stmt.targets if isinstance(stmt, ast.Assign) else \
+                [stmt.target]
+            for t in targets:
+                self._bind_target(t, value, path, loops)
+            return
+        # fall-through: scan every expression in the statement
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.expr):
+                self._expr(node, path, loops)
+
+    # -- binding ----------------------------------------------------------
+
+    def _bind_target(self, target, value, path, loops) -> None:
+        if isinstance(target, ast.Name):
+            gen = self._classify_value(target.id, value, loops)
+            self._rebind(target.id, gen)
+        elif isinstance(target, (ast.Tuple, ast.List)) and value is not None:
+            full = resolve_alias(dotted(getattr(value, "func", None)),
+                                 self.aliases) \
+                if isinstance(value, ast.Call) else ""
+            is_split = full in SPLIT_FACTORIES
+            for elt in target.elts:
+                if isinstance(elt, ast.Name):
+                    if is_split and not elt.id.startswith("_"):
+                        self._rebind(elt.id, _Gen(elt.id, "scalar",
+                                                  elt.lineno, loops,
+                                                  from_factory=True))
+                    else:
+                        self._rebind(elt.id, None)
+
+    def _classify_value(self, name: str, value, loops) -> Optional[_Gen]:
+        if not isinstance(value, ast.Call):
+            return None
+        full = resolve_alias(dotted(value.func), self.aliases)
+        if full in SCALAR_FACTORIES:
+            return _Gen(name, "scalar", value.lineno, loops,
+                        from_factory=True)
+        if full in SPLIT_FACTORIES:
+            n = None
+            if len(value.args) >= 2 and \
+                    isinstance(value.args[1], ast.Constant) and \
+                    isinstance(value.args[1].value, int):
+                n = value.args[1].value
+            elif len(value.args) == 1 and not value.keywords:
+                n = 2
+            return _Gen(name, "array", value.lineno, loops,
+                        from_factory=True, split_n=n)
+        if full.endswith(ARRAY_HELPER_SUFFIXES):
+            return _Gen(name, "array", value.lineno, loops,
+                        from_factory=True, split_n=None)
+        return None
+
+    def _rebind(self, name: str, gen: Optional[_Gen]) -> None:
+        old = self.gens.pop(name, None)
+        if old is not None:
+            old.open = False
+            self.closed.append(old)
+        if gen is not None and not name.startswith("_"):
+            self.gens[name] = gen
+
+    # -- uses -------------------------------------------------------------
+
+    def _expr(self, node, path, loops) -> None:
+        comp_types = (ast.ListComp, ast.SetComp, ast.DictComp,
+                      ast.GeneratorExp)
+        if isinstance(node, comp_types):
+            inner = loops + (id(node),)
+            for gen in node.generators:
+                self._expr(gen.iter, path, loops)
+                for cond in gen.ifs:
+                    self._expr(cond, path, inner)
+            if isinstance(node, ast.DictComp):
+                self._expr(node.key, path, inner)
+                self._expr(node.value, path, inner)
+            else:
+                self._expr(node.elt, path, inner)
+            return
+        if isinstance(node, ast.Lambda):
+            rebound = {a.arg for a in node.args.args}
+            for sub in ast.walk(node.body):
+                if isinstance(sub, ast.Name) and \
+                        isinstance(sub.ctx, ast.Load) and \
+                        sub.id in self.gens and sub.id not in rebound:
+                    self._use(sub, path + (("def", id(node), "body"),),
+                              loops)
+            return
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                and node.id in self.gens:
+            self._use(node, path, loops)
+            return
+        # descend through every child (including ast.keyword wrappers,
+        # whose .value holds keyword-argument expressions)
+        for child in ast.iter_child_nodes(node):
+            self._expr(child, path, loops)
+
+    def _use(self, node: ast.Name, path, loops) -> None:
+        from ..framework import parent
+        gen = self.gens[node.id]
+        p = parent(node)
+        if isinstance(p, ast.Compare) and len(p.comparators) == 1 and \
+                any(isinstance(c, ast.Constant) and c.value is None
+                    for c in p.comparators):
+            return
+        if isinstance(p, ast.Attribute) and p.attr in METADATA_ATTRS:
+            return
+        q = p
+        while q is not None and isinstance(q, ast.expr):
+            if isinstance(q, ast.FormattedValue):
+                return                     # f-string interpolation: a print
+            q = parent(q)
+        if isinstance(p, ast.Subscript) and p.value is node:
+            if gen.kind == "array":
+                idx = p.slice
+                if isinstance(idx, ast.Constant) and \
+                        isinstance(idx.value, int):
+                    gen.index_uses.add(idx.value)
+                else:
+                    gen.bulk_use = True
+                return
+            # scalar key subscripted — odd, count as consumption
+        if gen.kind == "array":
+            gen.bulk_use = True
+            return
+        self._consume(gen, node, path, loops)
+
+    def _consume(self, gen: _Gen, node: ast.Name, path, loops) -> None:
+        if len(loops) > len(gen.loops) and \
+                loops[:len(gen.loops)] == gen.loops:
+            self.findings.append(Finding(
+                self.rule, self.rel, node.lineno, node.col_offset,
+                f"key '{gen.name}' (bound at line {gen.line}) is consumed "
+                f"inside a loop — every iteration sees the same key; "
+                f"fold_in the loop index instead", ERROR))
+            return
+        for line, col, ppath, _ in gen.consumptions:
+            if not _exclusive(ppath, path):
+                self.findings.append(Finding(
+                    self.rule, self.rel, node.lineno, node.col_offset,
+                    f"key '{gen.name}' is consumed twice (previous use at "
+                    f"line {line}) — split or fold_in to derive fresh "
+                    f"keys", ERROR))
+                break
+        gen.consumptions.append((node.lineno, node.col_offset, path, loops))
+
+
+def _terminates(body) -> bool:
+    return bool(body) and isinstance(body[-1], (ast.Return, ast.Raise,
+                                                ast.Continue, ast.Break))
+
+
+def _bound_names(fn) -> set:
+    a = fn.args
+    names = {arg.arg for arg in
+             a.posonlyargs + a.args + a.kwonlyargs}
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and \
+                isinstance(node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+    return names
+
+
+@register
+class KeyDiscipline(Rule):
+    name = "key-discipline"
+    description = ("jax.random keys are consumed once and flow through "
+                   "split/fold_in")
+
+    def check_file(self, src, ctx):
+        aliases = import_aliases(src.tree)
+        # outermost function scopes only; nested defs are handled as
+        # closures by their parent scope AND as scopes of their own
+        for node in ast.walk(src.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from _FuncScope(node, aliases, src.rel,
+                                      self.name).run()

@@ -1,0 +1,282 @@
+"""pallas-kernel: panel budgets, index idiom, compiler-params routing.
+
+Applies to any module importing ``jax.experimental.pallas``.  Three checks:
+
+  * **int-index loads** — every element of a ``pl.load``/``pl.store``
+    index tuple must be ``pl.ds(...)``/``pl.dslice(...)`` or
+    ``slice(...)``; bare ints/expressions are rejected by older pallas
+    lowerings (the exact pattern that bit PR 1's first kernel)
+  * **resident-panel budget** — a kernel whose out BlockSpec index_map
+    ignores one or more grid axes keeps that output panel resident in
+    VMEM across the ignored axes (it accumulates).  Such a kernel must be
+    dispatched behind a static VMEM budget check (a caller referencing
+    ``_panel_overflow`` / ``VMEM_PANEL_BYTES``, with a ref fallback —
+    the PR 5 contract in kernels/ops.py)
+  * **compiler-params routing** — ``pallas_call`` should pass
+    ``compiler_params=tpu_compiler_params(...)`` (the dist/compat shim),
+    never a raw version-dependent params class, so kernels stay runnable
+    across the CI JAX pins
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Tuple
+
+from ..framework import (
+    ERROR,
+    WARNING,
+    Finding,
+    Rule,
+    dotted,
+    import_aliases,
+    register,
+    resolve_alias,
+)
+
+PALLAS_MODULE = "jax.experimental.pallas"
+ALLOWED_INDEX_CALLS = ("ds", "dslice", "slice")
+BUDGET_MARKERS = {"_panel_overflow", "VMEM_PANEL_BYTES"}
+
+
+def _uses_pallas(aliases: Dict[str, str]) -> bool:
+    return any(full.startswith(PALLAS_MODULE) for full in aliases.values())
+
+
+def _lambda_unused_params(lam: ast.Lambda) -> List[str]:
+    params = [a.arg for a in lam.args.args]
+    used = {n.id for n in ast.walk(lam.body) if isinstance(n, ast.Name)}
+    return [p for p in params if p not in used]
+
+
+def _static_bytes(shape_node: ast.AST) -> Tuple[int, List[str]]:
+    """(product of constant dims, names of symbolic dims) for a BlockSpec."""
+    prod, symbolic = 1, []
+    if isinstance(shape_node, (ast.Tuple, ast.List)):
+        for e in shape_node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                prod *= e.value
+            else:
+                symbolic.append(ast.unparse(e) if hasattr(ast, "unparse")
+                                else "?")
+    return prod, symbolic
+
+
+def _relative_aliases(tree: ast.AST) -> Dict[str, Tuple[str, str]]:
+    """local name -> (module stem, original name) for relative imports."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.level > 0:
+            stem = (node.module or "").split(".")[-1]
+            for a in node.names:
+                out[a.asname or a.name] = (stem, a.name)
+    return out
+
+
+class _KernelInfo:
+    def __init__(self, rel: str, fn: ast.FunctionDef, module_stem: str):
+        self.rel = rel
+        self.fn = fn
+        self.module_stem = module_stem
+        self.resident_axes: List[str] = []
+        self.panel_desc = ""
+
+
+@register
+class PallasKernel(Rule):
+    name = "pallas-kernel"
+    description = ("VMEM panel budgets, pl.ds index idiom, and "
+                   "compiler-params routing in Pallas kernels")
+
+    def check_file(self, src, ctx):
+        aliases = import_aliases(src.tree)
+        if not _uses_pallas(aliases):
+            return
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            full = resolve_alias(dotted(node.func), aliases)
+            if full.endswith((".load", ".store")) and \
+                    full.startswith(PALLAS_MODULE):
+                yield from self._check_index(node, src)
+            elif full.endswith("pallas_call"):
+                yield from self._check_compiler_params(node, src, aliases)
+
+    # -- int-index idiom --------------------------------------------------
+
+    def _check_index(self, call: ast.Call, src):
+        if len(call.args) < 2:
+            return
+        idx = call.args[1]
+        if isinstance(idx, ast.Name):
+            idx = _resolve_local_tuple(call, idx.id) or idx
+        if isinstance(idx, ast.Name):
+            return                        # opaque index var: cannot judge
+        elements = idx.elts if isinstance(idx, (ast.Tuple, ast.List)) \
+            else [idx]
+        for e in elements:
+            if isinstance(e, ast.Call):
+                d = dotted(e.func) or ""
+                if d.split(".")[-1] in ALLOWED_INDEX_CALLS:
+                    continue
+            yield Finding(
+                self.name, src.rel, e.lineno, e.col_offset,
+                f"pl.load/pl.store index element '{_snippet(e)}' is not "
+                f"pl.ds(...)/slice(...) — bare int indices are rejected "
+                f"by older pallas lowerings; wrap in pl.ds(i, 1)", ERROR)
+
+    # -- compiler params --------------------------------------------------
+
+    def _check_compiler_params(self, call: ast.Call, src, aliases):
+        for kw in call.keywords:
+            if kw.arg != "compiler_params":
+                continue
+            if isinstance(kw.value, ast.Call):
+                d = dotted(kw.value.func) or ""
+                if d.split(".")[-1] == "tpu_compiler_params":
+                    return
+            yield Finding(
+                self.name, src.rel, kw.value.lineno, kw.value.col_offset,
+                "compiler_params should come from "
+                "repro.dist.compat.tpu_compiler_params(...) so the kernel "
+                "survives params-class renames across JAX pins", ERROR)
+            return
+        # no compiler_params at all: acceptable for interpret-only kernels
+        yield Finding(
+            self.name, src.rel, call.lineno, call.col_offset,
+            "pallas_call without compiler_params — pass "
+            "tpu_compiler_params(dimension_semantics=...) from dist/compat",
+            WARNING)
+
+    # -- resident-panel budget (cross-file) -------------------------------
+
+    def check_project(self, ctx):
+        kernels: List[_KernelInfo] = []
+        for src in ctx.files:
+            aliases = import_aliases(src.tree)
+            if not _uses_pallas(aliases):
+                continue
+            stem = src.rel.rsplit("/", 1)[-1][:-3]
+            for fn in ast.walk(src.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                info = self._resident_info(fn, src.rel, stem)
+                if info is not None:
+                    kernels.append(info)
+        if not kernels:
+            return
+
+        # which functions anywhere call each kernel, and are they
+        # budget-aware (reference _panel_overflow / VMEM_PANEL_BYTES)?
+        for kern in kernels:
+            gated, callers = self._find_dispatch(kern, ctx)
+            if callers and not gated:
+                yield Finding(
+                    self.name, kern.rel, kern.fn.lineno,
+                    kern.fn.col_offset,
+                    f"kernel '{kern.fn.name}' keeps an output panel "
+                    f"resident in VMEM across grid axis(es) "
+                    f"{kern.resident_axes} ({kern.panel_desc}) but no "
+                    f"caller checks the panel budget — dispatch it behind "
+                    f"_panel_overflow()/VMEM_PANEL_BYTES with a ref "
+                    f"fallback (kernels/ops.py contract)", ERROR)
+            elif not callers:
+                yield Finding(
+                    self.name, kern.rel, kern.fn.lineno,
+                    kern.fn.col_offset,
+                    f"kernel '{kern.fn.name}' accumulates a resident VMEM "
+                    f"panel ({kern.panel_desc}) and has no budget-gated "
+                    f"dispatcher at all", ERROR)
+
+    def _resident_info(self, fn, rel, stem):
+        has_pallas_call = False
+        info = _KernelInfo(rel, fn, stem)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                if d.split(".")[-1] == "pallas_call":
+                    has_pallas_call = True
+                for kw in node.keywords:
+                    if kw.arg != "out_specs":
+                        continue
+                    for spec in ast.walk(kw.value):
+                        if not (isinstance(spec, ast.Call) and
+                                (dotted(spec.func) or "").split(".")[-1]
+                                == "BlockSpec"):
+                            continue
+                        if len(spec.args) < 2 or \
+                                not isinstance(spec.args[1], ast.Lambda):
+                            continue
+                        unused = _lambda_unused_params(spec.args[1])
+                        if unused:
+                            info.resident_axes.extend(unused)
+                            prod, sym = _static_bytes(spec.args[0])
+                            desc = f"block >= {prod} elems"
+                            if sym:
+                                desc += f" x {' x '.join(sym)}"
+                            info.panel_desc = desc
+        if has_pallas_call and info.resident_axes:
+            return info
+        return None
+
+    def _find_dispatch(self, kern: _KernelInfo, ctx):
+        gated, callers = False, []
+        for src in ctx.files:
+            rel_aliases = _relative_aliases(src.tree)
+            abs_aliases = import_aliases(src.tree)
+            for fn in ast.walk(src.tree):
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)) or \
+                        fn is kern.fn:
+                    continue
+                calls_kernel = False
+                for node in ast.walk(fn):
+                    if not (isinstance(node, ast.Call) and
+                            isinstance(node.func, ast.Name)):
+                        continue
+                    n = node.func.id
+                    if src.rel == kern.rel and n == kern.fn.name:
+                        calls_kernel = True
+                    elif n in rel_aliases:
+                        stem, orig = rel_aliases[n]
+                        if stem == kern.module_stem and \
+                                orig == kern.fn.name:
+                            calls_kernel = True
+                    elif abs_aliases.get(n, "").endswith(
+                            f"{kern.module_stem}.{kern.fn.name}"):
+                        calls_kernel = True
+                if not calls_kernel:
+                    continue
+                callers.append((src.rel, fn.name))
+                body_names = {x.id for x in ast.walk(fn)
+                              if isinstance(x, ast.Name)}
+                body_attrs = {x.attr for x in ast.walk(fn)
+                              if isinstance(x, ast.Attribute)}
+                if (body_names | body_attrs) & BUDGET_MARKERS:
+                    gated = True
+        return gated, callers
+
+
+def _resolve_local_tuple(call: ast.AST, name: str):
+    """Find `name = (...)` in the enclosing function of `call`."""
+    from ..framework import parent
+    node = call
+    while node is not None and not isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+        node = parent(node)
+    if node is None:
+        return None
+    for stmt in ast.walk(node):
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and \
+                isinstance(stmt.targets[0], ast.Name) and \
+                stmt.targets[0].id == name and \
+                isinstance(stmt.value, (ast.Tuple, ast.List)):
+            return stmt.value
+    return None
+
+
+def _snippet(node: ast.AST) -> str:
+    try:
+        return ast.unparse(node)
+    except Exception:
+        return "<expr>"

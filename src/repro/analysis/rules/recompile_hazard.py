@@ -1,0 +1,235 @@
+"""recompile-hazard: guard the <=2-compiled-program grid contract (PR 4).
+
+Two failure modes recompile a sweep per (k, q) cell:
+
+  * host/numpy ops inside jit-reachable code — ``np.*`` calls or
+    ``.item()`` / ``float()`` on traced values force a host sync (or a
+    trace error) and usually mean a Python-scalar data dependency
+  * Python scalars *derived from array values* fed to a jitted callee's
+    static arguments — every distinct value is a fresh program
+
+The rule discovers jitted entry points per module (``@jax.jit`` /
+``functools.partial(jax.jit, ...)`` decorators, ``jax.jit(f)`` /
+``donating_jit(f)`` wrapping, kernels passed to ``pl.pallas_call`` /
+``shard_map``), takes the module-local transitive closure of plain-name
+calls, and checks those traced bodies.  At call sites of known-jitted
+functions it checks expressions bound to declared ``static_argnames``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from ..framework import (
+    ERROR,
+    Finding,
+    Rule,
+    dotted,
+    import_aliases,
+    register,
+    resolve_alias,
+)
+
+JIT_WRAPPERS = {"jax.jit", "repro.dist.compat.donating_jit"}
+JIT_WRAPPER_SUFFIXES = ("donating_jit",)
+TRACE_CONSUMERS_SUFFIXES = ("pallas_call", "shard_map")
+NUMPY_MODULES = {"numpy"}
+VALUE_EXTRACTORS = {"item", "tolist"}
+
+
+def _is_jit_wrapper(full: str) -> bool:
+    return full in JIT_WRAPPERS or full.endswith(JIT_WRAPPER_SUFFIXES)
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)}
+    return set()
+
+
+def _contains_shape_access(node: ast.AST) -> bool:
+    return any(isinstance(n, ast.Attribute) and
+               n.attr in ("shape", "ndim", "size", "nblocks", "bs")
+               for n in ast.walk(node))
+
+
+class _Module:
+    """Per-module jit entry points, static names, and function table."""
+
+    def __init__(self, tree: ast.AST, aliases: Dict[str, str]):
+        self.aliases = aliases
+        self.funcs: Dict[str, ast.FunctionDef] = {}
+        self.jitted: Set[str] = set()
+        # public/assigned name of a jitted program -> static argnames
+        self.static_names: Dict[str, Set[str]] = {}
+        # jitted public name -> underlying FunctionDef (for positional map)
+        self.jitted_impl: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.funcs.setdefault(node.name, node)
+                self._scan_decorators(node)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                self._scan_call(node)
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    len(node.targets) == 1 and \
+                    isinstance(node.targets[0], ast.Name):
+                self._scan_assign(node.targets[0].id, node.value)
+
+    def _scan_decorators(self, fn) -> None:
+        for dec in fn.decorator_list:
+            full = resolve_alias(dotted(dec), self.aliases)
+            call = dec if isinstance(dec, ast.Call) else None
+            if call is not None:
+                full = resolve_alias(dotted(call.func), self.aliases)
+                if full.endswith("partial") and call.args:
+                    inner = resolve_alias(dotted(call.args[0]), self.aliases)
+                    if _is_jit_wrapper(inner):
+                        self.jitted.add(fn.name)
+                        self.static_names[fn.name] = _static_argnames(call)
+                        self.jitted_impl[fn.name] = fn.name
+                    continue
+            if _is_jit_wrapper(full):
+                self.jitted.add(fn.name)
+                if call is not None:
+                    self.static_names[fn.name] = _static_argnames(call)
+                    self.jitted_impl[fn.name] = fn.name
+                else:
+                    self.static_names.setdefault(fn.name, set())
+                    self.jitted_impl[fn.name] = fn.name
+
+    def _scan_call(self, call: ast.Call) -> None:
+        full = resolve_alias(dotted(call.func), self.aliases)
+        if _is_jit_wrapper(full) or full.endswith(TRACE_CONSUMERS_SUFFIXES):
+            if call.args and isinstance(call.args[0], ast.Name):
+                self.jitted.add(call.args[0].id)
+
+    def _scan_assign(self, name: str, call: ast.Call) -> None:
+        full = resolve_alias(dotted(call.func), self.aliases)
+        if not _is_jit_wrapper(full):
+            return
+        if call.args and isinstance(call.args[0], ast.Name):
+            impl = call.args[0].id
+            self.jitted.add(impl)
+            self.static_names[name] = _static_argnames(call)
+            self.jitted_impl[name] = impl
+
+    def traced_closure(self) -> Set[str]:
+        """Names of local functions reachable from any jitted entry."""
+        reached: Set[str] = set()
+        frontier = [n for n in self.jitted if n in self.funcs]
+        while frontier:
+            name = frontier.pop()
+            if name in reached:
+                continue
+            reached.add(name)
+            fn = self.funcs[name]
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Name) and \
+                        node.func.id in self.funcs:
+                    frontier.append(node.func.id)
+                # nested defs count as part of the traced body already
+        return reached
+
+
+@register
+class RecompileHazard(Rule):
+    name = "recompile-hazard"
+    description = ("host ops inside jit-reachable code and value-derived "
+                   "Python scalars fed to static args retrace per call")
+
+    def check_file(self, src, ctx):
+        aliases = import_aliases(src.tree)
+        np_aliases = {local for local, full in aliases.items()
+                      if full in NUMPY_MODULES}
+        mod = _Module(src.tree, aliases)
+        traced = mod.traced_closure()
+
+        for fname in sorted(traced):
+            yield from self._check_traced_body(mod.funcs[fname], src,
+                                               np_aliases, fname)
+        yield from self._check_static_call_sites(src, mod)
+
+    # -- traced bodies ----------------------------------------------------
+
+    def _check_traced_body(self, fn, src, np_aliases, fname):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func)
+                root = d.split(".")[0] if d else ""
+                if root in np_aliases:
+                    yield Finding(
+                        self.name, src.rel, node.lineno, node.col_offset,
+                        f"numpy call '{d}' inside jit-reachable "
+                        f"'{fname}' — runs on host per trace; use jnp "
+                        f"or hoist to the caller", ERROR)
+                elif isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in VALUE_EXTRACTORS:
+                    yield Finding(
+                        self.name, src.rel, node.lineno, node.col_offset,
+                        f".{node.func.attr}() inside jit-reachable "
+                        f"'{fname}' — forces a host sync and a Python "
+                        f"scalar per trace", ERROR)
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int") and node.args and \
+                        not isinstance(node.args[0], ast.Constant) and \
+                        not _contains_shape_access(node.args[0]):
+                    yield Finding(
+                        self.name, src.rel, node.lineno, node.col_offset,
+                        f"{node.func.id}() over a runtime value inside "
+                        f"jit-reachable '{fname}' — shape-derived ints "
+                        f"are fine, array values are a tracer leak",
+                        ERROR)
+
+    # -- call sites of known-jitted programs ------------------------------
+
+    def _check_static_call_sites(self, src, mod: _Module):
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Name):
+                continue
+            public = node.func.id
+            statics = mod.static_names.get(public)
+            if not statics:
+                continue
+            impl = mod.funcs.get(mod.jitted_impl.get(public, ""))
+            pos_names: List[Optional[str]] = []
+            if impl is not None:
+                pos_names = [a.arg for a in impl.args.args]
+            for i, arg in enumerate(node.args):
+                pname = pos_names[i] if i < len(pos_names) else None
+                if pname in statics:
+                    yield from self._check_static_value(arg, public, pname,
+                                                        src)
+            for kw in node.keywords:
+                if kw.arg in statics:
+                    yield from self._check_static_value(kw.value, public,
+                                                        kw.arg, src)
+
+    def _check_static_value(self, expr, callee, argname, src):
+        for node in ast.walk(expr):
+            bad = None
+            if isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in VALUE_EXTRACTORS:
+                    bad = f".{node.func.attr}()"
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int") and node.args and \
+                        not isinstance(node.args[0], ast.Constant) and \
+                        not _contains_shape_access(node.args[0]):
+                    bad = f"{node.func.id}()"
+            if bad:
+                yield Finding(
+                    self.name, src.rel, node.lineno, node.col_offset,
+                    f"static arg '{argname}' of jitted '{callee}' is "
+                    f"derived from an array value via {bad} — every "
+                    f"distinct value compiles a fresh program (the grid "
+                    f"contract allows 2)", ERROR)

@@ -1,0 +1,55 @@
+"""nonneg-sanitizer-coverage: every MU step threads the runtime sanitizer.
+
+The paper's §4 multiplicative updates preserve non-negativity *given*
+non-negative inputs and a correct eps guard; a single bad kernel or
+donation bug breaks the invariant silently (errors just drift).  PR 6's
+``repro.analysis.sanitizer.sanitize_state`` hook makes the invariant
+checkable at runtime — but only if every MU-step implementation actually
+calls it.  This rule enforces that: any function whose name matches the
+MU-step pattern (``*mu_step*`` / ``*mu_iter*``, excluding ``make_*`` /
+``get_*`` factories) in core/dist modules must contain a
+``sanitize_state(...)`` call.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from ..framework import ERROR, Finding, Rule, dotted, register
+
+MU_NAME_RE = re.compile(r"(^|_)mu_(step|iter)")
+FACTORY_PREFIXES = ("make_", "get_", "build_")
+HOOK_NAME = "sanitize_state"
+
+
+@register
+class SanitizerCoverage(Rule):
+    name = "nonneg-sanitizer-coverage"
+    description = ("every MU-step implementation must call "
+                   "sanitize_state(...)")
+
+    def check_file(self, src, ctx):
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not MU_NAME_RE.search(fn.name):
+                continue
+            if fn.name.startswith(FACTORY_PREFIXES):
+                continue
+            if self._calls_hook(fn):
+                continue
+            yield Finding(
+                self.name, src.rel, fn.lineno, fn.col_offset,
+                f"MU step '{fn.name}' does not call {HOOK_NAME}(...) — "
+                f"thread the sanitizer hook (enabled flag defaulting to "
+                f"False) so RescalkConfig.sanitize covers this path",
+                ERROR)
+
+    @staticmethod
+    def _calls_hook(fn) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                if d.split(".")[-1] == HOOK_NAME:
+                    return True
+        return False

@@ -1,0 +1,113 @@
+"""Runtime factor sanitizer — finite / non-negative / masked-columns-zero.
+
+The paper's §4 multiplicative updates keep (A, R) non-negative given
+non-negative inputs, and the cross-k batching of PR 4 additionally relies
+on padded columns staying *exactly* zero (zeros are an MU fixed point).
+``sanitize_state`` asserts all three properties at runtime, from inside
+jitted/vmapped/shard_mapped code, via ``jax.debug.callback``.
+
+Off by default: with ``enabled=False`` (the default everywhere) the call
+is a pure identity that adds **nothing** to the jaxpr, so compiled
+programs are bit-identical and the PR 4 compile-count contract is
+untouched.  Enable per-run with ``RescalkConfig(sanitize=True)``,
+``DistRescalConfig(sanitize=True)``, ``rescal(..., sanitize=True)`` or
+``scripts/rescalk_run.py --sanitize``.
+
+Failure raises :class:`FactorSanitizerError` from the host callback.  On
+current jaxlib the message survives inside the raised
+``XlaRuntimeError`` ("CpuCallback error: ... <message>"); because some
+runtimes only *log* callback exceptions, the most recent failure text is
+also kept in :func:`last_failure` as a version-proof channel.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+
+__all__ = ["FactorSanitizerError", "sanitize_state", "check_factors",
+           "last_failure", "reset_failures"]
+
+
+class FactorSanitizerError(AssertionError):
+    """A factor violated finiteness / non-negativity / mask-zero."""
+
+
+_LAST_FAILURE: str | None = None
+
+
+def last_failure() -> str | None:
+    """Message of the most recent sanitizer failure in this process."""
+    return _LAST_FAILURE
+
+
+def reset_failures() -> None:
+    global _LAST_FAILURE
+    _LAST_FAILURE = None
+
+
+def _describe_bad(name: str, x: np.ndarray) -> list[str]:
+    problems = []
+    finite = np.isfinite(x)
+    if not finite.all():
+        idx = np.argwhere(~finite)[0].tolist()
+        problems.append(f"{name} has {int((~finite).sum())} non-finite "
+                        f"entries (first at {idx})")
+    neg = (x < 0) & finite
+    if neg.any():
+        idx = np.argwhere(neg)[0].tolist()
+        problems.append(f"{name} has {int(neg.sum())} negative entries "
+                        f"(min {float(x[finite].min()):.3e}, first at "
+                        f"{idx})")
+    return problems
+
+
+def check_factors(A, R, mask=None, *, where: str = "host") -> None:
+    """Host-side check; raises FactorSanitizerError with a located message.
+
+    A: (..., n, k); R: (..., m, k, k); mask: (..., k) with 1 = active
+    column, 0 = k_max padding that must hold exactly zero.  Leading batch
+    dims (vmapped members, (k, q) grids) broadcast through.
+    """
+    global _LAST_FAILURE
+    A = np.asarray(A)
+    R = np.asarray(R)
+    problems = _describe_bad("A", A) + _describe_bad("R", R)
+    if mask is not None:
+        m = np.asarray(mask).astype(A.dtype)
+        bad_a = A * (1.0 - m)[..., None, :]
+        if np.any(bad_a != 0):
+            n_bad = int(np.count_nonzero(bad_a))
+            problems.append(f"A has {n_bad} non-zero entries in masked "
+                            f"(padded) columns — zeros are the MU fixed "
+                            f"point the cross-k batching relies on")
+        m2 = m[..., :, None] * m[..., None, :]
+        bad_r = R * (1.0 - m2)[..., None, :, :]
+        if np.any(bad_r != 0):
+            n_bad = int(np.count_nonzero(bad_r))
+            problems.append(f"R has {n_bad} non-zero entries in masked "
+                            f"(padded) rows/columns")
+    if problems:
+        msg = f"[sanitizer:{where}] " + "; ".join(problems)
+        _LAST_FAILURE = msg
+        raise FactorSanitizerError(msg)
+
+
+def sanitize_state(A, R, *, where: str, mask=None, enabled: bool = False):
+    """Identity on (A, R); when enabled, asserts factor invariants on host.
+
+    Returns (A, R) unchanged so call sites can thread it through without
+    reshaping data flow.  ``enabled`` must be a Python bool (it is a
+    static argument everywhere it is threaded): when False this function
+    contributes nothing to the traced jaxpr.
+    """
+    if not enabled:
+        return A, R
+    cb = functools.partial(check_factors, where=where)
+    if mask is None:
+        jax.debug.callback(cb, A, R)
+    else:
+        jax.debug.callback(cb, A, R, mask)
+    return A, R

@@ -22,7 +22,7 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

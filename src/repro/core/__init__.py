@@ -4,6 +4,12 @@ automatic model selection (pyDRESCALk).
 The model-selection sweep itself lives in ``repro.selection`` (batched
 ensembles, work-unit scheduler, pluggable criteria, JSON reports);
 ``rescalk`` here is the stable compatibility wrapper over it."""
+from . import sparse
+from .clustering import ClusterResult, custom_cluster
+from .lsa import linear_sum_assignment, max_similarity_assignment
+from .nndsvd import nndsvd_init_A, nndsvd_init_A_randomized
+from .perturb import ensemble_keys, perturb, perturb_shard
+from .regression import regress_R
 from .rescal import (EPS_DEFAULT, RescalState, init_factors, mu_step_batched,
                      mu_step_sliced, normalize, reconstruct, rel_error,
                      rescal)
@@ -12,13 +18,7 @@ from .rescal_dist import (DistRescalConfig, dist_rescal, make_dist_error,
                           make_ensemble_step, make_ensemble_step_sparse,
                           make_gspmd_step)
 from .rescalk import KResult, RescalkConfig, RescalkResult, rescalk, select_k
-from .perturb import ensemble_keys, perturb, perturb_shard
-from .clustering import ClusterResult, custom_cluster
 from .silhouette import SilhouetteResult, silhouettes
-from .regression import regress_R
-from .nndsvd import nndsvd_init_A, nndsvd_init_A_randomized
-from .lsa import linear_sum_assignment, max_similarity_assignment
-from . import sparse
 
 __all__ = [
     "EPS_DEFAULT", "RescalState", "init_factors", "mu_step_batched",

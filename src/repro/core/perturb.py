@@ -12,7 +12,6 @@ preserving the sparsity pattern (paper §4.2 last paragraph).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def perturb(key: jax.Array, X: jax.Array, delta: float = 0.02) -> jax.Array:

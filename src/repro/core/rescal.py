@@ -22,6 +22,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import sanitize_state
 from repro.dist.compat import donating_jit
 
 EPS_DEFAULT = 1e-16
@@ -85,17 +86,21 @@ def update_A(X: jax.Array, A: jax.Array, R: jax.Array, G: jax.Array,
 
 
 def mu_step_batched(X: jax.Array, state: RescalState,
-                    eps: float = EPS_DEFAULT) -> RescalState:
+                    eps: float = EPS_DEFAULT,
+                    sanitize: bool = False) -> RescalState:
     """One MU iteration, all m slices tensorized (beyond-paper schedule)."""
     A, R = state.A, state.R
     G = gram(A)
     R = update_R(X, A, R, G, eps)
     A = update_A(X, A, R, G, eps)
+    A, R = sanitize_state(A, R, where="core.rescal.mu_step_batched",
+                          enabled=sanitize)
     return RescalState(A=A, R=R, step=state.step + 1)
 
 
 def mu_step_sliced(X: jax.Array, state: RescalState,
-                   eps: float = EPS_DEFAULT) -> RescalState:
+                   eps: float = EPS_DEFAULT,
+                   sanitize: bool = False) -> RescalState:
     """One MU iteration with an explicit loop over the m relation slices,
     mirroring paper Alg. 3 lines 4-21 (R[t] updated then its contribution
     to NumA/DenoA accumulated, per slice)."""
@@ -122,6 +127,8 @@ def mu_step_sliced(X: jax.Array, state: RescalState,
         0, m, body,
         (R, jnp.zeros_like(A), jnp.zeros((k, k), X.dtype)))
     A = A * num / (A @ den_kk + eps)                  # line 22
+    A, R = sanitize_state(A, R, where="core.rescal.mu_step_sliced",
+                          enabled=sanitize)
     return RescalState(A=A, R=R, step=state.step + 1)
 
 
@@ -181,12 +188,17 @@ def crop_state(state: RescalState, k: int) -> RescalState:
 
 def masked_mu_step(X: jax.Array, state: RescalState, mask: jax.Array,
                    eps: float = EPS_DEFAULT,
-                   schedule: str = "batched") -> RescalState:
+                   schedule: str = "batched",
+                   sanitize: bool = False) -> RescalState:
     """One MU iteration on k_max-padded factors.  Same math as the plain
     schedules; the trailing mask multiply pins the padded columns to exact
     zero (multiplying active columns by 1.0 is exact, so active values are
     untouched)."""
-    return mask_state(MU_SCHEDULES[schedule](X, state, eps), mask)
+    st = mask_state(MU_SCHEDULES[schedule](X, state, eps), mask)
+    A, R = sanitize_state(st.A, st.R, mask=mask,
+                          where="core.rescal.masked_mu_step",
+                          enabled=sanitize)
+    return RescalState(A=A, R=R, step=st.step)
 
 
 def masked_normalize(state: RescalState, mask: jax.Array,
@@ -236,10 +248,11 @@ def reconstruct(A: jax.Array, R: jax.Array) -> jax.Array:
 # Single-device driver
 # ---------------------------------------------------------------------------
 
-def _run_iters_impl(X, state, iters: int, schedule: str, eps: float):
+def _run_iters_impl(X, state, iters: int, schedule: str, eps: float,
+                    sanitize: bool = False):
     step = MU_SCHEDULES[schedule]
     def body(_, s):
-        return step(X, s, eps)
+        return step(X, s, eps, sanitize)
     return jax.lax.fori_loop(0, iters, body, state)
 
 
@@ -249,13 +262,15 @@ def _run_iters_impl(X, state, iters: int, schedule: str, eps: float):
 # copies live.  Callers on accelerator backends must treat the passed
 # state as consumed.
 _run_iters = donating_jit(_run_iters_impl, donate_argnums=(1,),
-                          static_argnames=("iters", "schedule", "eps"))
+                          static_argnames=("iters", "schedule", "eps",
+                                           "sanitize"))
 
 
 def rescal(X: jax.Array, k: int, *, key: jax.Array | None = None,
            iters: int = 200, schedule: str = "batched",
            eps: float = EPS_DEFAULT, init: RescalState | None = None,
-           normalize_result: bool = True) -> tuple[RescalState, jax.Array]:
+           normalize_result: bool = True,
+           sanitize: bool = False) -> tuple[RescalState, jax.Array]:
     """Factorize X (m, n, n) at rank k.  Returns (state, rel_error).
 
     NOTE: a passed ``init`` is donated to the MU program on backends that
@@ -266,7 +281,7 @@ def rescal(X: jax.Array, k: int, *, key: jax.Array | None = None,
         if key is None:
             key = jax.random.PRNGKey(0)
         init = init_factors(key, n, m, k, dtype=X.dtype)
-    state = _run_iters(X, init, iters, schedule, eps)
+    state = _run_iters(X, init, iters, schedule, eps, sanitize)
     if normalize_result:
         state = normalize(state)
     return state, rel_error(X, state.A, state.R)

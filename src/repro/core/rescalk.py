@@ -55,8 +55,12 @@ def default_member_runner(X_q: jax.Array, k: int, key: jax.Array,
                             dtype=X_q.dtype)
         A0 = nndsvd_init_A(X_q, k).astype(X_q.dtype)
         init = RescalState(A=A0, R=base.R, step=base.step)
+    # rescal-lint: disable=key-discipline -- exactly one consumer draws:
+    # rescal() ignores `key` whenever `init` is supplied above, and passing
+    # the same fkey both places keeps loop-mode parity with _batched_members
     state, _ = rescal(X_q, k, key=key, iters=cfg.rescal_iters,
-                      schedule=cfg.schedule, init=init)
+                      schedule=cfg.schedule, init=init,
+                      sanitize=bool(getattr(cfg, "sanitize", False)))
     return state
 
 

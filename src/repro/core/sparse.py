@@ -30,6 +30,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import sanitize_state
 from .rescal import EPS_DEFAULT
 
 
@@ -193,7 +194,7 @@ def sparse_products(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
 
 def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                    eps: float = EPS_DEFAULT, *, use_fused: bool = False,
-                   impl: str = "auto"):
+                   impl: str = "auto", sanitize: bool = False):
     """One batched MU iteration on a BCSR tensor.  Identical math to the
     dense step; only the X products change — and with ``use_fused`` they
     come from ONE pass over the stored blocks (kernels/bcsr_fused.py)
@@ -207,12 +208,15 @@ def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
          + jnp.einsum("mba,bc,mcd->ad", R, G, R))
     A = A * num / (A @ S + eps)
+    A, R = sanitize_state(A, R, where="core.sparse.sparse_mu_step",
+                          enabled=sanitize)
     return A, R
 
 
 def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                           mask: jax.Array, eps: float = EPS_DEFAULT, *,
-                          use_fused: bool = False, impl: str = "auto"):
+                          use_fused: bool = False, impl: str = "auto",
+                          sanitize: bool = False):
     """One MU iteration on k_max-padded factors (the BCSR twin of
     rescal.masked_mu_step): same algebra, with the padded columns of A and
     rows/cols of R pinned to exact zero after the update.  Zeros are a
@@ -222,7 +226,10 @@ def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     columns of A yield exact-zero panel columns (the panels are zeroed
     before accumulation and the tile products are plain matmuls)."""
     A, R = sparse_mu_step(sp, A, R, eps, use_fused=use_fused, impl=impl)
-    return A * mask, R * (mask[:, None] * mask[None, :])
+    A, R = A * mask, R * (mask[:, None] * mask[None, :])
+    return sanitize_state(A, R, mask=mask,
+                          where="core.sparse.masked_sparse_mu_step",
+                          enabled=sanitize)
 
 
 def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array, *,

@@ -41,9 +41,12 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# the sanitizer is dependency-light (jax + numpy, never repro.core /
+# repro.kernels), so the lazy-import rule in the module docstring holds
+from repro.analysis.sanitizer import sanitize_state
 from .sharding import (COL_AXIS, POD_AXIS, ROW_AXIS, bcsr_specs,
                        diag_broadcast_col_to_row, diag_broadcast_row_to_col,
                        ensemble_factor_specs, factor_specs, psum_cast)
@@ -58,6 +61,7 @@ class DistRescalConfig:
     comm_dtype: str | None = None    # e.g. "bfloat16"
     use_fused_kernel: bool = False   # kernels/fused_bilinear single-X-pass
     fused_impl: str = "auto"         # ops.py impl: auto|pallas|interpret|ref
+    sanitize: bool = False           # runtime factor checks (repro.analysis)
 
     @property
     def comm_jnp_dtype(self):
@@ -119,7 +123,8 @@ def _mu_iter_batched(Xl, Ai, R, cfg: DistRescalConfig):
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
          + jnp.einsum("mba,bc,mcd->ad", R, G, R))                # lines 15-19
     Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return Ai, R
+    return sanitize_state(Ai, R, where="dist.engine._mu_iter_batched",
+                          enabled=cfg.sanitize)
 
 
 def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
@@ -158,7 +163,8 @@ def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
     R, num, S = jax.lax.fori_loop(
         0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Xl.dtype)))
     Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return Ai, R
+    return sanitize_state(Ai, R, where="dist.engine._mu_iter_sliced",
+                          enabled=cfg.sanitize)
 
 
 def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
@@ -203,7 +209,9 @@ def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
          + jnp.einsum("mba,bc,mcd->ad", R, G, R))
     Ai = Ai * num / (Ai @ S + eps)
-    return Ai, R
+    return sanitize_state(Ai, R,
+                          where="dist.engine._mu_iter_batched_sparse",
+                          enabled=cfg.sanitize)
 
 
 def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
@@ -249,7 +257,9 @@ def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
     R, num, S = jax.lax.fori_loop(
         0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Ai.dtype)))
     Ai = Ai * num / (Ai @ S + eps)
-    return Ai, R
+    return sanitize_state(Ai, R,
+                          where="dist.engine._mu_iter_sliced_sparse",
+                          enabled=cfg.sanitize)
 
 
 _ITERS = {

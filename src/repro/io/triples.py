@@ -24,7 +24,7 @@ shards; ``io.manifest`` fingerprints it for the sweep scheduler.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Iterator, Sequence
+from typing import Iterator, Sequence
 
 import numpy as np
 

@@ -4,9 +4,9 @@ Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and are
 validated on CPU in interpret mode against ref.py.  ops.py is the public,
 backend-dispatching API.
 """
+from . import ref
 from .ops import (bcsr_spmm, bcsr_xa_xta, flash_attention, fused_xa_xtb,
                   mu_update_a)
-from . import ref
 
 __all__ = ["bcsr_spmm", "bcsr_xa_xta", "flash_attention", "fused_xa_xtb",
            "mu_update_a", "ref"]

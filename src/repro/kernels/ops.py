@@ -11,18 +11,17 @@ window (n2_panel * k * 4B, double-buffered) stays under the budget.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import BCSR
+
 from . import ref as _ref
+from .bcsr_fused import bcsr_xa_xta as _bcsr_fused_pallas
+from .bcsr_spmm import bcsr_spmm as _bcsr_pallas
+from .flash_attention import flash_attention as _flash_pallas
 from .fused_bilinear import fused_xa_xtb as _fused_pallas
 from .mu_ratio import mu_update_a as _mu_pallas
-from .bcsr_spmm import bcsr_spmm as _bcsr_pallas
-from .bcsr_fused import bcsr_xa_xta as _bcsr_fused_pallas
-from .flash_attention import flash_attention as _flash_pallas
 
 VMEM_PANEL_BYTES = 4 * 1024 * 1024   # xtb window budget (pre double-buffer)
 
@@ -119,6 +118,14 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
                     sm_scale: float | None = None, impl: str = "auto",
                     bq: int = 256, bk: int = 256):
     impl = _resolve(impl)
+    # VMEM-resident window per q-tile: the (bq, d) accumulator plus the
+    # streamed (bk, d) k/v tiles — gate against the shared panel budget
+    # like the BCSR dispatchers (oversized heads fall back to the oracle)
+    d = q.shape[-1]
+    itemsize = jnp.dtype(q.dtype).itemsize
+    if impl == "pallas" and \
+            (bq + 2 * bk) * d * itemsize > VMEM_PANEL_BYTES:
+        impl = "ref"
     if impl == "ref":
         return _ref.ref_attention(q, k, v, causal=causal, q_offset=q_offset,
                                   sm_scale=sm_scale)

@@ -30,7 +30,6 @@ from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (ARCHS, RESCAL_CONFIGS, SHAPES, RescalConfig,
                            get_config, input_specs)

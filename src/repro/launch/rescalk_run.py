@@ -85,6 +85,10 @@ def build_parser() -> argparse.ArgumentParser:
                     help="compute at most this many units, then exit "
                          "(deterministic kill for resume drills)")
     ap.add_argument("--max-retries", type=int, default=1)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="runtime factor sanitizer inside the MU programs "
+                         "(finite / non-negative / masked-zero asserts; "
+                         "repro.analysis.sanitizer)")
     return ap
 
 
@@ -143,7 +147,8 @@ def main():
 
     cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
                         n_perturbations=args.r, rescal_iters=args.iters,
-                        schedule=args.schedule, init=args.init)
+                        schedule=args.schedule, init=args.init,
+                        sanitize=args.sanitize)
     if args.grid_chunk is not None and args.mode != "grid":
         raise SystemExit("--grid-chunk requires --mode grid")
     sched = SweepScheduler(cfg, mode=args.mode, ckpt_dir=args.ckpt_dir,

@@ -36,14 +36,14 @@ def main():
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
 
-    key = jax.random.PRNGKey(0)
-    params = transformer.init_params(key, cfg)
+    kp, kd = jax.random.split(jax.random.PRNGKey(0))
+    params = transformer.init_params(kp, cfg)
     if mesh is not None:
         from repro.train.serve_step import params_shardings
         params = jax.device_put(params, params_shardings(mesh, cfg))
 
     B, Pn, T = args.batch, args.prompt_len, args.new_tokens
-    prompts = jax.random.randint(key, (B, Pn), 0, cfg.vocab)
+    prompts = jax.random.randint(kd, (B, Pn), 0, cfg.vocab)
 
     prefill = make_prefill_step(cfg, mesh)
     t0 = time.perf_counter()

@@ -238,7 +238,7 @@ def gqa_qkv(p, x, positions, n_heads, n_kv, head_dim, rope_theta=10000.0,
 
 def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
              d_nope: int, d_rope: int, d_v: int, dtype=jnp.float32):
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 5)
     return {
         "wq_down": dense_init(ks[0], d_model, q_lora, dtype),
         "q_norm": rmsnorm_init(q_lora, dtype),

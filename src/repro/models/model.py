@@ -10,7 +10,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import BATCH, MODEL, constrain
 from . import transformer
 from .ssm import mamba2_dims
 

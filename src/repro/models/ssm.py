@@ -122,7 +122,7 @@ def mamba2_init(key, d_model: int, *, state: int, expand: int = 2,
                 dtype=jnp.float32):
     d_inner, H, conv_dim = mamba2_dims(d_model, expand, headdim, groups,
                                        state)
-    ks = jax.random.split(key, 4)
+    ks = jax.random.split(key, 3)
     d_proj = 2 * d_inner + 2 * groups * state + H
     return {
         "in_proj": dense_init(ks[0], d_model, d_proj, dtype),

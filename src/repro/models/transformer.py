@@ -100,7 +100,7 @@ def _init_layer(key, cfg, dtype):
                     key, d, state=cfg.ssm_state, expand=cfg.ssm_expand,
                     headdim=cfg.ssm_headdim, groups=cfg.ssm_groups,
                     dtype=dtype)}
-    ks = jax.random.split(key, 4)
+    ks = jax.random.split(key, 3)
     p: dict[str, Any] = {"ln1": rmsnorm_init(d, dtype),
                          "ln2": rmsnorm_init(d, dtype)}
     if fam == "hybrid":

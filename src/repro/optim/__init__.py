@@ -1,7 +1,7 @@
 """Optimizers + distributed-optimization tricks."""
+from . import compression
 from .adamw import (AdamW, AdamWState, apply_updates, clip_by_global_norm,
                     global_norm)
-from . import compression
 
 __all__ = ["AdamW", "AdamWState", "apply_updates", "clip_by_global_norm",
            "global_norm", "compression"]

@@ -25,7 +25,6 @@ the historical API and delegates here; new code should import from
 ``repro.selection`` directly.  Modules in this package import repro.core
 *submodules* only (never the package root) to stay cycle-free.
 """
-from .types import KResult, RescalkConfig, RescalkResult
 from .criteria import CRITERIA, select
 from .ensemble import (EnsembleResult, member_keys, perturb_blocked,
                        perturb_sharded_blocked, run_ensemble,
@@ -36,6 +35,7 @@ from .ensemble import (EnsembleResult, member_keys, perturb_blocked,
 from .report import SelectionReport, UnitRecord
 from .scheduler import (GridChunk, SweepInterrupted, SweepScheduler,
                         WorkUnit, plan_sweep, reduce_k)
+from .types import KResult, RescalkConfig, RescalkResult
 
 __all__ = [
     "CRITERIA", "select",

@@ -114,6 +114,9 @@ def perturb_blocked(key: jax.Array, X: jax.Array, q, grid: tuple[int, int],
         cols = []
         for j in range(gc):
             blk = X[:, i * nr:(i + 1) * nr, j * nc:(j + 1) * nc]
+            # rescal-lint: disable=key-discipline -- `key` is a root, not a
+            # stream: perturb_shard folds (q, grid index) in, and handing
+            # every shard the same root is the mesh-parity contract
             cols.append(perturb_shard(key, blk, q, i * gc + j, delta))
         rows.append(jnp.concatenate(cols, axis=2))
     return jnp.concatenate(rows, axis=1)
@@ -124,9 +127,11 @@ def perturb_blocked(key: jax.Array, X: jax.Array, q, grid: tuple[int, int],
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "schedule",
-                                             "init", "delta", "eps"))
+                                             "init", "delta", "eps",
+                                             "sanitize"))
 def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
-                     init: str, delta: float, eps: float):
+                     init: str, delta: float, eps: float,
+                     sanitize: bool = False):
     m, n, _ = X.shape
     step = MU_SCHEDULES[schedule]
 
@@ -140,7 +145,7 @@ def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
                              R=st.R, step=st.step)
 
         def body(_, s):
-            return step(X_q, s, eps)
+            return step(X_q, s, eps, sanitize)
 
         st = jax.lax.fori_loop(0, iters, body, st)
         st = normalize(st)
@@ -173,11 +178,18 @@ def _fused_opts(cfg) -> dict:
                 impl=getattr(cfg, "fused_impl", "auto"))
 
 
+def _sanitize_opt(cfg) -> bool:
+    """Runtime-sanitizer flag, duck-typed like ``_fused_opts`` (older
+    config objects without the field mean 'off')."""
+    return bool(getattr(cfg, "sanitize", False))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "iters", "delta", "eps",
-                                             "use_fused", "impl"))
+                                             "use_fused", "impl",
+                                             "sanitize"))
 def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
                           eps: float, use_fused: bool = False,
-                          impl: str = "auto"):
+                          impl: str = "auto", sanitize: bool = False):
     """All members of one unit on a BCSR operand as one vmapped program.
     Same (pkey, fkey) split discipline as the dense program; the
     perturbation draws noise for the stored blocks only.  ``use_fused``
@@ -194,7 +206,8 @@ def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
 
         def body(_, c):
             return sparse_mu_step(sp_q, c[0], c[1], eps,
-                                  use_fused=use_fused, impl=impl)
+                                  use_fused=use_fused, impl=impl,
+                                  sanitize=sanitize)
 
         A, R = jax.lax.fori_loop(0, iters, body, (st.A, st.R))
         st = normalize(RescalState(A=A, R=R, step=st.step))
@@ -218,7 +231,8 @@ def _loop_members_bcsr(sp, keys, k: int, cfg) -> EnsembleResult:
         st = init_factors(fkey, sp.n, sp.m, k, dtype=sp.data.dtype)
         A, R = st.A, st.R
         for _ in range(cfg.rescal_iters):
-            A, R = sparse_mu_step(sp_q, A, R, eps, **fused)
+            A, R = sparse_mu_step(sp_q, A, R, eps,
+                                  sanitize=_sanitize_opt(cfg), **fused)
         st = normalize(RescalState(A=A, R=R, step=st.step))
         A_l.append(st.A)
         R_l.append(st.R)
@@ -268,6 +282,8 @@ def perturb_sharded_blocked(key: jax.Array, sharded, q,
     for i in range(g):
         cols = []
         for j in range(g):
+            # rescal-lint: disable=key-discipline -- same root-key contract
+            # as perturb_blocked: perturb_shard folds (q, grid index) in
             cols.append(perturb_shard(key, sharded.data[i, j], q,
                                       i * g + j, delta))
         rows.append(jnp.stack(cols))
@@ -308,7 +324,8 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
                             grid: int, schedule: str = "batched",
                             delta: float = 0.02, iters: int = 200,
                             dtype=jnp.float32, key_ndim: int = 2,
-                            use_fused: bool = False, fused_impl: str = "auto"):
+                            use_fused: bool = False, fused_impl: str = "auto",
+                            sanitize: bool = False):
     """The BCSR twin of ``make_mesh_ensemble``: a jitted sharded program
     ``(data, rows, cols, keys, ids) -> (A_ens, R_ens, errs)`` over the
     stacked shard layout of ``io.partition.ShardedBCSR``.  Each device
@@ -341,7 +358,7 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
                          f"pods={pods}")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl)
+                            fused_impl=fused_impl, sanitize=sanitize)
     it = get_mu_iter("bcsr", schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     x_spec, i_spec, _, _ = sh.bcsr_specs()
@@ -388,7 +405,8 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                        schedule: str = "batched", delta: float = 0.02,
                        iters: int = 200, init: str = "random",
                        dtype=jnp.float32, key_ndim: int = 2,
-                       use_fused: bool = False, fused_impl: str = "auto"):
+                       use_fused: bool = False, fused_impl: str = "auto",
+                       sanitize: bool = False):
     """Build the jitted sharded ensemble program ``(X, keys, ids) ->
     (A_ens, R_ens, errs)`` for `r_run` members on `mesh`.
 
@@ -423,7 +441,7 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                          f"ensemble axis)")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl)
+                            fused_impl=fused_impl, sanitize=sanitize)
     it = get_mu_iter("dense", schedule)
     specs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -497,7 +515,8 @@ def grid_init(cells, cfg, n: int, m: int, k_max: int, dtype):
 
 
 def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
-                  schedule: str, delta: float, eps: float):
+                  schedule: str, delta: float, eps: float,
+                  sanitize: bool = False):
     """A chunk of flattened (k, q) cells as one jitted program over a dense
     operand.  Same (pkey, fkey) discipline as ``_batched_members`` (the
     fkey was consumed host-side by ``grid_init``); masked columns stay
@@ -513,7 +532,7 @@ def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
         st = RescalState(A=A0u, R=R0u, step=jnp.zeros((), jnp.int32))
 
         def body(_, s):
-            return masked_mu_step(X_q, s, mask, eps, schedule)
+            return masked_mu_step(X_q, s, mask, eps, schedule, sanitize)
 
         st = jax.lax.fori_loop(0, iters, body, st)
         st = masked_normalize(st, mask)
@@ -524,12 +543,13 @@ def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
 
 _grid_members = donating_jit(
     _grid_members, donate_argnums=(3, 4),
-    static_argnames=("k_max", "iters", "schedule", "delta", "eps"))
+    static_argnames=("k_max", "iters", "schedule", "delta", "eps",
+                     "sanitize"))
 
 
 def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
                        delta: float, eps: float, use_fused: bool = False,
-                       impl: str = "auto"):
+                       impl: str = "auto", sanitize: bool = False):
     """The BCSR twin of ``_grid_members``: stored-block perturbation, masked
     sparse MU, one program for the whole rank mix.  ``use_fused`` swaps the
     spmm + spmm_t double sweep for the single-pass kernel (the masked-zero
@@ -544,7 +564,8 @@ def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
 
         def body(_, c):
             return masked_sparse_mu_step(sp_q, c[0], c[1], mask, eps,
-                                         use_fused=use_fused, impl=impl)
+                                         use_fused=use_fused, impl=impl,
+                                         sanitize=sanitize)
 
         A, R = jax.lax.fori_loop(0, iters, body, (A0u, R0u))
         st = masked_normalize(
@@ -560,7 +581,7 @@ def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
 _grid_members_bcsr = donating_jit(
     _grid_members_bcsr, donate_argnums=(3, 4),
     static_argnames=("k_max", "iters", "delta", "eps", "use_fused",
-                     "impl"))
+                     "impl", "sanitize"))
 
 
 @functools.lru_cache(maxsize=64)
@@ -569,7 +590,8 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
                             schedule: str = "batched", delta: float = 0.02,
                             iters: int = 200, dtype=jnp.float32,
                             key_ndim: int = 2, use_fused: bool = False,
-                            fused_impl: str = "auto"):
+                            fused_impl: str = "auto",
+                            sanitize: bool = False):
     """The cross-k grid program on the ("pod", "data", "model") mesh: one
     shard_map program whose flattened (k, q) cell axis rides the
     pod/`ENSEMBLE_AXIS`, built from the same ``dist.engine.get_mu_iter``
@@ -611,7 +633,7 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
         raise ValueError(f"n={n} must divide the ({gr}, {gc}) grid")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl)
+                            fused_impl=fused_impl, sanitize=sanitize)
     it = get_mu_iter(operand, schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -687,8 +709,9 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
     k_max = max(cfg.ks)
     _require_random_init(cfg, "the cross-k grid program")
     fused = _fused_opts(cfg)
+    sanitize = _sanitize_opt(cfg)
     mesh_fused = dict(use_fused=fused["use_fused"],
-                      fused_impl=fused["impl"])
+                      fused_impl=fused["impl"], sanitize=sanitize)
     sharded = X if _is_sharded_bcsr(X) else None
     if mesh is not None:
         ids = jnp.asarray([q for _, q in cells], dtype=jnp.int32)
@@ -726,14 +749,15 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
                                         sp.data.dtype)
         A, R, errs = _grid_members_bcsr(
             sp, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
-            delta=cfg.perturbation_delta, eps=EPS_DEFAULT, **fused)
+            delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
+            sanitize=sanitize, **fused)
         return EnsembleResult(A=A, R=R, errors=errs)
     m, n, _ = X.shape
     keys, kvals, A0, R0 = grid_init(cells, cfg, n, m, k_max, X.dtype)
     A, R, errs = _grid_members(
         X, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
         schedule=cfg.schedule, delta=cfg.perturbation_delta,
-        eps=EPS_DEFAULT)
+        eps=EPS_DEFAULT, sanitize=sanitize)
     return EnsembleResult(A=A, R=R, errors=errs)
 
 
@@ -799,7 +823,8 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
         ids = jnp.asarray(members, dtype=jnp.int32)
         fused = _fused_opts(cfg)
         mesh_fused = dict(use_fused=fused["use_fused"],
-                          fused_impl=fused["impl"])
+                          fused_impl=fused["impl"],
+                          sanitize=_sanitize_opt(cfg))
         if sharded is not None:
             _require_random_init(cfg, "the BCSR mesh ensemble")
             prog = make_mesh_ensemble_bcsr(
@@ -832,7 +857,7 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
             A, R, errs = _batched_members_bcsr(
                 sp, keys, k=k, iters=cfg.rescal_iters,
                 delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
-                **_fused_opts(cfg))
+                sanitize=_sanitize_opt(cfg), **_fused_opts(cfg))
             return EnsembleResult(A=A, R=R, errors=errs)
         if mode == "loop":
             return _loop_members_bcsr(sp, keys, k, cfg)
@@ -840,7 +865,8 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
     if mode == "batched":
         A, R, errs = _batched_members(
             X, keys, k=k, iters=cfg.rescal_iters, schedule=cfg.schedule,
-            init=cfg.init, delta=cfg.perturbation_delta, eps=EPS_DEFAULT)
+            init=cfg.init, delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
+            sanitize=_sanitize_opt(cfg))
         return EnsembleResult(A=A, R=R, errors=errs)
     if mode == "loop":
         return _loop_members(X, keys, members, k, cfg)

@@ -29,6 +29,11 @@ class RescalkConfig:
     # the kernels/ops.py dispatch: auto | pallas | interpret | ref
     use_fused_kernel: bool = False
     fused_impl: str = "auto"
+    # runtime factor sanitizer (repro.analysis.sanitizer): finite /
+    # non-negative / masked-columns-zero asserts inside the MU programs.
+    # Static flag — flipping it retraces, so the default False build is
+    # bit-identical (zero extra compiled programs; check_compiles.py gate)
+    sanitize: bool = False
 
     @property
     def ks(self) -> list[int]:

@@ -13,7 +13,6 @@ import time
 from typing import Any, Callable
 
 import jax
-import numpy as np
 
 from repro import ckpt
 from repro.dist.elastic import StragglerMonitor

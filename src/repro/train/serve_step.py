@@ -10,8 +10,6 @@ all-gathers.  Cache buffers are donated so decode updates in place.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

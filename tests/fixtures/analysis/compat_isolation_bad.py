@@ -1,0 +1,20 @@
+"""True positive: version-dependent JAX API + feature probes outside
+dist/compat.py."""
+import jax
+from jax.sharding import AxisType            # versioned attr import
+
+
+def make_grid(devices):
+    if hasattr(jax, "make_mesh"):            # hasattr probe on jax
+        return jax.make_mesh((2, 2), ("x", "y"))   # banned call
+    return None
+
+
+def jax_is_new() -> bool:
+    return jax.__version__ >= "0.5"          # raw version string
+
+
+try:
+    import jax.experimental.shard_map        # try/except import gate
+except ImportError:
+    jax = None

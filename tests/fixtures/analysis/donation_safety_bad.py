@@ -1,0 +1,14 @@
+"""True positive: a donated buffer read again after the donating call."""
+import jax
+
+
+def _mu_impl(x, acc):
+    return acc + x
+
+
+step = jax.jit(_mu_impl, donate_argnums=(1,))
+
+
+def run(x, acc):
+    out = step(x, acc)
+    return out + acc        # acc was donated: garbage on TPU/GPU

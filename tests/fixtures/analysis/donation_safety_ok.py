@@ -1,0 +1,16 @@
+"""Near miss: the donated name is rebound before any later read."""
+import jax
+import jax.numpy as jnp
+
+
+def _mu_impl(x, acc):
+    return acc + x
+
+
+step = jax.jit(_mu_impl, donate_argnums=(1,))
+
+
+def run(x, acc):
+    out = step(x, acc)
+    acc = jnp.zeros_like(out)      # rebound: the old buffer is gone
+    return out + acc

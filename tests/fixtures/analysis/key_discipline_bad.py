@@ -1,0 +1,8 @@
+"""True positive: one key consumed by two draws on the same path."""
+import jax
+
+
+def init_params(key, n):
+    w = jax.random.uniform(key, (n, n))
+    b = jax.random.normal(key, (n,))         # same key, second draw
+    return w, b

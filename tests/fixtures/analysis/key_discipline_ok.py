@@ -1,0 +1,14 @@
+"""Near miss: two draws from the same key name, but on mutually
+exclusive branches (early return) — at most one executes."""
+import jax
+
+
+def init_params(key, n, uniform=False):
+    if uniform:
+        return jax.random.uniform(key, (n, n))
+    return jax.random.normal(key, (n, n))
+
+
+def init_pair(key, n):
+    kw, kb = jax.random.split(key)
+    return jax.random.uniform(kw, (n, n)), jax.random.normal(kb, (n,))

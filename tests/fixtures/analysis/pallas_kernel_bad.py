@@ -1,0 +1,27 @@
+"""True positive: bare-int pl.load index, and a kernel that accumulates a
+VMEM-resident output panel with no budget-gated dispatcher anywhere."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.dist.compat import tpu_compiler_params
+
+
+def _accum_kernel(x_ref, o_ref):
+    # bare int index element: rejected by older pallas lowerings
+    v = pl.load(x_ref, (0, pl.ds(0, 128)))
+    pl.store(o_ref, (0, pl.ds(0, 128)), v)
+
+
+def accum(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _accum_kernel,
+        grid=(m, n // 128),
+        in_specs=[pl.BlockSpec((1, 128), lambda i, j: (i, j))],
+        # index_map ignores grid axis i -> the out panel stays resident
+        out_specs=pl.BlockSpec((1, 128), lambda i, j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(x)

@@ -1,0 +1,27 @@
+"""Near miss: the same kernel shape done right — pl.ds everywhere
+(including through a local index variable), every grid axis used by the
+out index_map, and compiler params from the compat shim."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.dist.compat import tpu_compiler_params
+
+
+def _copy_kernel(x_ref, o_ref):
+    idx = (pl.ds(0, 1), pl.ds(0, 128))
+    v = pl.load(x_ref, idx)
+    pl.store(o_ref, (pl.ds(0, 1), pl.ds(0, 128)), v)
+
+
+def copy(x):
+    m, n = x.shape
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m, n // 128),
+        in_specs=[pl.BlockSpec((1, 128), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+    )(x)

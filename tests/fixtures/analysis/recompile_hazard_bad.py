@@ -1,0 +1,22 @@
+"""True positive: numpy inside a jitted body, and a static arg derived
+from an array value."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def normalize(x):
+    total = np.sum(x)                        # host numpy in traced body
+    return x / total
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def repeat(x, n):
+    return jax.numpy.tile(x, n)
+
+
+def sweep(x):
+    # value-derived static: every distinct max retraces
+    return repeat(x, int(x.max()))

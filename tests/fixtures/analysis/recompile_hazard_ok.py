@@ -1,0 +1,26 @@
+"""Near miss: numpy on the host path only, and statics derived from
+shapes (compile-time constants), not array values."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def normalize(x):
+    return x / jnp.sum(x)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def repeat(x, n):
+    return jnp.tile(x, n)
+
+
+def sweep(x):
+    return repeat(x, int(x.shape[0]))        # shape-derived static: fine
+
+
+def host_summary(x):
+    # not jit-reachable: plain host helper, numpy is fine here
+    return np.asarray(x).mean()

@@ -1,0 +1,8 @@
+"""True positive: an MU-step implementation that never threads the
+runtime sanitizer hook."""
+
+
+def mu_step_custom(X, A, R, eps=1e-16):
+    num = X.sum(axis=0) @ A
+    A = A * num / (num + eps)
+    return A, R

@@ -1,0 +1,15 @@
+"""Near miss: an MU step that threads sanitize_state, plus a factory
+whose name merely contains the pattern (exempt by prefix)."""
+from repro.analysis.sanitizer import sanitize_state
+
+
+def mu_step_custom(X, A, R, eps=1e-16, sanitize=False):
+    num = X.sum(axis=0) @ A
+    A = A * num / (num + eps)
+    return sanitize_state(A, R, where="fixture", enabled=sanitize)
+
+
+def make_mu_step(cfg):
+    def body(X, A, R):
+        return mu_step_custom(X, A, R, sanitize=cfg.sanitize)
+    return body

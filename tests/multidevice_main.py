@@ -36,7 +36,7 @@ def lowrank(key, n=32, m=3, k=4):
 
 
 def check_dist_rescal_equals_single():
-    from repro.core import DistRescalConfig, rescal
+    from repro.core import DistRescalConfig
     from repro.core.rescal import _run_iters, init_factors
     from repro.core.rescal_dist import make_dist_error, make_dist_step
     key = jax.random.PRNGKey(0)
@@ -61,7 +61,6 @@ def check_dist_rescal_equals_single():
 
 def check_dist_rescal_sparse_equals_dense():
     from repro.core import DistRescalConfig
-    from repro.core import sparse as sp
     from repro.core.rescal_dist import (make_dist_step,
                                         make_dist_step_sparse)
     from repro.core.rescal import init_factors
@@ -149,7 +148,6 @@ def check_fused_engine_matches_reference_bcsr():
     via kernels/bcsr_fused — must match the spmm/spmm_t segment-sum
     oracle schedule at <= 1e-5 on the real 2x2 grid, under the jnp ref
     dispatch AND the actual Pallas kernel body (interpret)."""
-    from repro.core import sparse as spm
     from repro.core.rescal import init_factors
     from repro.dist.engine import DistRescalConfig, make_dist_step_sparse
     key = jax.random.PRNGKey(8)

@@ -4,7 +4,6 @@ import itertools
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clustering import custom_cluster

@@ -1,5 +1,4 @@
 """Data pipeline: determinism (the restart-replay contract) + generators."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

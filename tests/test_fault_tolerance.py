@@ -1,5 +1,4 @@
 """Fault tolerance: checkpoint/restart replay, stragglers, elasticity."""
-import jax
 import numpy as np
 import pytest
 

@@ -1,8 +1,6 @@
 """The trip-count-aware HLO cost model vs XLA's own analysis (unrolled)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo_costs, hlo_stats
 

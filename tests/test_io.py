@@ -5,13 +5,13 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.io import (COOBuilder, DatasetManifest, Vocab, VirtualSpec,
+from repro.core import sparse as sp
+from repro.io import (COOBuilder, DatasetManifest, VirtualSpec,
                       coo_to_bcsr, ingest_npz, ingest_tsv, manifest_of,
                       operand_dims, partition_coo, read_triples_tsv,
                       virtual_bcsr_shard, virtual_dense_full,
                       virtual_dense_shard, virtual_sharded_bcsr,
                       virtual_shard_nnzb)
-from repro.core import sparse as sp
 
 
 TSV = """\

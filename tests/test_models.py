@@ -172,7 +172,6 @@ class TestSlidingWindow:
         W = 8
         out = sliding_window_attention(q, k, v, window=W, chunk=16)
         # reference: full attention with band mask
-        from repro.kernels.ref import ref_attention
         qh = q.transpose(0, 2, 1, 3)
         kh = k.transpose(0, 2, 1, 3)
         vh = v.transpose(0, 2, 1, 3)

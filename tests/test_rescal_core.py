@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_lowrank
@@ -91,8 +90,7 @@ class TestRescalDriver:
         assert float(err_nnd) < 0.1                  # converges from NNDSVD
 
     def test_randomized_eigh_matches_exact(self, key):
-        from repro.core.nndsvd import (nndsvd_init_A_randomized,
-                                       symmetric_surrogate)
+        from repro.core.nndsvd import symmetric_surrogate
         X, _, _ = make_lowrank(key, n=48, m=3, k=3)
         C = symmetric_surrogate(X)
         w_exact, V = jnp.linalg.eigh(C)

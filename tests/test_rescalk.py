@@ -1,5 +1,4 @@
 """End-to-end model selection (Alg. 1): recover the planted k."""
-import jax
 import numpy as np
 import pytest
 

@@ -8,15 +8,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.selection import (CRITERIA, GridChunk, RescalkConfig,
-                             SelectionReport, SweepInterrupted,
-                             SweepScheduler, WorkUnit, criteria, plan_sweep,
-                             run_ensemble, run_sweep_batched, unit_keys)
-from repro.core.rescalk import rescalk
 from repro.core.rescal import (column_mask, crop_state, init_factors,
                                mask_state, masked_mu_step, masked_normalize,
                                mu_step_batched, mu_step_sliced, normalize,
                                pad_state, rel_error)
+from repro.core.rescalk import rescalk
+from repro.selection import (CRITERIA, GridChunk, RescalkConfig,
+                             SelectionReport, SweepInterrupted,
+                             SweepScheduler, WorkUnit, criteria, plan_sweep,
+                             run_ensemble, run_sweep_batched, unit_keys)
 
 
 def small_tensor(n=24, m=2, k=3, seed=0):
