@@ -1,25 +1,32 @@
-"""Benchmark plumbing: timing, CSV rows, artifact IO."""
+"""Benchmark plumbing: timing, CSV rows, artifact IO.
+
+Timing goes through ``repro.obs.trace.timed`` — one clock for benchmarks
+and the sweep tracer, and every benchmark repetition shows up as a span
+when a tracer is installed (pure stopwatch otherwise).
+"""
 from __future__ import annotations
 
 import json
 import os
-import time
 from typing import Callable
 
 import jax
 
+from repro.obs.trace import timed
+
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
 
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            name: str = "bench/call") -> float:
     """Median wall seconds per call (blocks on jax async dispatch)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
+    for i in range(iters):
+        with timed(name, rep=i) as t:
+            jax.block_until_ready(fn(*args))
+        times.append(t.seconds)
     times.sort()
     return times[len(times) // 2]
 

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import os
 import tempfile
-import time
 
 import jax
 import numpy as np
@@ -29,6 +28,8 @@ from repro.io import (VirtualSpec, ingest_tsv, manifest_of, partition_coo,
                       virtual_sharded_bcsr)
 from repro.selection import (RescalkConfig, SweepScheduler, run_ensemble,
                              run_ensemble_bcsr_dense_reference)
+
+from repro.obs.trace import timed
 
 from .common import Report
 
@@ -58,12 +59,11 @@ def bench_ingest(report: Report, bench: dict) -> None:
     with tempfile.TemporaryDirectory() as d:
         path = os.path.join(d, "triples.tsv")
         _powerlaw_tsv(path)
-        t0 = time.perf_counter()
-        coo, vocab = ingest_tsv(path)
-        t_ingest = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        sharded = partition_coo(coo, bs=64, grid=2)
-        t_part = time.perf_counter() - t0
+        with timed("bench/ingest_tsv") as t_ing:
+            coo, vocab = ingest_tsv(path)
+        with timed("bench/partition") as t_prt:
+            sharded = partition_coo(coo, bs=64, grid=2)
+        t_ingest, t_part = t_ing.seconds, t_prt.seconds
     man = manifest_of(sharded)
     row = dict(
         n=coo.n, m=coo.m, nnz=coo.nnz, nnzb=int(sharded.nnzb.sum()),
@@ -104,9 +104,9 @@ def bench_virtual_exascale(report: Report, bench: dict) -> None:
     cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=r,
                         rescal_iters=12, regress_iters=8, seed=0)
 
-    t0 = time.perf_counter()
-    operand = virtual_sharded_bcsr(spec).to_bcsr()    # grid=1 -> merged
-    t_gen = time.perf_counter() - t0
+    with timed("bench/virtual_generate") as t:
+        operand = virtual_sharded_bcsr(spec).to_bcsr()    # grid=1 -> merged
+    t_gen = t.seconds
     # accounted peak residency of the batched ensemble program: the
     # unperturbed operand + r live member copies of the stored blocks,
     # plus the factor ensembles (A dominates R at these shapes)
@@ -114,9 +114,9 @@ def bench_virtual_exascale(report: Report, bench: dict) -> None:
     factor_bytes = r * (operand.n * k_max + spec.m * k_max * k_max) * 4
     peak_bytes = man.resident_bytes * (1 + r) + factor_bytes
 
-    t0 = time.perf_counter()
-    res = SweepScheduler(cfg).run(operand)
-    t_sweep = time.perf_counter() - t0
+    with timed("bench/virtual_sweep") as t:
+        res = SweepScheduler(cfg).run(operand)
+    t_sweep = t.seconds
 
     row = dict(
         spec=spec.spec_string(), nnzb=int(operand.nnzb),

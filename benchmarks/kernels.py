@@ -93,9 +93,9 @@ def run(report: Report | None = None) -> Report:
             mesh, DistRescalConfig(use_fused_kernel=True, fused_impl="ref"),
             n=n, iters=1)
         t_o = time_fn(step_o, data, rows, cols, st.A, st.R,
-                      warmup=2, iters=5)
+                      warmup=2, iters=5, name="bench/mu_oracle")
         t_f = time_fn(step_f, data, rows, cols, st.A, st.R,
-                      warmup=2, iters=5)
+                      warmup=2, iters=5, name="bench/mu_fused")
         speedup = t_o / t_f
         acct = _accounting(s, k)
         tag = f"n{n}m{m}bs{bs}k{k}" + (f"skew{skew:g}" if skew else "")

@@ -23,7 +23,6 @@ Two sections:
 from __future__ import annotations
 
 import os
-import time
 
 import jax
 import numpy as np
@@ -31,6 +30,7 @@ import numpy as np
 from repro.core import RescalkConfig, rescalk
 from repro.data.synthetic import synthetic_rescal
 from repro.dist.compat import capture_compiles
+from repro.obs.trace import timed
 from repro.selection import SweepScheduler, run_ensemble
 
 from .common import Report, time_fn
@@ -70,10 +70,9 @@ def _timed_sweep(X, cfg, mode: str) -> tuple[float, int]:
     """Cold wall seconds + ensemble-program compile count for one sweep."""
     jax.clear_caches()
     with capture_compiles() as log:
-        t0 = time.perf_counter()
-        SweepScheduler(cfg, mode=mode).run(X)
-        dt = time.perf_counter() - t0
-    return dt, log.count(*_ENSEMBLE_PROGRAMS)
+        with timed(f"bench/sweep_{mode}") as t:
+            SweepScheduler(cfg, mode=mode).run(X)
+    return t.seconds, log.count(*_ENSEMBLE_PROGRAMS)
 
 
 def run(report: Report | None = None, quick: bool = True) -> Report:
@@ -87,9 +86,9 @@ def run(report: Report | None = None, quick: bool = True) -> Report:
         cfg = RescalkConfig(k_min=2, k_max=k_true + 2, n_perturbations=r,
                             rescal_iters=250, regress_iters=60, seed=i,
                             init="nndsvd")   # paper §6.1.3
-        t0 = time.perf_counter()
-        res = rescalk(X, cfg)                # batched scheduler path
-        dt = time.perf_counter() - t0
+        with timed("bench/rescalk") as t:
+            res = rescalk(X, cfg)            # batched scheduler path
+        dt = t.seconds
         med = res.per_k[res.k_opt].A_median
         A = np.asarray(A)
         corrs = []

@@ -1,0 +1,180 @@
+#!/usr/bin/env python
+"""Validate a ``rescalk_run --trace DIR`` artifact set.
+
+Structural checks on the trace contract (README "Observability"):
+
+  trace.jsonl        every line parses as one JSON event; B/E spans nest
+                     LIFO per (pid, tid) and every B has its E
+  trace_chrome.json  valid Chrome ``trace_event`` JSON with a non-empty
+                     ``traceEvents`` list
+  --report R.json    every executed unit in the SelectionReport has a
+                     ``sched/execute`` span; every checkpoint-reused unit
+                     has a ``sched/restore`` span
+  --expect-metrics   metrics.npz holds at least one non-empty
+                     ``*.rel_error`` trajectory (a traced program's
+                     per-iteration convergence actually reached the host)
+
+Exit codes follow the artifact-guard convention: 2 + one ``[trace-check]
+ERROR:`` line when the artifacts are missing/malformed (cannot validate),
+1 when a structural check fails, 0 when the trace is well-formed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+class TraceError(Exception):
+    """Missing/malformed artifact — exit 2, the check cannot run."""
+
+
+def load_events(trace_dir: str) -> list[dict]:
+    path = os.path.join(trace_dir, "trace.jsonl")
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except OSError as ex:
+        raise TraceError(f"cannot read {path}: {ex.strerror or ex}")
+    events = []
+    for i, line in enumerate(lines, 1):
+        if not line.strip():
+            continue
+        try:
+            ev = json.loads(line)
+        except json.JSONDecodeError as ex:
+            raise TraceError(f"{path}:{i}: not valid JSON: {ex}")
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            raise TraceError(f"{path}:{i}: event needs 'ph' + 'name': "
+                             f"{line[:80]!r}")
+        events.append(ev)
+    if not events:
+        raise TraceError(f"{path}: no events")
+    return events
+
+
+def check_nesting(events: list[dict]) -> list[str]:
+    """B/E spans must close LIFO per (pid, tid) thread."""
+    problems = []
+    stacks: dict[tuple, list[str]] = {}
+    for ev in events:
+        key = (ev.get("pid"), ev.get("tid"))
+        if ev["ph"] == "B":
+            stacks.setdefault(key, []).append(ev["name"])
+        elif ev["ph"] == "E":
+            stack = stacks.setdefault(key, [])
+            if not stack:
+                problems.append(f"E {ev['name']!r} with no open span")
+            elif stack[-1] != ev["name"]:
+                problems.append(f"E {ev['name']!r} closes {stack[-1]!r} "
+                                f"(spans must nest)")
+                stack.pop()
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            problems.append(f"unclosed span(s) on {key}: {stack}")
+    return problems
+
+
+def check_chrome(trace_dir: str) -> list[str]:
+    path = os.path.join(trace_dir, "trace_chrome.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as ex:
+        raise TraceError(f"cannot read {path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise TraceError(f"{path} is not valid JSON: {ex}")
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        raise TraceError(f"{path}: expected an object with a 'traceEvents' "
+                         f"list")
+    if not doc["traceEvents"]:
+        return [f"{path}: traceEvents is empty"]
+    bad = [e for e in doc["traceEvents"]
+           if not isinstance(e, dict) or "ph" not in e]
+    return [f"{path}: {len(bad)} events lack 'ph'"] if bad else []
+
+
+def check_report_coverage(events: list[dict], report_path: str) -> list[str]:
+    """Every scheduler unit must have left its span in the trace."""
+    try:
+        with open(report_path) as f:
+            report = json.load(f)
+    except OSError as ex:
+        raise TraceError(f"cannot read {report_path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise TraceError(f"{report_path} is not valid JSON: {ex}")
+    units = report.get("units")
+    if not isinstance(units, list) or not units:
+        raise TraceError(f"{report_path}: no 'units' to cross-check")
+    spanned = {(ev["name"], (ev.get("args") or {}).get("uid"))
+               for ev in events if ev["ph"] == "B"}
+    problems = []
+    for u in units:
+        uid = u.get("uid")
+        want = "sched/restore" if u.get("reused") else "sched/execute"
+        if (want, uid) not in spanned:
+            problems.append(f"unit {uid!r} has no {want!r} span")
+    return problems
+
+
+def check_metrics(trace_dir: str) -> list[str]:
+    import numpy as np
+    path = os.path.join(trace_dir, "metrics.npz")
+    try:
+        data = np.load(path)
+    except OSError as ex:
+        raise TraceError(f"cannot read {path}: {ex.strerror or ex}")
+    except Exception as ex:  # zipfile/format errors
+        raise TraceError(f"{path} is not a readable npz: {ex}")
+    with data:
+        rel = [k for k in data.files if k.endswith(".rel_error")
+               and data[k].size > 0]
+        if not rel:
+            return [f"{path}: no non-empty *.rel_error trajectory "
+                    f"(keys: {sorted(data.files)})"]
+    return []
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace_dir", help="directory written by --trace")
+    ap.add_argument("--report", default=None,
+                    help="SelectionReport JSON to cross-check unit spans")
+    ap.add_argument("--expect-metrics", action="store_true",
+                    help="require a non-empty rel_error trajectory in "
+                         "metrics.npz")
+    args = ap.parse_args(argv)
+
+    try:
+        if not os.path.isdir(args.trace_dir):
+            raise TraceError(f"{args.trace_dir} is not a directory")
+        events = load_events(args.trace_dir)
+        problems = check_nesting(events)
+        problems += check_chrome(args.trace_dir)
+        if args.report:
+            problems += check_report_coverage(events, args.report)
+        if args.expect_metrics:
+            problems += check_metrics(args.trace_dir)
+    except TraceError as ex:
+        print(f"[trace-check] ERROR: {ex}")
+        return 2
+
+    spans = sum(1 for e in events if e["ph"] == "B")
+    compiles = sum(1 for e in events if e["name"] == "xla/compile")
+    if problems:
+        for p in problems:
+            print(f"[trace-check] FAIL {p}")
+        print(f"[trace-check] {len(problems)} problem(s) in "
+              f"{args.trace_dir}")
+        return 1
+    print(f"[trace-check] OK {args.trace_dir}: {len(events)} events, "
+          f"{spans} spans, {compiles} compile events")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

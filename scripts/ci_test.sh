@@ -143,6 +143,26 @@ grep -q "selected k_opt" "$SMOKE_DIR/ingest.log"
 grep -q "^\[io\]" "$SMOKE_DIR/ingest.log"
 echo "== ingest smoke OK =="
 
+echo "== trace smoke: --trace artifact set is well-formed and complete =="
+# The observability contract end to end (README "Observability"): the same
+# tiny TSV sweep with --trace must emit a span for every scheduler unit, a
+# per-iteration rel_error trajectory in metrics.npz, a Perfetto-loadable
+# trace_chrome.json and the cost-table summary; check_trace.py validates
+# the structure and must refuse (exit 2) when the artifacts are absent.
+python -m repro.launch.rescalk_run --data "$SMOKE_DIR/triples.tsv" --bs 8 \
+    --k-min 2 --k-max 2 --r 2 --iters 30 --trace "$SMOKE_DIR/trace" \
+    --report "$SMOKE_DIR/trace_report.json" | tee "$SMOKE_DIR/trace.log"
+grep -q "selected k_opt" "$SMOKE_DIR/trace.log"
+grep -q "^\[obs\]" "$SMOKE_DIR/trace.log"
+python scripts/check_trace.py "$SMOKE_DIR/trace" \
+    --report "$SMOKE_DIR/trace_report.json" --expect-metrics
+if python scripts/check_trace.py "$SMOKE_DIR/no-such-trace" \
+        > "$SMOKE_DIR/trace_neg.log" 2>&1; then
+    echo "trace check passed on a missing dir"; exit 1
+else test $? -eq 2; fi
+grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/trace_neg.log"
+echo "== trace smoke OK =="
+
 echo "== perf gate: ensemble, grid and fused-kernel speedups =="
 # Soft regression gate on the recorded trajectories (refreshed by
 # `python -m benchmarks.run --only model_selection` / `--only kernels`):

@@ -3,6 +3,7 @@ from . import (  # noqa: F401
     compat_isolation,
     donation_safety,
     key_discipline,
+    obs_coverage,
     pallas_kernel,
     recompile_hazard,
     sanitizer_coverage,

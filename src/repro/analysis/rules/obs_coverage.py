@@ -1,0 +1,56 @@
+"""obs-metrics-coverage: every MU step threads the telemetry hook.
+
+The observability layer (repro.obs) only sees convergence if every
+MU-step implementation stages ``record_metrics(...)`` behind its static
+``trace_metrics`` flag — a step that skips the hook is a silent hole in
+the per-iteration trajectories (`--trace` runs would report convergence
+for some programs and nothing for others).  Same shape as
+``nonneg-sanitizer-coverage``: any function whose name matches the
+MU-step pattern (``*mu_step*`` / ``*mu_iter*``, excluding ``make_*`` /
+``get_*`` / ``build_*`` factories) must contain a ``record_metrics(...)``
+call.  The zero-cost-off contract lives at the call site (the ``if
+trace_metrics:`` guard), which this rule deliberately does not inspect —
+presence of the hook is the invariant; the jaxpr-identity tests in
+tests/test_obs.py pin the guard.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import ERROR, Finding, Rule, dotted, register
+from .sanitizer_coverage import FACTORY_PREFIXES, MU_NAME_RE
+
+HOOK_NAME = "record_metrics"
+
+
+@register
+class ObsMetricsCoverage(Rule):
+    name = "obs-metrics-coverage"
+    description = ("every MU-step implementation must stage "
+                   "record_metrics(...) behind its trace_metrics flag")
+
+    def check_file(self, src, ctx):
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not MU_NAME_RE.search(fn.name):
+                continue
+            if fn.name.startswith(FACTORY_PREFIXES):
+                continue
+            if self._calls_hook(fn):
+                continue
+            yield Finding(
+                self.name, src.rel, fn.lineno, fn.col_offset,
+                f"MU step '{fn.name}' does not call {HOOK_NAME}(...) — "
+                f"stage the repro.obs.metrics hook behind an `if "
+                f"trace_metrics:` guard so --trace covers this path",
+                ERROR)
+
+    @staticmethod
+    def _calls_hook(fn) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = dotted(node.func) or ""
+                if d.split(".")[-1] == HOOK_NAME:
+                    return True
+        return False

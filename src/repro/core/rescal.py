@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 from repro.analysis.sanitizer import sanitize_state
 from repro.dist.compat import donating_jit
+from repro.obs.metrics import record_metrics, update_ratio
 
 EPS_DEFAULT = 1e-16
 
@@ -87,7 +88,8 @@ def update_A(X: jax.Array, A: jax.Array, R: jax.Array, G: jax.Array,
 
 def mu_step_batched(X: jax.Array, state: RescalState,
                     eps: float = EPS_DEFAULT,
-                    sanitize: bool = False) -> RescalState:
+                    sanitize: bool = False,
+                    trace_metrics: bool = False) -> RescalState:
     """One MU iteration, all m slices tensorized (beyond-paper schedule)."""
     A, R = state.A, state.R
     G = gram(A)
@@ -95,12 +97,18 @@ def mu_step_batched(X: jax.Array, state: RescalState,
     A = update_A(X, A, R, G, eps)
     A, R = sanitize_state(A, R, where="core.rescal.mu_step_batched",
                           enabled=sanitize)
+    if trace_metrics:  # static flag: the False build stages nothing
+        record_metrics("core.rescal.mu_step_batched", step=state.step,
+                       rel_error=rel_error(X, A, R),
+                       a_norm=jnp.linalg.norm(A), r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(state.A, A))
     return RescalState(A=A, R=R, step=state.step + 1)
 
 
 def mu_step_sliced(X: jax.Array, state: RescalState,
                    eps: float = EPS_DEFAULT,
-                   sanitize: bool = False) -> RescalState:
+                   sanitize: bool = False,
+                   trace_metrics: bool = False) -> RescalState:
     """One MU iteration with an explicit loop over the m relation slices,
     mirroring paper Alg. 3 lines 4-21 (R[t] updated then its contribution
     to NumA/DenoA accumulated, per slice)."""
@@ -129,6 +137,11 @@ def mu_step_sliced(X: jax.Array, state: RescalState,
     A = A * num / (A @ den_kk + eps)                  # line 22
     A, R = sanitize_state(A, R, where="core.rescal.mu_step_sliced",
                           enabled=sanitize)
+    if trace_metrics:  # static flag: the False build stages nothing
+        record_metrics("core.rescal.mu_step_sliced", step=state.step,
+                       rel_error=rel_error(X, A, R),
+                       a_norm=jnp.linalg.norm(A), r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(state.A, A))
     return RescalState(A=A, R=R, step=state.step + 1)
 
 
@@ -189,7 +202,8 @@ def crop_state(state: RescalState, k: int) -> RescalState:
 def masked_mu_step(X: jax.Array, state: RescalState, mask: jax.Array,
                    eps: float = EPS_DEFAULT,
                    schedule: str = "batched",
-                   sanitize: bool = False) -> RescalState:
+                   sanitize: bool = False,
+                   trace_metrics: bool = False) -> RescalState:
     """One MU iteration on k_max-padded factors.  Same math as the plain
     schedules; the trailing mask multiply pins the padded columns to exact
     zero (multiplying active columns by 1.0 is exact, so active values are
@@ -198,6 +212,11 @@ def masked_mu_step(X: jax.Array, state: RescalState, mask: jax.Array,
     A, R = sanitize_state(st.A, st.R, mask=mask,
                           where="core.rescal.masked_mu_step",
                           enabled=sanitize)
+    if trace_metrics:  # recorded post-mask (the unmasked inner step lies)
+        record_metrics("core.rescal.masked_mu_step", step=st.step,
+                       rel_error=rel_error(X, A, R),
+                       a_norm=jnp.linalg.norm(A), r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(state.A * mask, A))
     return RescalState(A=A, R=R, step=st.step)
 
 
@@ -249,10 +268,10 @@ def reconstruct(A: jax.Array, R: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _run_iters_impl(X, state, iters: int, schedule: str, eps: float,
-                    sanitize: bool = False):
+                    sanitize: bool = False, trace_metrics: bool = False):
     step = MU_SCHEDULES[schedule]
     def body(_, s):
-        return step(X, s, eps, sanitize)
+        return step(X, s, eps, sanitize, trace_metrics)
     return jax.lax.fori_loop(0, iters, body, state)
 
 
@@ -263,14 +282,15 @@ def _run_iters_impl(X, state, iters: int, schedule: str, eps: float,
 # state as consumed.
 _run_iters = donating_jit(_run_iters_impl, donate_argnums=(1,),
                           static_argnames=("iters", "schedule", "eps",
-                                           "sanitize"))
+                                           "sanitize", "trace_metrics"))
 
 
 def rescal(X: jax.Array, k: int, *, key: jax.Array | None = None,
            iters: int = 200, schedule: str = "batched",
            eps: float = EPS_DEFAULT, init: RescalState | None = None,
            normalize_result: bool = True,
-           sanitize: bool = False) -> tuple[RescalState, jax.Array]:
+           sanitize: bool = False,
+           trace_metrics: bool = False) -> tuple[RescalState, jax.Array]:
     """Factorize X (m, n, n) at rank k.  Returns (state, rel_error).
 
     NOTE: a passed ``init`` is donated to the MU program on backends that
@@ -281,7 +301,8 @@ def rescal(X: jax.Array, k: int, *, key: jax.Array | None = None,
         if key is None:
             key = jax.random.PRNGKey(0)
         init = init_factors(key, n, m, k, dtype=X.dtype)
-    state = _run_iters(X, init, iters, schedule, eps, sanitize)
+    state = _run_iters(X, init, iters, schedule, eps, sanitize,
+                       trace_metrics)
     if normalize_result:
         state = normalize(state)
     return state, rel_error(X, state.A, state.R)

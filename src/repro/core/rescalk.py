@@ -60,7 +60,9 @@ def default_member_runner(X_q: jax.Array, k: int, key: jax.Array,
     # the same fkey both places keeps loop-mode parity with _batched_members
     state, _ = rescal(X_q, k, key=key, iters=cfg.rescal_iters,
                       schedule=cfg.schedule, init=init,
-                      sanitize=bool(getattr(cfg, "sanitize", False)))
+                      sanitize=bool(getattr(cfg, "sanitize", False)),
+                      trace_metrics=bool(getattr(cfg, "trace_metrics",
+                                                 False)))
     return state
 
 

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.sanitizer import sanitize_state
+from repro.obs.metrics import record_metrics, update_ratio
 from .rescal import EPS_DEFAULT
 
 
@@ -194,11 +195,13 @@ def sparse_products(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
 
 def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                    eps: float = EPS_DEFAULT, *, use_fused: bool = False,
-                   impl: str = "auto", sanitize: bool = False):
+                   impl: str = "auto", sanitize: bool = False,
+                   trace_metrics: bool = False):
     """One batched MU iteration on a BCSR tensor.  Identical math to the
     dense step; only the X products change — and with ``use_fused`` they
     come from ONE pass over the stored blocks (kernels/bcsr_fused.py)
     instead of the spmm + spmm_t double sweep."""
+    A_in = A
     G = A.T @ A
     XA, XTA = sparse_products(sp, A, A, use_fused=use_fused, impl=impl)
     ATXA = jnp.einsum("ia,mib->mab", A, XA)
@@ -210,13 +213,21 @@ def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     A = A * num / (A @ S + eps)
     A, R = sanitize_state(A, R, where="core.sparse.sparse_mu_step",
                           enabled=sanitize)
+    if trace_metrics:  # static flag: the False build stages nothing
+        record_metrics("core.sparse.sparse_mu_step",
+                       rel_error=sparse_rel_error(sp, A, R,
+                                                  use_fused=use_fused,
+                                                  impl=impl),
+                       a_norm=jnp.linalg.norm(A), r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(A_in, A))
     return A, R
 
 
 def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                           mask: jax.Array, eps: float = EPS_DEFAULT, *,
                           use_fused: bool = False, impl: str = "auto",
-                          sanitize: bool = False):
+                          sanitize: bool = False,
+                          trace_metrics: bool = False):
     """One MU iteration on k_max-padded factors (the BCSR twin of
     rescal.masked_mu_step): same algebra, with the padded columns of A and
     rows/cols of R pinned to exact zero after the update.  Zeros are a
@@ -225,8 +236,16 @@ def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     core/rescal.py).  The fused kernel preserves the fixed point: zero
     columns of A yield exact-zero panel columns (the panels are zeroed
     before accumulation and the tile products are plain matmuls)."""
+    A_in = A
     A, R = sparse_mu_step(sp, A, R, eps, use_fused=use_fused, impl=impl)
     A, R = A * mask, R * (mask[:, None] * mask[None, :])
+    if trace_metrics:  # recorded post-mask (the unmasked inner step lies)
+        record_metrics("core.sparse.masked_sparse_mu_step",
+                       rel_error=sparse_rel_error(sp, A, R,
+                                                  use_fused=use_fused,
+                                                  impl=impl),
+                       a_norm=jnp.linalg.norm(A), r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(A_in * mask, A))
     return sanitize_state(A, R, mask=mask,
                           where="core.sparse.masked_sparse_mu_step",
                           enabled=sanitize)

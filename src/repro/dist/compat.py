@@ -40,6 +40,7 @@ __all__ = [
     "capture_compiles",
     "cost_analysis_dict",
     "donating_jit",
+    "drain_effects",
     "make_mesh",
     "tpu_compiler_params",
 ]
@@ -173,15 +174,27 @@ class CompileLog:
 
 
 @contextlib.contextmanager
-def capture_compiles():
+def capture_compiles(sink=None):
     """Record every XLA compilation in the block as a ``CompileLog``.
 
     Implemented on ``jax.log_compiles`` + a logging handler rather than
     any private counter, and tolerant of the message rewordings across
     JAX releases (see module docstring) — the one place the compile-count
     CI guard touches a version-dependent surface.
+
+    ``sink(program, kind)`` is additionally called on every match with
+    kind "finished" or "compiling" — the live-event side channel the
+    tracer uses (``obs.Tracer.compile_event`` has this signature).  Sink
+    exceptions are swallowed: telemetry must never fail a compile.
     """
     log = CompileLog()
+
+    def _notify(name: str, kind: str) -> None:
+        if sink is not None:
+            try:
+                sink(name, kind)
+            except Exception:
+                pass
 
     class _Handler(logging.Handler):
         def emit(self, record: logging.LogRecord) -> None:
@@ -189,10 +202,12 @@ def capture_compiles():
             m = _FINISHED_RE.search(msg)
             if m:
                 log.finished.append(m.group(1))
+                _notify(m.group(1), "finished")
                 return
             m = _COMPILING_RE.match(msg)
             if m:
                 log.compiling.append(m.group(1))
+                _notify(m.group(1), "compiling")
 
     handler = _Handler(level=logging.DEBUG)
     logger = logging.getLogger("jax")
@@ -213,6 +228,15 @@ def capture_compiles():
         logger.handlers[:] = old_handlers
         logger.setLevel(old_level)
         logger.propagate = old_propagate
+
+
+def drain_effects() -> None:
+    """Block until pending jax effects (``jax.debug.callback`` et al.) have
+    run on the host — readers of the obs metrics buffer call this before
+    snapshotting.  No-op on pins without ``jax.effects_barrier``."""
+    barrier = getattr(jax, "effects_barrier", None)
+    if barrier is not None:
+        barrier()
 
 
 def cost_analysis_dict(analysis) -> dict[str, float]:

@@ -29,6 +29,11 @@ class StragglerMonitor:
         self.times: list[float] = []
         self.flagged: list[tuple[int, float]] = []
 
+    @property
+    def baseline(self) -> float | None:
+        """Current median of the non-flagged durations (None pre-warmup)."""
+        return statistics.median(self.times) if self.times else None
+
     def record(self, step: int, seconds: float) -> bool:
         """Record one step's duration; True iff it is a straggler."""
         if not self.times:                 # first step never flags (warmup)

@@ -44,9 +44,11 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# the sanitizer is dependency-light (jax + numpy, never repro.core /
-# repro.kernels), so the lazy-import rule in the module docstring holds
+# the sanitizer and obs.metrics are dependency-light (jax + numpy, never
+# repro.core / repro.kernels), so the lazy-import rule in the module
+# docstring holds
 from repro.analysis.sanitizer import sanitize_state
+from repro.obs.metrics import record_metrics, update_ratio
 from .sharding import (COL_AXIS, POD_AXIS, ROW_AXIS, bcsr_specs,
                        diag_broadcast_col_to_row, diag_broadcast_row_to_col,
                        ensemble_factor_specs, factor_specs, psum_cast)
@@ -62,6 +64,7 @@ class DistRescalConfig:
     use_fused_kernel: bool = False   # kernels/fused_bilinear single-X-pass
     fused_impl: str = "auto"         # ops.py impl: auto|pallas|interpret|ref
     sanitize: bool = False           # runtime factor checks (repro.analysis)
+    trace_metrics: bool = False      # per-iteration telemetry (repro.obs)
 
     @property
     def comm_jnp_dtype(self):
@@ -122,9 +125,16 @@ def _mu_iter_batched(Xl, Ai, R, cfg: DistRescalConfig):
     num = XART + XTAR                                            # line 14
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
          + jnp.einsum("mba,bc,mcd->ad", R, G, R))                # lines 15-19
-    Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return sanitize_state(Ai, R, where="dist.engine._mu_iter_batched",
-                          enabled=cfg.sanitize)
+    Ai_new = Ai * num / (Ai @ S + eps)                           # line 21
+    Ai_new, R = sanitize_state(Ai_new, R,
+                               where="dist.engine._mu_iter_batched",
+                               enabled=cfg.sanitize)
+    if cfg.trace_metrics:  # shard-local norms only: no collectives added
+        record_metrics("dist.engine._mu_iter_batched",
+                       a_norm=jnp.linalg.norm(Ai_new),
+                       r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(Ai, Ai_new))
+    return Ai_new, R
 
 
 def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
@@ -162,9 +172,16 @@ def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
 
     R, num, S = jax.lax.fori_loop(
         0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Xl.dtype)))
-    Ai = Ai * num / (Ai @ S + eps)                               # line 21
-    return sanitize_state(Ai, R, where="dist.engine._mu_iter_sliced",
-                          enabled=cfg.sanitize)
+    Ai_new = Ai * num / (Ai @ S + eps)                           # line 21
+    Ai_new, R = sanitize_state(Ai_new, R,
+                               where="dist.engine._mu_iter_sliced",
+                               enabled=cfg.sanitize)
+    if cfg.trace_metrics:  # shard-local norms only: no collectives added
+        record_metrics("dist.engine._mu_iter_sliced",
+                       a_norm=jnp.linalg.norm(Ai_new),
+                       r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(Ai, Ai_new))
+    return Ai_new, R
 
 
 def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
@@ -208,10 +225,16 @@ def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
     num = XART + XTAR
     S = (jnp.einsum("mab,bc,mdc->ad", R, G, R)
          + jnp.einsum("mba,bc,mcd->ad", R, G, R))
-    Ai = Ai * num / (Ai @ S + eps)
-    return sanitize_state(Ai, R,
-                          where="dist.engine._mu_iter_batched_sparse",
-                          enabled=cfg.sanitize)
+    Ai_new = Ai * num / (Ai @ S + eps)
+    Ai_new, R = sanitize_state(Ai_new, R,
+                               where="dist.engine._mu_iter_batched_sparse",
+                               enabled=cfg.sanitize)
+    if cfg.trace_metrics:  # shard-local norms only: no collectives added
+        record_metrics("dist.engine._mu_iter_batched_sparse",
+                       a_norm=jnp.linalg.norm(Ai_new),
+                       r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(Ai, Ai_new))
+    return Ai_new, R
 
 
 def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
@@ -256,10 +279,16 @@ def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
 
     R, num, S = jax.lax.fori_loop(
         0, m, body, (R, jnp.zeros_like(Ai), jnp.zeros((k, k), Ai.dtype)))
-    Ai = Ai * num / (Ai @ S + eps)
-    return sanitize_state(Ai, R,
-                          where="dist.engine._mu_iter_sliced_sparse",
-                          enabled=cfg.sanitize)
+    Ai_new = Ai * num / (Ai @ S + eps)
+    Ai_new, R = sanitize_state(Ai_new, R,
+                               where="dist.engine._mu_iter_sliced_sparse",
+                               enabled=cfg.sanitize)
+    if cfg.trace_metrics:  # shard-local norms only: no collectives added
+        record_metrics("dist.engine._mu_iter_sliced_sparse",
+                       a_norm=jnp.linalg.norm(Ai_new),
+                       r_norm=jnp.linalg.norm(R),
+                       mu_ratio=update_ratio(Ai, Ai_new))
+    return Ai_new, R
 
 
 _ITERS = {

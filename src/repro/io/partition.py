@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.sparse import BCSR, cdiv
 from repro.dist.elastic import choose_grid
+from repro.obs import trace as obs
 
 from .triples import COOTensor
 
@@ -48,17 +49,19 @@ def coo_to_bcsr(coo: COOTensor, bs: int = 128, dtype=np.float32) -> BCSR:
     """COO -> one global BCSR in the original entity order (single-host
     sweeps).  Blocks are row-major sorted; the pattern is the union over
     relation slices.  Memory is O(nnzb * bs^2), never O(n^2)."""
-    nb = cdiv(coo.n, bs)
-    brow = coo.rows // bs
-    bcol = coo.cols // bs
-    keys = brow * nb + bcol
-    ukeys, z = np.unique(keys, return_inverse=True)       # row-major sorted
-    nnzb = ukeys.shape[0]
-    data = np.zeros((coo.m, nnzb, bs, bs), dtype)
-    np.add.at(data, (coo.rels, z, coo.rows % bs, coo.cols % bs), coo.vals)
-    return BCSR(data=jnp.asarray(data),
-                block_rows=jnp.asarray(ukeys // nb, jnp.int32),
-                block_cols=jnp.asarray(ukeys % nb, jnp.int32), n=coo.n)
+    with obs.span("ingest/blockify", n=coo.n, bs=bs):
+        nb = cdiv(coo.n, bs)
+        brow = coo.rows // bs
+        bcol = coo.cols // bs
+        keys = brow * nb + bcol
+        ukeys, z = np.unique(keys, return_inverse=True)   # row-major sorted
+        nnzb = ukeys.shape[0]
+        data = np.zeros((coo.m, nnzb, bs, bs), dtype)
+        np.add.at(data, (coo.rels, z, coo.rows % bs, coo.cols % bs),
+                  coo.vals)
+        return BCSR(data=jnp.asarray(data),
+                    block_rows=jnp.asarray(ukeys // nb, jnp.int32),
+                    block_cols=jnp.asarray(ukeys % nb, jnp.int32), n=coo.n)
 
 
 # ---------------------------------------------------------------------------
@@ -291,7 +294,8 @@ def partition_coo(coo: COOTensor, *, bs: int = 128,
         weights = np.zeros(nb)
         np.add.at(weights, ukeys // nb, 1.0)
         np.add.at(weights, ukeys % nb, 1.0)
-        part = balanced_partition(weights, grid, n=coo.n, bs=bs)
+        with obs.span("ingest/balance", grid=grid, bs=bs, n=coo.n):
+            part = balanced_partition(weights, grid, n=coo.n, bs=bs)
     else:
         if part.n != coo.n:
             raise ValueError(f"partition was built for n={part.n}, "
@@ -320,17 +324,19 @@ def partition_coo(coo: COOTensor, *, bs: int = 128,
     pad = z_max - nnzb.reshape(-1)
     slot_of = pad[shard_of] + rank
 
-    data = np.zeros((g, g, coo.m, z_max, part.bs, part.bs), dtype)
-    np.add.at(data, (own_r, own_c, coo.rels, slot_of[z],
-                     coo.rows % bs, coo.cols % bs), coo.vals)
-    rows = np.zeros((g, g, z_max), np.int32)
-    cols = np.zeros((g, g, z_max), np.int32)
-    sh_i, sh_j = shard_of // g, shard_of % g
-    rows[sh_i, sh_j, slot_of] = ((ukeys // nb_loc) % nb_loc).astype(np.int32)
-    cols[sh_i, sh_j, slot_of] = (ukeys % nb_loc).astype(np.int32)
-    return ShardedBCSR(part=part, data=jnp.asarray(data),
-                       rows=jnp.asarray(rows), cols=jnp.asarray(cols),
-                       nnzb=nnzb)
+    with obs.span("ingest/shard", g=g, z_max=z_max):
+        data = np.zeros((g, g, coo.m, z_max, part.bs, part.bs), dtype)
+        np.add.at(data, (own_r, own_c, coo.rels, slot_of[z],
+                         coo.rows % bs, coo.cols % bs), coo.vals)
+        rows = np.zeros((g, g, z_max), np.int32)
+        cols = np.zeros((g, g, z_max), np.int32)
+        sh_i, sh_j = shard_of // g, shard_of % g
+        rows[sh_i, sh_j, slot_of] = ((ukeys // nb_loc)
+                                     % nb_loc).astype(np.int32)
+        cols[sh_i, sh_j, slot_of] = (ukeys % nb_loc).astype(np.int32)
+        return ShardedBCSR(part=part, data=jnp.asarray(data),
+                           rows=jnp.asarray(rows), cols=jnp.asarray(cols),
+                           nnzb=nnzb)
 
 
 def partition_dense(X, *, bs: int = 128, grid: int = 1,

@@ -195,18 +195,23 @@ class COOBuilder:
 def ingest_tsv(path: str, *, chunk: int = DEFAULT_CHUNK
                ) -> tuple[COOTensor, Vocab]:
     """One-pass TSV ingest: build the vocab while accumulating COO chunks."""
+    from repro.obs import trace as obs
     vocab = Vocab()
     builder = COOBuilder()
-    for heads, rels, tails, vals in read_triples_tsv(path, chunk=chunk):
-        h, r, t = vocab.encode(heads, rels, tails)
-        builder.add(r, h, t, vals)
-    return builder.finalize(n=vocab.n, m=vocab.m), vocab
+    with obs.span("ingest/tsv", path=path, chunk=chunk):
+        for heads, rels, tails, vals in read_triples_tsv(path, chunk=chunk):
+            h, r, t = vocab.encode(heads, rels, tails)
+            builder.add(r, h, t, vals)
+        coo = builder.finalize(n=vocab.n, m=vocab.m)
+    return coo, vocab
 
 
 def ingest_npz(path: str, *, n: int | None = None, m: int | None = None,
                chunk: int = DEFAULT_CHUNK) -> COOTensor:
     """Chunked NPZ COO ingest (ids already assigned upstream)."""
+    from repro.obs import trace as obs
     builder = COOBuilder()
-    for rows, rels, cols, vals in read_coo_npz(path, chunk=chunk):
-        builder.add(rels, rows, cols, vals)
-    return builder.finalize(n=n, m=m)
+    with obs.span("ingest/npz", path=path, chunk=chunk):
+        for rows, rels, cols, vals in read_coo_npz(path, chunk=chunk):
+            builder.add(rels, rows, cols, vals)
+        return builder.finalize(n=n, m=m)

@@ -89,6 +89,11 @@ def build_parser() -> argparse.ArgumentParser:
                     help="runtime factor sanitizer inside the MU programs "
                          "(finite / non-negative / masked-zero asserts; "
                          "repro.analysis.sanitizer)")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write trace artifacts to DIR (trace.jsonl, "
+                         "trace_chrome.json, metrics.npz, summary.txt) and "
+                         "stage per-iteration convergence metrics "
+                         "(cfg.trace_metrics; repro.obs)")
     return ap
 
 
@@ -136,9 +141,10 @@ def load_operand(args):
     return sp, None
 
 
-def main():
-    args = build_parser().parse_args()
-
+def _run(args):
+    """Plan and run the sweep; returns (operand, report | None) for the
+    trace-artifact writer (report is whatever the scheduler produced — None
+    when the sweep was interrupted before the reduce)."""
     X, A_true = load_operand(args)
     from repro.io import operand_dims
     m, n = operand_dims(X)
@@ -148,7 +154,8 @@ def main():
     cfg = RescalkConfig(k_min=args.k_min, k_max=args.k_max,
                         n_perturbations=args.r, rescal_iters=args.iters,
                         schedule=args.schedule, init=args.init,
-                        sanitize=args.sanitize)
+                        sanitize=args.sanitize,
+                        trace_metrics=bool(args.trace))
     if args.grid_chunk is not None and args.mode != "grid":
         raise SystemExit("--grid-chunk requires --mode grid")
     sched = SweepScheduler(cfg, mode=args.mode, ckpt_dir=args.ckpt_dir,
@@ -163,7 +170,7 @@ def main():
         # one source of truth: the exception formats its own resumable /
         # not-checkpointed wording (ci_test.sh greps this line)
         print(f"[sweep] {stop}")
-        return
+        return X, sched.report
 
     print("\n" + res.summary())
     print(f"\nselected k_opt = {res.k_opt}"
@@ -180,6 +187,69 @@ def main():
                  for c in range(args.k_true)]
         print(f"feature correlation vs ground truth: "
               f"min={min(corrs):.3f} mean={np.mean(corrs):.3f}")
+    return X, sched.report
+
+
+def _write_trace_artifacts(trace_dir, tracer, buf, report, operand, iters):
+    """Flush the sweep's trace into its on-disk artifact set (the contract
+    README "Observability" documents and scripts/check_trace.py validates)."""
+    import os
+
+    from repro.dist.compat import drain_effects
+    from repro.obs import costs as obs_costs
+
+    # drain in-flight debug callbacks so metrics.npz sees every iteration
+    drain_effects()
+    tracer.export_chrome(os.path.join(trace_dir, "trace_chrome.json"))
+    buf.save_npz(os.path.join(trace_dir, "metrics.npz"))
+    parts = [tracer.summarize(), "", buf.summarize()]
+    if report is not None and report.units:
+        op = operand.to_bcsr() if hasattr(operand, "to_bcsr") else operand
+        ks = sorted({k for rec in report.units
+                     for k in obs_costs.unit_ks(rec)})
+        measured = obs_costs.measure_mu_costs(op, ks)
+        rows = obs_costs.cost_table(report.units, op, iters=iters,
+                                    measured=measured)
+        parts += ["", obs_costs.format_cost_table(rows)]
+    with open(os.path.join(trace_dir, "summary.txt"), "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"[obs] trace artifacts in {trace_dir}: trace.jsonl "
+          f"trace_chrome.json metrics.npz summary.txt")
+    print(f"[obs] {len(tracer.events)} events, {len(buf)} metric records"
+          + (f" ({buf.dropped} dropped)" if buf.dropped else ""))
+
+
+def main():
+    args = build_parser().parse_args()
+    if args.trace is None:
+        _run(args)
+        return
+
+    import os
+
+    from repro.dist.compat import capture_compiles
+    from repro.obs import metrics as obs_metrics
+    from repro.obs import trace as obs
+
+    os.makedirs(args.trace, exist_ok=True)
+    tracer = obs.Tracer(args.trace, meta={"argv": vars(args)})
+    buf = obs_metrics.MetricsBuffer()
+    prev_tracer = obs.install(tracer)
+    prev_buf = obs_metrics.install_buffer(buf)
+    operand, report = None, None
+    try:
+        with capture_compiles(sink=tracer.compile_event):
+            operand, report = _run(args)
+    finally:
+        # interrupted sweeps still get their artifacts (trace.jsonl is
+        # already flushed incrementally; this adds the derived views)
+        try:
+            _write_trace_artifacts(args.trace, tracer, buf, report,
+                                   operand, args.iters)
+        finally:
+            obs_metrics.install_buffer(prev_buf)
+            obs.install(prev_tracer)
+            tracer.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""repro.obs — zero-cost-off telemetry.
+
+Three halves (ISSUE 7):
+
+* `obs.trace`   — host spans / structured events (JSONL + Chrome export).
+* `obs.metrics` — per-iteration trajectories out of the jitted MU programs,
+  staged only under the static `trace_metrics` flag.
+* `obs.costs`   — achieved-vs-theoretical FLOP/byte accounting per unit.
+
+Import discipline: `obs.trace` is stdlib-only (safe for `repro.io`);
+`obs.metrics` needs jax+numpy only (safe for `repro.core`/`repro.dist`,
+same footing as `analysis.sanitizer`); `obs.costs` imports the heavier
+launch/core pieces lazily.
+"""
+from repro.obs.trace import (Tracer, current, event, install, span, timed,
+                             tracing)
+
+__all__ = [
+    "Tracer",
+    "current",
+    "event",
+    "install",
+    "span",
+    "timed",
+    "tracing",
+]

@@ -1,0 +1,143 @@
+"""In-program metrics — per-iteration trajectories out of jitted MU programs.
+
+`record_metrics("core.rescal.mu_step_batched", rel_error=..., ...)` stages a
+`jax.debug.callback` that appends the values to the installed host
+`MetricsBuffer`.  Call sites guard the call with the static `trace_metrics`
+flag (threaded exactly like PR 6's `sanitize`):
+
+    if trace_metrics:
+        record_metrics("core.rescal.mu_step_batched",
+                       step=state.step,
+                       rel_error=rel_error(X, A, R), ...)
+
+so the default-off build stages *nothing* — the jaxpr is bit-identical to a
+build without this module and zero extra programs compile (tested via jaxpr
+equality and `scripts/check_compiles.py`).
+
+The callback resolves the buffer at *host-call* time, not trace time, so a
+program compiled once keeps feeding whichever buffer is currently
+installed.  Callbacks are unordered (`ordered=True` would serialize the
+program); the buffer stamps an arrival sequence number, which on the
+single-stream backends we run on preserves iteration order.  Under `vmap`
+(the batched ensemble programs) the callback unrolls per batch element, so
+an ensemble of r members contributes r records per iteration — trajectories
+stay scalar streams and `trajectory()` returns iters*r points.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Any, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "MetricsBuffer",
+    "get_buffer",
+    "install_buffer",
+    "record_metrics",
+    "update_ratio",
+]
+
+
+class MetricsBuffer:
+    """Bounded host-side ring buffer of (seq, tag, {name: ndarray}) records."""
+
+    def __init__(self, capacity: int = 200_000):
+        self.capacity = int(capacity)
+        self.records: list[tuple[int, str, dict[str, np.ndarray]]] = []
+        self.dropped = 0
+        self._seq = 0
+        self._lock = threading.Lock()
+
+    def append(self, tag: str, values: dict[str, Any]) -> None:
+        rec = {k: np.asarray(v) for k, v in values.items()}
+        with self._lock:
+            self.records.append((self._seq, tag, rec))
+            self._seq += 1
+            if len(self.records) > self.capacity:
+                del self.records[0]
+                self.dropped += 1
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def tags(self) -> list[str]:
+        return sorted({tag for _, tag, _ in self.records})
+
+    def iter_tag(self, tag: str) -> Iterator[dict[str, np.ndarray]]:
+        for _, t, rec in sorted(self.records, key=lambda r: r[0]):
+            if t == tag:
+                yield rec
+
+    def trajectory(self, tag: str, name: str) -> np.ndarray:
+        """All recorded values of `name` under `tag`, in arrival order,
+        stacked along a new leading axis."""
+        vals = [rec[name] for rec in self.iter_tag(tag) if name in rec]
+        if not vals:
+            return np.empty((0,))
+        return np.stack(vals)
+
+    def to_arrays(self) -> dict[str, np.ndarray]:
+        """Flatten to `{tag}.{name}` arrays (the metrics.npz layout)."""
+        out: dict[str, np.ndarray] = {}
+        for tag in self.tags():
+            names = sorted({n for rec in self.iter_tag(tag) for n in rec})
+            for name in names:
+                out[f"{tag}.{name}"] = self.trajectory(tag, name)
+        return out
+
+    def save_npz(self, path: str) -> None:
+        np.savez(path, **self.to_arrays())
+
+    def summarize(self) -> str:
+        lines = [f"{'metric':<44} {'points':>6} {'last':>12}"]
+        for key, arr in sorted(self.to_arrays().items()):
+            last = float(np.asarray(arr[-1]).ravel()[0]) if arr.size else float("nan")
+            lines.append(f"{key:<44} {len(arr):>6} {last:>12.6g}")
+        if self.dropped:
+            lines.append(f"(ring buffer dropped {self.dropped} oldest records)")
+        return "\n".join(lines)
+
+
+# -- module-global channel (mirrors analysis.sanitizer / obs.trace) ---------
+
+_BUFFER: MetricsBuffer | None = None
+
+
+def install_buffer(buf: MetricsBuffer | None) -> MetricsBuffer | None:
+    """Install the process-wide buffer; returns the previous one."""
+    global _BUFFER
+    prev, _BUFFER = _BUFFER, buf
+    return prev
+
+
+def get_buffer() -> MetricsBuffer | None:
+    return _BUFFER
+
+
+def _append_cb(tag: str, values: dict[str, np.ndarray]) -> None:
+    buf = _BUFFER  # resolved when the compiled program runs, not at trace
+    if buf is not None:
+        buf.append(tag, values)
+
+
+def record_metrics(tag: str, **values: Any) -> None:
+    """Stage a host append of `values` under `tag`.
+
+    Must only be called on the `trace_metrics=True` path — the *caller*
+    holds the static flag (`if trace_metrics: record_metrics(...)`), so
+    disabled programs contain no callback primitive at all.  Values may be
+    tracers (arrays of any shape); they arrive host-side as numpy arrays.
+    """
+    vals = {k: v for k, v in values.items() if v is not None}
+    jax.debug.callback(functools.partial(_append_cb, tag), vals)
+
+
+def update_ratio(old: jax.Array, new: jax.Array,
+                 eps: float = 1e-30) -> jax.Array:
+    """Mean multiplicative step magnitude |new - old| / |old| — the
+    "mu-ratio" trajectory (→ 0 as MU converges to a fixed point)."""
+    return jnp.mean(jnp.abs(new - old) / (jnp.abs(old) + eps))

@@ -128,10 +128,10 @@ def perturb_blocked(key: jax.Array, X: jax.Array, q, grid: tuple[int, int],
 
 @functools.partial(jax.jit, static_argnames=("k", "iters", "schedule",
                                              "init", "delta", "eps",
-                                             "sanitize"))
+                                             "sanitize", "trace_metrics"))
 def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
                      init: str, delta: float, eps: float,
-                     sanitize: bool = False):
+                     sanitize: bool = False, trace_metrics: bool = False):
     m, n, _ = X.shape
     step = MU_SCHEDULES[schedule]
 
@@ -145,7 +145,7 @@ def _batched_members(X, keys, *, k: int, iters: int, schedule: str,
                              R=st.R, step=st.step)
 
         def body(_, s):
-            return step(X_q, s, eps, sanitize)
+            return step(X_q, s, eps, sanitize, trace_metrics)
 
         st = jax.lax.fori_loop(0, iters, body, st)
         st = normalize(st)
@@ -184,12 +184,19 @@ def _sanitize_opt(cfg) -> bool:
     return bool(getattr(cfg, "sanitize", False))
 
 
+def _trace_opt(cfg) -> bool:
+    """Per-iteration telemetry flag (repro.obs.metrics), duck-typed like
+    ``_sanitize_opt`` (older config objects without the field mean 'off')."""
+    return bool(getattr(cfg, "trace_metrics", False))
+
+
 @functools.partial(jax.jit, static_argnames=("k", "iters", "delta", "eps",
                                              "use_fused", "impl",
-                                             "sanitize"))
+                                             "sanitize", "trace_metrics"))
 def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
                           eps: float, use_fused: bool = False,
-                          impl: str = "auto", sanitize: bool = False):
+                          impl: str = "auto", sanitize: bool = False,
+                          trace_metrics: bool = False):
     """All members of one unit on a BCSR operand as one vmapped program.
     Same (pkey, fkey) split discipline as the dense program; the
     perturbation draws noise for the stored blocks only.  ``use_fused``
@@ -207,7 +214,8 @@ def _batched_members_bcsr(sp, keys, *, k: int, iters: int, delta: float,
         def body(_, c):
             return sparse_mu_step(sp_q, c[0], c[1], eps,
                                   use_fused=use_fused, impl=impl,
-                                  sanitize=sanitize)
+                                  sanitize=sanitize,
+                                  trace_metrics=trace_metrics)
 
         A, R = jax.lax.fori_loop(0, iters, body, (st.A, st.R))
         st = normalize(RescalState(A=A, R=R, step=st.step))
@@ -232,7 +240,8 @@ def _loop_members_bcsr(sp, keys, k: int, cfg) -> EnsembleResult:
         A, R = st.A, st.R
         for _ in range(cfg.rescal_iters):
             A, R = sparse_mu_step(sp_q, A, R, eps,
-                                  sanitize=_sanitize_opt(cfg), **fused)
+                                  sanitize=_sanitize_opt(cfg),
+                                  trace_metrics=_trace_opt(cfg), **fused)
         st = normalize(RescalState(A=A, R=R, step=st.step))
         A_l.append(st.A)
         R_l.append(st.R)
@@ -325,7 +334,8 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
                             delta: float = 0.02, iters: int = 200,
                             dtype=jnp.float32, key_ndim: int = 2,
                             use_fused: bool = False, fused_impl: str = "auto",
-                            sanitize: bool = False):
+                            sanitize: bool = False,
+                            trace_metrics: bool = False):
     """The BCSR twin of ``make_mesh_ensemble``: a jitted sharded program
     ``(data, rows, cols, keys, ids) -> (A_ens, R_ens, errs)`` over the
     stacked shard layout of ``io.partition.ShardedBCSR``.  Each device
@@ -358,7 +368,8 @@ def make_mesh_ensemble_bcsr(mesh, *, k: int, n_pad: int, m: int, r_run: int,
                          f"pods={pods}")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl, sanitize=sanitize)
+                            fused_impl=fused_impl, sanitize=sanitize,
+                            trace_metrics=trace_metrics)
     it = get_mu_iter("bcsr", schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     x_spec, i_spec, _, _ = sh.bcsr_specs()
@@ -406,7 +417,7 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                        iters: int = 200, init: str = "random",
                        dtype=jnp.float32, key_ndim: int = 2,
                        use_fused: bool = False, fused_impl: str = "auto",
-                       sanitize: bool = False):
+                       sanitize: bool = False, trace_metrics: bool = False):
     """Build the jitted sharded ensemble program ``(X, keys, ids) ->
     (A_ens, R_ens, errs)`` for `r_run` members on `mesh`.
 
@@ -441,7 +452,8 @@ def make_mesh_ensemble(mesh, *, k: int, n: int, m: int, r_run: int,
                          f"ensemble axis)")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl, sanitize=sanitize)
+                            fused_impl=fused_impl, sanitize=sanitize,
+                            trace_metrics=trace_metrics)
     it = get_mu_iter("dense", schedule)
     specs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -516,7 +528,7 @@ def grid_init(cells, cfg, n: int, m: int, k_max: int, dtype):
 
 def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
                   schedule: str, delta: float, eps: float,
-                  sanitize: bool = False):
+                  sanitize: bool = False, trace_metrics: bool = False):
     """A chunk of flattened (k, q) cells as one jitted program over a dense
     operand.  Same (pkey, fkey) discipline as ``_batched_members`` (the
     fkey was consumed host-side by ``grid_init``); masked columns stay
@@ -532,7 +544,8 @@ def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
         st = RescalState(A=A0u, R=R0u, step=jnp.zeros((), jnp.int32))
 
         def body(_, s):
-            return masked_mu_step(X_q, s, mask, eps, schedule, sanitize)
+            return masked_mu_step(X_q, s, mask, eps, schedule, sanitize,
+                                  trace_metrics)
 
         st = jax.lax.fori_loop(0, iters, body, st)
         st = masked_normalize(st, mask)
@@ -544,12 +557,13 @@ def _grid_members(X, keys, kvals, A0, R0, *, k_max: int, iters: int,
 _grid_members = donating_jit(
     _grid_members, donate_argnums=(3, 4),
     static_argnames=("k_max", "iters", "schedule", "delta", "eps",
-                     "sanitize"))
+                     "sanitize", "trace_metrics"))
 
 
 def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
                        delta: float, eps: float, use_fused: bool = False,
-                       impl: str = "auto", sanitize: bool = False):
+                       impl: str = "auto", sanitize: bool = False,
+                       trace_metrics: bool = False):
     """The BCSR twin of ``_grid_members``: stored-block perturbation, masked
     sparse MU, one program for the whole rank mix.  ``use_fused`` swaps the
     spmm + spmm_t double sweep for the single-pass kernel (the masked-zero
@@ -565,7 +579,8 @@ def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
         def body(_, c):
             return masked_sparse_mu_step(sp_q, c[0], c[1], mask, eps,
                                          use_fused=use_fused, impl=impl,
-                                         sanitize=sanitize)
+                                         sanitize=sanitize,
+                                         trace_metrics=trace_metrics)
 
         A, R = jax.lax.fori_loop(0, iters, body, (A0u, R0u))
         st = masked_normalize(
@@ -581,7 +596,7 @@ def _grid_members_bcsr(sp, keys, kvals, A0, R0, *, k_max: int, iters: int,
 _grid_members_bcsr = donating_jit(
     _grid_members_bcsr, donate_argnums=(3, 4),
     static_argnames=("k_max", "iters", "delta", "eps", "use_fused",
-                     "impl", "sanitize"))
+                     "impl", "sanitize", "trace_metrics"))
 
 
 @functools.lru_cache(maxsize=64)
@@ -591,7 +606,8 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
                             iters: int = 200, dtype=jnp.float32,
                             key_ndim: int = 2, use_fused: bool = False,
                             fused_impl: str = "auto",
-                            sanitize: bool = False):
+                            sanitize: bool = False,
+                            trace_metrics: bool = False):
     """The cross-k grid program on the ("pod", "data", "model") mesh: one
     shard_map program whose flattened (k, q) cell axis rides the
     pod/`ENSEMBLE_AXIS`, built from the same ``dist.engine.get_mu_iter``
@@ -633,7 +649,8 @@ def make_mesh_grid_ensemble(mesh, *, operand: str, k_max: int, n: int,
         raise ValueError(f"n={n} must divide the ({gr}, {gc}) grid")
 
     dcfg = DistRescalConfig(schedule=schedule, use_fused_kernel=use_fused,
-                            fused_impl=fused_impl, sanitize=sanitize)
+                            fused_impl=fused_impl, sanitize=sanitize,
+                            trace_metrics=trace_metrics)
     it = get_mu_iter(operand, schedule)
     mspecs = sh.ensemble_member_specs(mesh, key_ndim=key_ndim)
     n_loc = n // gr
@@ -710,8 +727,10 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
     _require_random_init(cfg, "the cross-k grid program")
     fused = _fused_opts(cfg)
     sanitize = _sanitize_opt(cfg)
+    trace_metrics = _trace_opt(cfg)
     mesh_fused = dict(use_fused=fused["use_fused"],
-                      fused_impl=fused["impl"], sanitize=sanitize)
+                      fused_impl=fused["impl"], sanitize=sanitize,
+                      trace_metrics=trace_metrics)
     sharded = X if _is_sharded_bcsr(X) else None
     if mesh is not None:
         ids = jnp.asarray([q for _, q in cells], dtype=jnp.int32)
@@ -750,14 +769,14 @@ def run_sweep_batched(X, cells, cfg, *, mesh=None) -> EnsembleResult:
         A, R, errs = _grid_members_bcsr(
             sp, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
             delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
-            sanitize=sanitize, **fused)
+            sanitize=sanitize, trace_metrics=trace_metrics, **fused)
         return EnsembleResult(A=A, R=R, errors=errs)
     m, n, _ = X.shape
     keys, kvals, A0, R0 = grid_init(cells, cfg, n, m, k_max, X.dtype)
     A, R, errs = _grid_members(
         X, keys, kvals, A0, R0, k_max=k_max, iters=cfg.rescal_iters,
         schedule=cfg.schedule, delta=cfg.perturbation_delta,
-        eps=EPS_DEFAULT, sanitize=sanitize)
+        eps=EPS_DEFAULT, sanitize=sanitize, trace_metrics=trace_metrics)
     return EnsembleResult(A=A, R=R, errors=errs)
 
 
@@ -824,7 +843,8 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
         fused = _fused_opts(cfg)
         mesh_fused = dict(use_fused=fused["use_fused"],
                           fused_impl=fused["impl"],
-                          sanitize=_sanitize_opt(cfg))
+                          sanitize=_sanitize_opt(cfg),
+                          trace_metrics=_trace_opt(cfg))
         if sharded is not None:
             _require_random_init(cfg, "the BCSR mesh ensemble")
             prog = make_mesh_ensemble_bcsr(
@@ -857,7 +877,8 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
             A, R, errs = _batched_members_bcsr(
                 sp, keys, k=k, iters=cfg.rescal_iters,
                 delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
-                sanitize=_sanitize_opt(cfg), **_fused_opts(cfg))
+                sanitize=_sanitize_opt(cfg), trace_metrics=_trace_opt(cfg),
+                **_fused_opts(cfg))
             return EnsembleResult(A=A, R=R, errors=errs)
         if mode == "loop":
             return _loop_members_bcsr(sp, keys, k, cfg)
@@ -866,7 +887,7 @@ def run_ensemble(X, k: int, cfg, *, members: Sequence[int] | None = None,
         A, R, errs = _batched_members(
             X, keys, k=k, iters=cfg.rescal_iters, schedule=cfg.schedule,
             init=cfg.init, delta=cfg.perturbation_delta, eps=EPS_DEFAULT,
-            sanitize=_sanitize_opt(cfg))
+            sanitize=_sanitize_opt(cfg), trace_metrics=_trace_opt(cfg))
         return EnsembleResult(A=A, R=R, errors=errs)
     if mode == "loop":
         return _loop_members(X, keys, members, k, cfg)

@@ -31,6 +31,11 @@ class UnitRecord:
     reused: bool
     retries: int
     cells: list[list[int]] | None = None   # grid chunks only
+    # StragglerMonitor verdict (defaults keep pre-obs reports loadable):
+    # flagged when this unit's wall time exceeded factor x the median of
+    # previously executed units; baseline_seconds is that median
+    straggler: bool = False
+    baseline_seconds: float | None = None
 
 
 @dataclasses.dataclass

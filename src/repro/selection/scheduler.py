@@ -44,7 +44,8 @@ from repro.core.clustering import ClusterResult, custom_cluster
 from repro.core.regression import regress_R
 from repro.core.rescal import rel_error
 from repro.core.silhouette import SilhouetteResult, silhouettes
-from repro.dist.elastic import ensemble_plan
+from repro.dist.elastic import StragglerMonitor, ensemble_plan
+from repro.obs import trace as obs
 
 from . import criteria
 from .ensemble import EnsembleResult, run_ensemble, run_sweep_batched
@@ -207,6 +208,8 @@ class UnitOutcome:
     seconds: float
     reused: bool
     retries: int
+    straggler: bool = False         # flagged by the StragglerMonitor
+    baseline: float | None = None   # monitor's median seconds at flag time
 
 
 class SweepScheduler:
@@ -247,7 +250,8 @@ class SweepScheduler:
                  grid_chunk: int | None = None,
                  max_retries: int = 1, stop_after_units: int | None = None,
                  failure_injector: Callable | None = None,
-                 report_path: str | None = None, verbose: bool = False):
+                 report_path: str | None = None, verbose: bool = False,
+                 straggler_factor: float = 2.5):
         criteria.require(criterion)
         if mesh is not None and mode not in ("batched", "grid"):
             raise ValueError(
@@ -269,8 +273,12 @@ class SweepScheduler:
         self.failure_injector = failure_injector
         self.report_path = report_path
         self.verbose = verbose
-        self.units = plan_sweep(cfg, mode=mode, n_pods=n_pods,
-                                grid_chunk=grid_chunk)
+        # flags units whose wall time blows past factor x the median of
+        # previously executed units (dist.elastic; was train-loop-only)
+        self.stragglers = StragglerMonitor(factor=straggler_factor)
+        with obs.span("sched/plan", mode=mode):
+            self.units = plan_sweep(cfg, mode=mode, n_pods=n_pods,
+                                    grid_chunk=grid_chunk)
         if mesh is not None and mode == "grid":
             # deterministic config error: surface it here, not inside unit
             # execution after max_retries identical failures
@@ -349,7 +357,8 @@ class SweepScheduler:
         tag = os.path.join(self.ckpt_dir, unit.uid)
         if ckpt.latest_step(tag) is None:
             return None
-        tree, _ = ckpt.restore(tag, self._unit_like(X, unit))
+        with obs.span("sched/restore", uid=unit.uid):
+            tree, _ = ckpt.restore(tag, self._unit_like(X, unit))
         if self.verbose:
             print(f"  [ckpt] reused {unit.uid}")
         return UnitOutcome(unit=unit, result=EnsembleResult(**tree),
@@ -361,28 +370,43 @@ class SweepScheduler:
             try:
                 if self.failure_injector is not None:
                     self.failure_injector(unit, attempt)
-                t0 = time.perf_counter()
-                if isinstance(unit, GridChunk):
-                    res = run_sweep_batched(X, unit.cells, self.cfg,
-                                            mesh=self.mesh)
-                else:
-                    res = run_ensemble(X, unit.k, self.cfg,
-                                       members=unit.members,
-                                       mesh=self.mesh, mode=self.mode)
-                jax.block_until_ready(res.A)
-                dt = time.perf_counter() - t0
+                with obs.span("sched/execute", uid=unit.uid,
+                              attempt=attempt):
+                    t0 = time.perf_counter()
+                    if isinstance(unit, GridChunk):
+                        res = run_sweep_batched(X, unit.cells, self.cfg,
+                                                mesh=self.mesh)
+                    else:
+                        res = run_ensemble(X, unit.k, self.cfg,
+                                           members=unit.members,
+                                           mesh=self.mesh, mode=self.mode)
+                    jax.block_until_ready(res.A)
+                    dt = time.perf_counter() - t0
                 break
             except Exception:
                 attempt += 1
+                obs.event("sched/retry", uid=unit.uid, attempt=attempt)
                 if attempt > self.max_retries:
                     raise
                 if self.verbose:
                     print(f"  [retry] {unit.uid} attempt {attempt}")
+        # straggler flagging against the median of prior units; flagged
+        # durations stay OUT of the baseline so one slow unit doesn't
+        # normalize slowness for the rest of the sweep
+        straggler = self.stragglers.record(unit.index, dt)
+        baseline = self.stragglers.baseline
+        if straggler:
+            print(f"  [straggler] {unit.uid} took {dt:.3f}s "
+                  f"(baseline {baseline:.3f}s)")
+            obs.event("sched/straggler", uid=unit.uid, seconds=dt,
+                      baseline=baseline)
         if self.ckpt_dir:
-            ckpt.save(os.path.join(self.ckpt_dir, unit.uid), 0,
-                      res._asdict())
+            with obs.span("sched/checkpoint", uid=unit.uid):
+                ckpt.save(os.path.join(self.ckpt_dir, unit.uid), 0,
+                          res._asdict())
         return UnitOutcome(unit=unit, result=res, seconds=dt, reused=False,
-                           retries=attempt)
+                           retries=attempt, straggler=straggler,
+                           baseline=baseline)
 
     # -- the sweep ----------------------------------------------------------
 
@@ -436,8 +460,10 @@ class SweepScheduler:
                     UnitRecord(uid=o.unit.uid, k=k,
                                members=list(o.unit.members),
                                seconds=o.seconds, reused=o.reused,
-                               retries=o.retries) for o in outs)
-            per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
+                               retries=o.retries, straggler=o.straggler,
+                               baseline_seconds=o.baseline) for o in outs)
+            with obs.span("sched/reduce", k=k):
+                per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
             if self.verbose:
                 r = per_k[k]
                 print(f"[sweep] k={k:3d} s_min={r.s_min:6.3f} "
@@ -464,7 +490,9 @@ class SweepScheduler:
                 records.append(UnitRecord(
                     uid=unit.uid, k=-1, members=[], seconds=out.seconds,
                     reused=out.reused, retries=out.retries,
-                    cells=[list(c) for c in unit.cells]))
+                    cells=[list(c) for c in unit.cells],
+                    straggler=out.straggler,
+                    baseline_seconds=out.baseline))
                 done: list[int] = []
                 for row, (k, q) in enumerate(unit.cells):
                     # .copy(): a cropped VIEW would pin the whole padded
@@ -489,7 +517,8 @@ class SweepScheduler:
         result = RescalkResult(ks=np.asarray(ks), s_min=s_min, s_mean=s_mean,
                                rel_err=rel, k_opt=k_opt, per_k=per_k)
 
-        meta = {"n_units": len(self.units)}
+        meta = {"n_units": len(self.units),
+                "n_stragglers": sum(1 for r in records if r.straggler)}
         if self.mesh is not None:
             meta["mesh"] = {str(a): int(s)
                             for a, s in dict(self.mesh.shape).items()}

@@ -34,6 +34,11 @@ class RescalkConfig:
     # Static flag — flipping it retraces, so the default False build is
     # bit-identical (zero extra compiled programs; check_compiles.py gate)
     sanitize: bool = False
+    # per-iteration telemetry (repro.obs.metrics): rel_error / factor-norm /
+    # mu-ratio trajectories recorded from inside the MU programs via
+    # jax.debug.callback.  Same static-flag contract as `sanitize`: the
+    # default False build is bit-identical with zero extra programs.
+    trace_metrics: bool = False
 
     @property
     def ks(self) -> list[int]:

@@ -16,6 +16,7 @@ import jax
 
 from repro import ckpt
 from repro.dist.elastic import StragglerMonitor
+from repro.obs import trace as obs
 from repro.optim import AdamW
 from .train_step import TrainState, init_state, make_train_step
 
@@ -71,9 +72,17 @@ def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
             metrics.update(step=step, seconds=dt,
                            straggler=monitor.record(step, dt))
             history.append(metrics)
+            obs.event("train/step", **metrics)
             if verbose and step % loop.log_every == 0:
-                print(f"[train] step={step} loss={metrics['loss']:.4f} "
-                      f"({dt*1e3:.0f} ms)")
+                # step_fn owns the metrics dict; "loss" is convention, not
+                # contract — print whatever scalars it produced
+                loss = metrics.get("loss")
+                head = (f"loss={loss:.4f}" if loss is not None else
+                        " ".join(f"{k}={v:.4g}"
+                                 for k, v in sorted(metrics.items())
+                                 if k not in ("step", "seconds", "straggler"))
+                        or "no metrics")
+                print(f"[train] step={step} {head} ({dt*1e3:.0f} ms)")
             step += 1
             if loop.ckpt_dir and step % loop.save_every == 0:
                 ckpt.save(loop.ckpt_dir, step, state)

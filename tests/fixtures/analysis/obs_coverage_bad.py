@@ -1,0 +1,8 @@
+"""True positive: an MU-step implementation with no telemetry hook —
+a --trace run would show no trajectory for this program."""
+
+
+def mu_step_custom(X, A, R, eps=1e-16, trace_metrics=False):
+    num = X.sum(axis=0) @ A
+    A = A * num / (num + eps)
+    return A, R

@@ -1,0 +1,18 @@
+"""Near miss: an MU step that stages record_metrics behind the static
+trace_metrics flag, plus a factory whose name merely contains the
+pattern (exempt by prefix)."""
+from repro.obs.metrics import record_metrics
+
+
+def mu_step_custom(X, A, R, eps=1e-16, trace_metrics=False):
+    num = X.sum(axis=0) @ A
+    A = A * num / (num + eps)
+    if trace_metrics:
+        record_metrics("fixture.mu_step_custom", a_norm=abs(A).sum())
+    return A, R
+
+
+def make_mu_step(cfg):
+    def body(X, A, R):
+        return mu_step_custom(X, A, R, trace_metrics=cfg.trace_metrics)
+    return body

@@ -1,0 +1,545 @@
+"""repro.obs: tracer spans/export, the metrics channel, the zero-cost-off
+contract (jaxpr identity + no extra compiles), compile-event capture, the
+scheduler/straggler wiring, cost accounting, and the train-loop log fix.
+"""
+import dataclasses
+import functools
+import json
+import logging
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparse as spmod
+from repro.core.rescal import (init_factors, masked_mu_step,
+                               mu_step_batched, mu_step_sliced, rescal)
+from repro.core.sparse import masked_sparse_mu_step, sparse_mu_step
+from repro.data.synthetic import synthetic_rescal
+from repro.dist.compat import capture_compiles, drain_effects
+from repro.obs import costs as obs_costs
+from repro.obs import trace as obs
+from repro.obs.metrics import (MetricsBuffer, install_buffer,
+                               record_metrics, update_ratio)
+from repro.selection import (RescalkConfig, SweepScheduler, run_ensemble)
+from repro.selection.report import SelectionReport, UnitRecord
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture
+def buffer():
+    """A fresh installed MetricsBuffer, restored after the test."""
+    buf = MetricsBuffer()
+    prev = install_buffer(buf)
+    yield buf
+    install_buffer(prev)
+
+
+# ---------------------------------------------------------------------------
+# Tracer: spans, events, JSONL, Chrome export
+# ---------------------------------------------------------------------------
+
+class TestTracer:
+    def test_span_records_begin_end_with_outcome(self):
+        t = obs.Tracer()
+        with t.span("sched/execute", uid="u1"):
+            with t.span("inner"):
+                pass
+        phs = [(e["ph"], e["name"]) for e in t.events]
+        assert phs == [("M", "trace_start"), ("B", "sched/execute"),
+                       ("B", "inner"), ("E", "inner"),
+                       ("E", "sched/execute")]
+        end = t.events[-1]
+        assert end["args"] == {"uid": "u1", "outcome": "ok"}
+        assert end["dur"] >= 0
+
+    def test_span_marks_error_outcome_and_reraises(self):
+        t = obs.Tracer()
+        with pytest.raises(ValueError):
+            with t.span("sched/execute"):
+                raise ValueError("boom")
+        assert t.events[-1]["args"]["outcome"] == "error"
+
+    def test_jsonl_flushed_incrementally(self, tmp_path):
+        t = obs.Tracer(str(tmp_path))
+        with t.span("a"):
+            pass
+        # readable BEFORE close: a killed run still leaves a trace
+        lines = (tmp_path / "trace.jsonl").read_text().splitlines()
+        assert [json.loads(ln)["ph"] for ln in lines] == ["M", "B", "E"]
+        t.close()
+
+    def test_chrome_export_renders_all_phases(self, tmp_path):
+        t = obs.Tracer()
+        with t.span("sched/execute", uid="u0"):
+            t.event("sched/retry", attempt=1)
+        out = tmp_path / "chrome.json"
+        t.export_chrome(str(out))
+        doc = json.loads(out.read_text())
+        assert doc["displayTimeUnit"] == "ms"
+        evs = doc["traceEvents"]
+        assert evs[0] == {"ph": "M", "name": "process_name",
+                          "pid": t.events[0]["pid"], "tid": 0,
+                          "args": {"name": "rescalk"}}
+        by_ph = {e["ph"] for e in evs}
+        assert {"B", "E", "i"} <= by_ph
+        inst = next(e for e in evs if e["ph"] == "i")
+        assert inst["s"] == "t" and inst["cat"] == "sched"
+
+    def test_summarize_counts_spans_and_compiles(self):
+        t = obs.Tracer()
+        with t.span("ingest/tsv"):
+            pass
+        t.compile_event("_batched_members", "finished")
+        s = t.summarize()
+        assert "ingest/tsv" in s and "compile events: 1" in s
+
+
+class TestModuleChannel:
+    def test_span_is_noop_without_tracer(self):
+        assert obs.current() is None
+        ctx = obs.span("anything", uid=1)
+        with ctx:
+            pass
+        obs.event("anything")          # must not raise
+
+    def test_tracing_scopes_install_and_restore(self):
+        assert obs.current() is None
+        with obs.tracing() as t:
+            assert obs.current() is t
+            with obs.span("x"):
+                pass
+        assert obs.current() is None
+        assert any(e["name"] == "x" for e in t.events)
+
+    def test_timed_measures_with_and_without_tracer(self):
+        with obs.timed("bench/call") as sw:
+            pass
+        assert sw.seconds >= 0
+        with obs.tracing() as t:
+            with obs.timed("bench/call", rep=0) as sw:
+                pass
+            assert sw.seconds >= 0
+        assert [e["name"] for e in t.events if e["ph"] == "B"] \
+            == ["bench/call"]
+
+
+# ---------------------------------------------------------------------------
+# Metrics buffer + jitted record_metrics
+# ---------------------------------------------------------------------------
+
+class TestMetricsBuffer:
+    def test_trajectory_and_npz_layout(self, tmp_path):
+        buf = MetricsBuffer()
+        for i in range(3):
+            buf.append("t.a", {"v": float(i), "w": np.ones(2) * i})
+        np.testing.assert_allclose(buf.trajectory("t.a", "v"), [0, 1, 2])
+        assert buf.trajectory("t.a", "w").shape == (3, 2)
+        assert buf.trajectory("missing", "v").size == 0
+        buf.save_npz(str(tmp_path / "m.npz"))
+        with np.load(tmp_path / "m.npz") as d:
+            assert sorted(d.files) == ["t.a.v", "t.a.w"]
+
+    def test_ring_buffer_drops_oldest(self):
+        buf = MetricsBuffer(capacity=3)
+        for i in range(5):
+            buf.append("t", {"v": float(i)})
+        assert len(buf) == 3 and buf.dropped == 2
+        np.testing.assert_allclose(buf.trajectory("t", "v"), [2, 3, 4])
+
+    def test_callback_resolves_buffer_at_host_call_time(self, buffer):
+        @functools.partial(jax.jit, static_argnames="tm")
+        def g(x, tm=False):
+            if tm:
+                record_metrics("test.g", total=x.sum())
+            return x + 1
+
+        install_buffer(None)               # compile with NO buffer installed
+        g(jnp.ones(3), tm=True).block_until_ready()
+        drain_effects()
+        install_buffer(buffer)             # same compiled program, new buffer
+        g(jnp.ones(3), tm=True).block_until_ready()
+        drain_effects()
+        np.testing.assert_allclose(buffer.trajectory("test.g", "total"),
+                                   [3.0])
+
+    def test_vmap_unrolls_one_record_per_member(self, buffer):
+        def member(x):
+            record_metrics("test.vmap", v=x.sum())
+            return x
+
+        jax.jit(jax.vmap(member))(jnp.arange(6.0).reshape(3, 2))
+        drain_effects()
+        assert buffer.trajectory("test.vmap", "v").shape == (3,)
+
+    def test_update_ratio_zero_at_fixed_point(self):
+        A = jnp.ones((4, 2))
+        assert float(update_ratio(A, A)) == 0.0
+        assert float(update_ratio(A, 2 * A)) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Zero-cost-off: jaxpr identity + no extra compiles
+# ---------------------------------------------------------------------------
+
+def _dense_args(n=8, m=2, k=3):
+    key = jax.random.PRNGKey(0)
+    X, _, _ = synthetic_rescal(key, n=n, m=m, k=k)
+    return X, init_factors(key, n, m, k)
+
+
+class TestZeroCostOff:
+    @pytest.mark.parametrize("step", [mu_step_batched, mu_step_sliced])
+    def test_dense_step_jaxpr_bit_identical_off(self, step):
+        X, st = _dense_args()
+        default = jax.make_jaxpr(lambda x, s: step(x, s))(X, st)
+        off = jax.make_jaxpr(
+            lambda x, s: step(x, s, trace_metrics=False))(X, st)
+        on = jax.make_jaxpr(
+            lambda x, s: step(x, s, trace_metrics=True))(X, st)
+        assert str(default) == str(off)
+        assert "callback" not in str(off)
+        assert "callback" in str(on)
+
+    def test_masked_step_jaxpr_bit_identical_off(self):
+        X, st = _dense_args(k=3)
+        mask = jnp.ones((3,), jnp.float32)
+        default = jax.make_jaxpr(
+            lambda x, s, mk: masked_mu_step(x, s, mk))(X, st, mask)
+        off = jax.make_jaxpr(
+            lambda x, s, mk: masked_mu_step(x, s, mk, trace_metrics=False)
+        )(X, st, mask)
+        on = jax.make_jaxpr(
+            lambda x, s, mk: masked_mu_step(x, s, mk, trace_metrics=True)
+        )(X, st, mask)
+        assert str(default) == str(off)
+        assert "callback" not in str(off)
+        assert "callback" in str(on)
+
+    @pytest.mark.parametrize("step", [sparse_mu_step, masked_sparse_mu_step])
+    def test_sparse_step_jaxpr_bit_identical_off(self, step):
+        sp = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=32, bs=8,
+                               block_density=0.5)
+        st = init_factors(jax.random.PRNGKey(1), 32, 2, 3)
+        extra = ((jnp.ones((3,), jnp.float32),)
+                 if step is masked_sparse_mu_step else ())
+
+        def call(A, R, trace_metrics):
+            return step(sp, A, R, *extra, trace_metrics=trace_metrics)
+
+        default = jax.make_jaxpr(
+            lambda a, r: step(sp, a, r, *extra))(st.A, st.R)
+        off = jax.make_jaxpr(
+            functools.partial(call, trace_metrics=False))(st.A, st.R)
+        on = jax.make_jaxpr(
+            functools.partial(call, trace_metrics=True))(st.A, st.R)
+        assert str(default) == str(off)
+        assert "callback" not in str(off)
+        assert "callback" in str(on)
+
+    def test_rescal_entry_off_by_default(self):
+        X, _ = _dense_args()
+        jaxpr = jax.make_jaxpr(
+            lambda x: rescal(x, 3, key=jax.random.PRNGKey(0), iters=2))(X)
+        assert "callback" not in str(jaxpr)
+
+    def test_default_cfg_shares_compile_cache_with_explicit_false(self):
+        """trace_metrics=False must hit the SAME jit cache entry as the
+        pre-obs default — zero extra ensemble programs compile."""
+        key = jax.random.PRNGKey(0)
+        X, _, _ = synthetic_rescal(key, n=12, m=2, k=2)
+        cfg = RescalkConfig(k_min=2, k_max=2, n_perturbations=2,
+                            rescal_iters=2)
+        run_ensemble(X, 2, cfg, mode="batched")         # warm the cache
+        with capture_compiles() as log:
+            run_ensemble(X, 2, dataclasses.replace(cfg,
+                                                   trace_metrics=False),
+                         mode="batched")
+        assert log.count("_batched_members") == 0
+        # the traced build is a different (static-flag) cache entry and
+        # actually reaches the host buffer
+        buf = MetricsBuffer()
+        prev = install_buffer(buf)
+        try:
+            with capture_compiles() as log_on:
+                run_ensemble(X, 2, dataclasses.replace(cfg,
+                                                       trace_metrics=True),
+                             mode="batched")
+            drain_effects()
+        finally:
+            install_buffer(prev)
+        assert log_on.count("_batched_members") == 1
+        traj = buf.trajectory("core.rescal.mu_step_batched", "rel_error")
+        assert traj.shape[0] == cfg.rescal_iters * cfg.n_perturbations
+
+
+# ---------------------------------------------------------------------------
+# Compile-event capture -> tracer
+# ---------------------------------------------------------------------------
+
+class TestCompileEvents:
+    def test_sink_feeds_tracer_and_restores_logger(self):
+        logger = logging.getLogger("jax")
+        before = (logger.handlers[:], logger.propagate, logger.level)
+        tracer = obs.Tracer()
+
+        @jax.jit
+        def obs_probe(x):
+            return x * 2 + 1
+
+        with capture_compiles(sink=tracer.compile_event) as log:
+            obs_probe(jnp.ones(4)).block_until_ready()
+        after = (logger.handlers[:], logger.propagate, logger.level)
+        assert before == after
+        assert log.count("obs_probe") == 1
+        names = [e["args"]["program"] for e in tracer.events
+                 if e["name"] == "xla/compile"]
+        assert "obs_probe" in names
+        kinds = {e["args"]["kind"] for e in tracer.events
+                 if e["name"] == "xla/compile"}
+        assert kinds <= {"finished", "compiling"}
+
+    def test_sink_exceptions_do_not_break_capture(self):
+        def bad_sink(name, kind):
+            raise RuntimeError("sink bug")
+
+        @jax.jit
+        def obs_probe2(x):
+            return x - 1
+
+        with capture_compiles(sink=bad_sink) as log:
+            obs_probe2(jnp.ones(3)).block_until_ready()
+        assert log.count("obs_probe2") == 1
+
+    def test_compile_events_reach_chrome_export(self, tmp_path):
+        t = obs.Tracer()
+        t.compile_event("_grid_members", "finished")
+        out = tmp_path / "c.json"
+        t.export_chrome(str(out))
+        evs = json.loads(out.read_text())["traceEvents"]
+        comp = [e for e in evs if e["name"] == "xla/compile"]
+        assert comp and comp[0]["cat"] == "xla"
+        assert comp[0]["args"]["program"] == "_grid_members"
+
+
+# ---------------------------------------------------------------------------
+# Scheduler wiring: spans per unit + straggler flagging
+# ---------------------------------------------------------------------------
+
+class TestSchedulerObservability:
+    def _run_sweep(self, straggler_factor=2.5):
+        key = jax.random.PRNGKey(0)
+        X, _, _ = synthetic_rescal(key, n=16, m=2, k=3)
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=3)
+        sched = SweepScheduler(cfg, mode="batched",
+                               straggler_factor=straggler_factor)
+        sched.run(X)
+        return sched
+
+    def test_every_unit_gets_an_execute_span(self):
+        with obs.tracing() as t:
+            sched = self._run_sweep()
+        spans = {(e["name"], e["args"].get("uid")) for e in t.events
+                 if e["ph"] == "B"}
+        for rec in sched.report.units:
+            assert ("sched/execute", rec.uid) in spans
+        names = {e["name"] for e in t.events if e["ph"] == "B"}
+        assert {"sched/plan", "sched/reduce"} <= names
+
+    def test_straggler_flagged_in_report(self, capsys):
+        # factor 0: every unit after the first exceeds 0 x baseline
+        sched = self._run_sweep(straggler_factor=0.0)
+        flags = [u.straggler for u in sched.report.units]
+        assert flags == [False, True]
+        flagged = sched.report.units[1]
+        assert flagged.baseline_seconds is not None
+        assert sched.report.meta["n_stragglers"] == 1
+        assert "[straggler]" in capsys.readouterr().out
+
+    def test_straggler_event_emitted(self):
+        with obs.tracing() as t:
+            self._run_sweep(straggler_factor=0.0)
+        ev = [e for e in t.events if e["name"] == "sched/straggler"]
+        assert len(ev) == 1 and ev[0]["args"]["seconds"] > 0
+
+    def test_report_json_round_trips_straggler_fields(self, tmp_path):
+        sched = self._run_sweep(straggler_factor=0.0)
+        path = tmp_path / "r.json"
+        sched.report.save(str(path))
+        loaded = SelectionReport.load(str(path))
+        assert [u.straggler for u in loaded.units] == [False, True]
+
+    def test_pre_obs_report_json_still_loads(self, tmp_path):
+        """Old reports lack straggler fields; defaults must fill in."""
+        rec = {"uid": "unit_k2_q0-1", "k": 2, "members": [0, 1],
+               "seconds": 1.0, "reused": False, "retries": 0,
+               "cells": None}
+        d = {"ks": [2], "s_min": [0.9], "s_mean": [0.9], "rel_err": [0.1],
+             "k_opt": 2, "criterion": "threshold", "mode": "batched",
+             "n_perturbations": 2, "units": [rec], "meta": {}}
+        path = tmp_path / "old.json"
+        path.write_text(json.dumps(d))
+        loaded = SelectionReport.load(str(path))
+        assert loaded.units[0].straggler is False
+        assert loaded.units[0].baseline_seconds is None
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting
+# ---------------------------------------------------------------------------
+
+class TestCosts:
+    def test_models_scale_linearly_in_k(self):
+        c1 = obs_costs.dense_mu_cost(64, 3, 2)
+        c2 = obs_costs.dense_mu_cost(64, 3, 4)
+        assert 0 < c1["flops"] < c2["flops"]
+        b1 = obs_costs.bcsr_mu_cost(3, 10, 16, 2)
+        b2 = obs_costs.bcsr_mu_cost(3, 10, 16, 4)
+        assert b2["flops"] == pytest.approx(2 * b1["flops"])
+
+    def test_operand_dispatch(self):
+        sp = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=32, bs=8,
+                               block_density=0.5)
+        dense = jnp.zeros((2, 16, 16))
+        assert obs_costs.operand_mu_cost(sp, 3) \
+            == obs_costs.bcsr_mu_cost(sp.m, sp.nnzb, sp.bs, 3)
+        assert obs_costs.operand_mu_cost(dense, 3) \
+            == obs_costs.dense_mu_cost(16, 2, 3)
+
+    def test_measure_mu_costs_returns_per_k_dicts(self):
+        X = jnp.ones((2, 12, 12))
+        out = obs_costs.measure_mu_costs(X, [2, 3])
+        assert sorted(out) == [2, 3]
+        assert all(isinstance(v, dict) for v in out.values())
+
+    def test_cost_table_rows_and_formatting(self):
+        recs = [UnitRecord(uid="unit_k2_q0-1", k=2, members=[0, 1],
+                           seconds=0.5, reused=False, retries=0),
+                UnitRecord(uid="grid_c0-3", k=-1, members=[],
+                           seconds=0.0, reused=True, retries=0,
+                           cells=[[2, 0], [2, 1], [3, 0]])]
+        X = jnp.ones((2, 16, 16))
+        rows = obs_costs.cost_table(recs, X, iters=10)
+        assert rows[0]["cells"] == 2 and rows[1]["cells"] == 3
+        assert rows[0]["achieved_gflops"] > 0
+        assert rows[1]["achieved_gflops"] is None   # reused: no wall time
+        text = obs_costs.format_cost_table(rows)
+        assert "unit_k2_q0-1" in text and "reused" in text
+
+    def test_unit_ks_grid_vs_per_k(self):
+        per_k = UnitRecord(uid="u", k=4, members=[0, 1, 2], seconds=1,
+                           reused=False, retries=0)
+        grid = UnitRecord(uid="g", k=-1, members=[], seconds=1,
+                          reused=False, retries=0, cells=[[2, 0], [5, 1]])
+        assert obs_costs.unit_ks(per_k) == [4, 4, 4]
+        assert obs_costs.unit_ks(grid) == [2, 5]
+
+
+# ---------------------------------------------------------------------------
+# Train-loop logging fix
+# ---------------------------------------------------------------------------
+
+class TestTrainLoopLogging:
+    def _fake_loop(self, monkeypatch, metrics):
+        from repro.train import loop as loop_mod
+        monkeypatch.setattr(loop_mod, "init_state",
+                            lambda key, cfg, opt: {"w": jnp.zeros(1)})
+
+        def fake_make_step(cfg, mesh, *, optimizer, remat, moe_impl):
+            def step_fn(state, batch):
+                return state, dict(metrics)
+            return step_fn
+
+        monkeypatch.setattr(loop_mod, "make_train_step", fake_make_step)
+        return loop_mod
+
+    def test_no_loss_key_does_not_crash(self, monkeypatch, capsys):
+        loop_mod = self._fake_loop(monkeypatch,
+                                   {"aux_err": jnp.float32(0.5)})
+        _, hist = loop_mod.train_loop(
+            None, lambda s: None,
+            loop_mod.LoopConfig(steps=2, log_every=1), verbose=True)
+        out = capsys.readouterr().out
+        assert "aux_err=0.5" in out and "loss" not in out
+        assert len(hist) == 2
+
+    def test_loss_key_prints_as_before(self, monkeypatch, capsys):
+        loop_mod = self._fake_loop(monkeypatch, {"loss": jnp.float32(2.0)})
+        loop_mod.train_loop(None, lambda s: None,
+                            loop_mod.LoopConfig(steps=1, log_every=1),
+                            verbose=True)
+        assert "loss=2.0000" in capsys.readouterr().out
+
+    def test_steps_routed_through_event_log(self, monkeypatch):
+        loop_mod = self._fake_loop(monkeypatch, {"loss": jnp.float32(1.0)})
+        with obs.tracing() as t:
+            loop_mod.train_loop(None, lambda s: None,
+                                loop_mod.LoopConfig(steps=2))
+        steps = [e for e in t.events if e["name"] == "train/step"]
+        assert len(steps) == 2
+        assert steps[0]["args"]["loss"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# check_trace.py validator (imported, not subprocessed — CI runs the CLI)
+# ---------------------------------------------------------------------------
+
+def _load_check_trace():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_trace", REPO / "scripts" / "check_trace.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestCheckTrace:
+    def test_balanced_trace_passes(self, tmp_path):
+        ct = _load_check_trace()
+        with obs.tracing(str(tmp_path)) as t:
+            with obs.span("sched/execute", uid="u0"):
+                obs.event("sched/retry")
+            t.export_chrome(str(tmp_path / "trace_chrome.json"))
+        assert ct.main([str(tmp_path)]) == 0
+
+    def test_unbalanced_nesting_fails(self, tmp_path):
+        ct = _load_check_trace()
+        t = obs.Tracer(str(tmp_path))
+        t._emit({"ph": "B", "name": "a", "ts": 1.0, "pid": 1, "tid": 1})
+        t.export_chrome(str(tmp_path / "trace_chrome.json"))
+        t.close()
+        assert ct.main([str(tmp_path)]) == 1
+
+    def test_missing_dir_is_exit_2(self, tmp_path):
+        ct = _load_check_trace()
+        assert ct.main([str(tmp_path / "nope")]) == 2
+
+    def test_report_cross_check_finds_missing_span(self, tmp_path):
+        ct = _load_check_trace()
+        with obs.tracing(str(tmp_path)) as t:
+            with obs.span("sched/execute", uid="unit_a"):
+                pass
+            t.export_chrome(str(tmp_path / "trace_chrome.json"))
+        report = {"units": [{"uid": "unit_a", "reused": False},
+                            {"uid": "unit_b", "reused": False}]}
+        rp = tmp_path / "report.json"
+        rp.write_text(json.dumps(report))
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 1
+        report["units"].pop()
+        rp.write_text(json.dumps(report))
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 0
+
+    def test_expect_metrics(self, tmp_path):
+        ct = _load_check_trace()
+        with obs.tracing(str(tmp_path)) as t:
+            with obs.span("a"):
+                pass
+            t.export_chrome(str(tmp_path / "trace_chrome.json"))
+        np.savez(tmp_path / "metrics.npz", **{"t.rel_error": np.ones(3)})
+        assert ct.main([str(tmp_path), "--expect-metrics"]) == 0
+        np.savez(tmp_path / "metrics.npz", **{"t.other": np.ones(3)})
+        assert ct.main([str(tmp_path), "--expect-metrics"]) == 1
