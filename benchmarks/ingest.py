@@ -29,6 +29,7 @@ from repro.io import (VirtualSpec, ingest_tsv, manifest_of, partition_coo,
 from repro.selection import (RescalkConfig, SweepScheduler, run_ensemble,
                              run_ensemble_bcsr_dense_reference)
 
+from repro.obs.memory import MemoryLedger, accounted_ensemble_bytes
 from repro.obs.trace import timed
 
 from .common import Report
@@ -107,12 +108,13 @@ def bench_virtual_exascale(report: Report, bench: dict) -> None:
     with timed("bench/virtual_generate") as t:
         operand = virtual_sharded_bcsr(spec).to_bcsr()    # grid=1 -> merged
     t_gen = t.seconds
-    # accounted peak residency of the batched ensemble program: the
-    # unperturbed operand + r live member copies of the stored blocks,
-    # plus the factor ensembles (A dominates R at these shapes)
-    k_max = cfg.k_max
-    factor_bytes = r * (operand.n * k_max + spec.m * k_max * k_max) * 4
-    peak_bytes = man.resident_bytes * (1 + r) + factor_bytes
+    # accounted peak residency of the batched ensemble program — the same
+    # obs.memory ledger the trace artifact writes, so the bench and a
+    # traced run can never disagree about the exascale ratio
+    ledger = MemoryLedger.from_manifest(
+        man, accounted_sweep_bytes=accounted_ensemble_bytes(
+            man, n_members=r, k_max=cfg.k_max))
+    peak_bytes = ledger.accounted_sweep_bytes
 
     with timed("bench/virtual_sweep") as t:
         res = SweepScheduler(cfg).run(operand)
@@ -120,16 +122,16 @@ def bench_virtual_exascale(report: Report, bench: dict) -> None:
 
     row = dict(
         spec=spec.spec_string(), nnzb=int(operand.nnzb),
-        logical_gib=round(man.logical_bytes / GIB, 3),
-        resident_gib=round(man.resident_bytes / GIB, 4),
+        logical_gib=round(ledger.logical_bytes / GIB, 3),
+        resident_gib=round(ledger.resident_bytes / GIB, 4),
         accounted_peak_gib=round(peak_bytes / GIB, 4),
-        compression=round(man.compression, 1),
+        compression=round(ledger.compression, 1),
         generate_s=round(t_gen, 2), sweep_s=round(t_sweep, 2),
         k_opt=int(res.k_opt))
     report.add("virtual/exascale_residency", seconds=t_sweep, **row)
     bench["virtual"].append({"name": "virtual/exascale_residency", **row})
 
-    assert man.logical_bytes > LOGICAL_FLOOR_GIB * GIB, row
+    assert ledger.logical_bytes > LOGICAL_FLOOR_GIB * GIB, row
     assert peak_bytes <= RESIDENT_BUDGET_GIB * GIB, row
 
 

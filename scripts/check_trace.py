@@ -13,6 +13,12 @@ Structural checks on the trace contract (README "Observability"):
   --expect-metrics   metrics.npz holds at least one non-empty
                      ``*.rel_error`` trajectory (a traced program's
                      per-iteration convergence actually reached the host)
+  --expect-memory    memory.json is a well-formed ``MemoryLedger``:
+                     logical/resident ratio >= 1, a positive host peak,
+                     internally consistent per-rank AOT breakdowns, and a
+                     fallback count that matches the ``kernel/fallback``
+                     instants in trace.jsonl (and, with --report, the
+                     report's per-unit sum)
 
 Exit codes follow the artifact-guard convention: 2 + one ``[trace-check]
 ERROR:`` line when the artifacts are missing/malformed (cannot validate),
@@ -139,6 +145,80 @@ def check_metrics(trace_dir: str) -> list[str]:
     return []
 
 
+def check_memory(trace_dir: str, events: list[dict],
+                 report_path: str | None) -> list[str]:
+    """Validate the MemoryLedger artifact and its cross-artifact
+    consistency (ledger fallback count vs trace.jsonl vs report)."""
+    path = os.path.join(trace_dir, "memory.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except OSError as ex:
+        raise TraceError(f"cannot read {path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise TraceError(f"{path} is not valid JSON: {ex}")
+    if not isinstance(doc, dict) or not isinstance(doc.get("ledger"), dict):
+        raise TraceError(f"{path}: expected an object with a 'ledger'")
+    led = doc["ledger"]
+    for key in ("logical_bytes", "resident_bytes", "compression"):
+        if not isinstance(led.get(key), (int, float)):
+            raise TraceError(f"{path}: ledger.{key} missing or non-numeric")
+
+    problems = []
+    if led["resident_bytes"] <= 0:
+        problems.append(f"{path}: resident_bytes must be positive, got "
+                        f"{led['resident_bytes']}")
+    if led["compression"] < 1.0:
+        problems.append(f"{path}: logical/resident ratio "
+                        f"{led['compression']:.3f} < 1 — the operand "
+                        f"claims to be smaller than what it represents")
+    rt = doc.get("runtime", {})
+    host = rt.get("peak_host_bytes")
+    if not isinstance(host, (int, float)) or host <= 0:
+        problems.append(f"{path}: runtime.peak_host_bytes must be a "
+                        f"positive watermark, got {host!r}")
+    # device peak is optional (None on backends without memory_stats),
+    # but when present it must be positive
+    dev = rt.get("peak_device_bytes")
+    if dev is not None and (not isinstance(dev, (int, float)) or dev <= 0):
+        problems.append(f"{path}: runtime.peak_device_bytes must be null "
+                        f"or positive, got {dev!r}")
+    for k, entry in (doc.get("per_k") or {}).items():
+        if not entry:          # {} = backend offered no memory analysis
+            continue
+        missing = [f for f in ("argument", "output", "temp", "peak")
+                   if not isinstance(entry.get(f), (int, float))]
+        if missing:
+            problems.append(f"{path}: per_k[{k}] lacks {missing}")
+            continue
+        if entry["peak"] < max(entry["argument"], entry["output"],
+                               entry["temp"]):
+            problems.append(f"{path}: per_k[{k}] peak {entry['peak']} "
+                            f"below its own largest component")
+    n_ledger = (doc.get("fallbacks") or {}).get("count")
+    if not isinstance(n_ledger, int) or n_ledger < 0:
+        problems.append(f"{path}: fallbacks.count missing or negative")
+        n_ledger = None
+    n_trace = sum(1 for e in events
+                  if e["ph"] == "i" and e["name"] == "kernel/fallback")
+    if n_ledger is not None and n_ledger != n_trace:
+        problems.append(f"{path}: fallbacks.count={n_ledger} but "
+                        f"trace.jsonl holds {n_trace} kernel/fallback "
+                        f"event(s)")
+    if report_path and n_ledger is not None:
+        with open(report_path) as f:
+            report = json.load(f)
+        n_units = sum(u.get("kernel_fallbacks", 0)
+                      for u in report.get("units", []))
+        # the ledger counts the whole traced process; units only their own
+        # execution windows — units can never exceed the ledger
+        if n_units > n_ledger:
+            problems.append(f"{report_path}: per-unit fallback sum "
+                            f"{n_units} exceeds the ledger count "
+                            f"{n_ledger}")
+    return problems
+
+
 def main(argv: list[str]) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trace_dir", help="directory written by --trace")
@@ -147,6 +227,9 @@ def main(argv: list[str]) -> int:
     ap.add_argument("--expect-metrics", action="store_true",
                     help="require a non-empty rel_error trajectory in "
                          "metrics.npz")
+    ap.add_argument("--expect-memory", action="store_true",
+                    help="require a well-formed memory.json byte ledger "
+                         "consistent with trace.jsonl (and --report)")
     args = ap.parse_args(argv)
 
     try:
@@ -159,6 +242,8 @@ def main(argv: list[str]) -> int:
             problems += check_report_coverage(events, args.report)
         if args.expect_metrics:
             problems += check_metrics(args.trace_dir)
+        if args.expect_memory:
+            problems += check_memory(args.trace_dir, events, args.report)
     except TraceError as ex:
         print(f"[trace-check] ERROR: {ex}")
         return 2

@@ -154,14 +154,59 @@ python -m repro.launch.rescalk_run --data "$SMOKE_DIR/triples.tsv" --bs 8 \
     --report "$SMOKE_DIR/trace_report.json" | tee "$SMOKE_DIR/trace.log"
 grep -q "selected k_opt" "$SMOKE_DIR/trace.log"
 grep -q "^\[obs\]" "$SMOKE_DIR/trace.log"
+# memory.json must exist here too, but the strict --expect-memory pass
+# runs on the virtual sweep below: this tiny near-dense TSV operand's
+# block storage legitimately exceeds its 24x24x2 logical bytes (ratio<1)
 python scripts/check_trace.py "$SMOKE_DIR/trace" \
     --report "$SMOKE_DIR/trace_report.json" --expect-metrics
+test -f "$SMOKE_DIR/trace/memory.json"
 if python scripts/check_trace.py "$SMOKE_DIR/no-such-trace" \
         > "$SMOKE_DIR/trace_neg.log" 2>&1; then
     echo "trace check passed on a missing dir"; exit 1
 else test $? -eq 2; fi
 grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/trace_neg.log"
 echo "== trace smoke OK =="
+
+echo "== memory ledger smoke: exascale ratio + forced kernel fallback =="
+# The byte-ledger contract end to end (ISSUE 8): a virtual BCSR sweep whose
+# represented tensor is >10x its resident bytes, run with the fused kernel
+# forced onto a tiny VMEM panel budget so EVERY dispatch falls back to the
+# oracle — the trace must carry kernel/fallback instants, the report
+# per-unit fallback counts, and memory.json a ledger check_trace.py
+# validates (and exit-2s on a truncated copy).
+RESCAL_VMEM_PANEL_BYTES=4096 python -m repro.launch.rescalk_run \
+    --data virtual:bcsr:n=2048,m=2,k=3,bs=128,density=0.02 \
+    --k-min 2 --k-max 3 --r 2 --iters 10 \
+    --use-fused-kernel --fused-impl pallas \
+    --trace "$SMOKE_DIR/memtrace" --report "$SMOKE_DIR/mem_report.json" \
+    | tee "$SMOKE_DIR/mem.log"
+grep -q "selected k_opt" "$SMOKE_DIR/mem.log"
+grep -q "kernel fallback" "$SMOKE_DIR/mem.log"
+python scripts/check_trace.py "$SMOKE_DIR/memtrace" \
+    --report "$SMOKE_DIR/mem_report.json" --expect-memory
+python - "$SMOKE_DIR/memtrace/memory.json" "$SMOKE_DIR/mem_report.json" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+rep = json.load(open(sys.argv[2]))
+ratio = doc["ledger"]["compression"]
+assert ratio > 10, f"exascale ratio {ratio} <= 10"
+assert doc["fallbacks"]["count"] >= 1, doc["fallbacks"]
+assert any(e.get("peak") for e in doc["per_k"].values()), doc["per_k"]
+assert rep["meta"]["n_kernel_fallbacks"] >= 1, rep["meta"]
+assert all(u["kernel_fallbacks"] >= 1 for u in rep["units"]), rep["units"]
+print(f"ledger OK: {ratio:.1f}x, {doc['fallbacks']['count']} fallback(s)")
+PY
+head -c 40 "$SMOKE_DIR/memtrace/memory.json" > "$SMOKE_DIR/memtrace_trunc.json"
+mkdir -p "$SMOKE_DIR/memtrace_bad"
+cp "$SMOKE_DIR/memtrace/trace.jsonl" "$SMOKE_DIR/memtrace/trace_chrome.json" \
+    "$SMOKE_DIR/memtrace_bad/"
+cp "$SMOKE_DIR/memtrace_trunc.json" "$SMOKE_DIR/memtrace_bad/memory.json"
+if python scripts/check_trace.py "$SMOKE_DIR/memtrace_bad" --expect-memory \
+        > "$SMOKE_DIR/mem_neg.log" 2>&1; then
+    echo "trace check passed on a truncated memory.json"; exit 1
+else test $? -eq 2; fi
+grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/mem_neg.log"
+echo "== memory ledger smoke OK =="
 
 echo "== perf gate: ensemble, grid and fused-kernel speedups =="
 # Soft regression gate on the recorded trajectories (refreshed by

@@ -17,6 +17,13 @@ older releases.  Currently shimmed:
   * ``compiled.cost_analysis()`` — returns a dict on newer JAX, a
     one-dict-per-program list on older; ``cost_analysis_dict`` normalizes
     both to a flat {metric: value} dict.
+  * ``compiled.memory_analysis()`` — the stats object gained
+    ``peak_memory_in_bytes`` only on newer releases (0.4.x lacks it) and
+    is ``None`` on some backends; ``program_memory`` normalizes to one
+    byte-breakdown dict or ``None``, never a silent 0.
+  * ``device.memory_stats()`` — allocator watermarks exist on TPU/GPU,
+    return ``None`` (or raise) on CPU; ``device_memory_stats`` flattens
+    to a plain int dict, ``{}`` when unsupported.
   * ``jax.log_compiles`` message formats — the logger text that announces
     an XLA compilation has been reworded across releases;
     ``capture_compiles`` parses the known spellings so the compile-count
@@ -39,9 +46,11 @@ __all__ = [
     "axis_types_kwargs",
     "capture_compiles",
     "cost_analysis_dict",
+    "device_memory_stats",
     "donating_jit",
     "drain_effects",
     "make_mesh",
+    "program_memory",
     "tpu_compiler_params",
 ]
 
@@ -237,6 +246,67 @@ def drain_effects() -> None:
     barrier = getattr(jax, "effects_barrier", None)
     if barrier is not None:
         barrier()
+
+
+def program_memory(compiled) -> dict[str, Any] | None:
+    """Normalize ``compiled.memory_analysis()`` across JAX pins.
+
+    Returns one byte-breakdown dict::
+
+        {"argument": int, "output": int, "temp": int, "alias": int,
+         "peak": int, "total": int, "peak_estimated": bool}
+
+    where ``total = argument + output + temp - alias`` and ``peak`` is the
+    backend's ``peak_memory_in_bytes`` when the pin exposes it (newer JAX)
+    or that total with ``peak_estimated=True`` when it does not (0.4.x
+    ships ``CompiledMemoryStats`` without the peak field).  Returns
+    ``None`` when the backend offers no memory analysis at all — callers
+    must treat that as "unknown", never as 0 bytes (the silent-zero
+    ``getattr(mem, ..., 0)`` default this shim replaces).
+    """
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        return None
+    if mem is None:
+        return None
+
+    def _field(name):
+        v = getattr(mem, name, None)
+        return int(v) if isinstance(v, (int, float)) else None
+
+    arg = _field("argument_size_in_bytes")
+    out = _field("output_size_in_bytes")
+    temp = _field("temp_size_in_bytes")
+    if arg is None and out is None and temp is None:
+        return None
+    arg, out, temp = arg or 0, out or 0, temp or 0
+    alias = _field("alias_size_in_bytes") or 0
+    total = arg + out + temp - alias
+    peak = _field("peak_memory_in_bytes")
+    estimated = peak is None
+    return {"argument": arg, "output": out, "temp": temp, "alias": alias,
+            "peak": total if estimated else peak, "total": total,
+            "peak_estimated": estimated}
+
+
+def device_memory_stats(device=None) -> dict[str, int]:
+    """Allocator statistics of one device as a flat int dict.
+
+    TPU/GPU backends report ``bytes_in_use`` / ``peak_bytes_in_use`` et
+    al.; CPU returns ``None`` (or older pins raise) — normalized here to
+    ``{}`` so callers can record "no device watermark" instead of
+    crashing or inventing zeros.
+    """
+    try:
+        dev = device if device is not None else jax.local_devices()[0]
+        stats = dev.memory_stats()
+    except Exception:
+        return {}
+    if not isinstance(stats, dict):
+        return {}
+    return {str(k): int(v) for k, v in stats.items()
+            if isinstance(v, (int, float))}
 
 
 def cost_analysis_dict(analysis) -> dict[str, float]:

@@ -89,6 +89,16 @@ class DatasetManifest:
         than what any host actually touches."""
         return self.logical_bytes / max(self.resident_bytes, 1)
 
+    def byte_ledger(self) -> dict[str, Any]:
+        """The represented-vs-resident accounting in one place — seed of
+        ``obs.memory.MemoryLedger`` and of benchmarks/ingest.py's virtual
+        acceptance check, so the bench and the trace artifact can never
+        disagree about the exascale ratio."""
+        return {"kind": self.kind,
+                "logical_bytes": int(self.logical_bytes),
+                "resident_bytes": int(self.resident_bytes),
+                "compression": self.compression}
+
     def fingerprint(self) -> dict[str, Any]:
         """JSON-able identity for the scheduler's sweep.json guard."""
         d = dataclasses.asdict(self)

@@ -8,13 +8,23 @@ impl selection:
 
 `fused_xa_xtb` additionally panelizes the n2 axis so the kernel's xtb VMEM
 window (n2_panel * k * 4B, double-buffered) stays under the budget.
+
+Fallback telemetry: every budget-driven pallas->ref downgrade runs through
+`_note_fallback`, which bumps a module counter (`kernel_fallbacks()`) and —
+when a tracer is installed — emits a `kernel/fallback` instant carrying the
+budget arithmetic.  Dispatch happens at Python trace time, so the telemetry
+adds nothing to the compiled programs and the untraced build stays
+bit-identical.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import BCSR
+from repro.obs import trace as _obs
 
 from . import ref as _ref
 from .bcsr_fused import bcsr_xa_xta as _bcsr_fused_pallas
@@ -23,7 +33,27 @@ from .flash_attention import flash_attention as _flash_pallas
 from .fused_bilinear import fused_xa_xtb as _fused_pallas
 from .mu_ratio import mu_update_a as _mu_pallas
 
-VMEM_PANEL_BYTES = 4 * 1024 * 1024   # xtb window budget (pre double-buffer)
+# xtb window budget (pre double-buffer); RESCAL_VMEM_PANEL_BYTES overrides
+# so CI can force the oracle fallback on any shard size
+VMEM_PANEL_BYTES = int(os.environ.get("RESCAL_VMEM_PANEL_BYTES",
+                                      4 * 1024 * 1024))
+
+_n_fallbacks = 0
+
+
+def kernel_fallbacks() -> int:
+    """Process-lifetime count of budget-driven pallas->oracle fallbacks.
+    The scheduler diffs this around each unit to attribute fallbacks."""
+    return _n_fallbacks
+
+
+def _note_fallback(kernel: str, requested_bytes: int, *,
+                   chosen: str = "ref") -> None:
+    global _n_fallbacks
+    _n_fallbacks += 1
+    _obs.event("kernel/fallback", kernel=kernel,
+               requested_bytes=int(requested_bytes),
+               budget_bytes=int(VMEM_PANEL_BYTES), chosen=chosen)
 
 
 def _on_tpu() -> bool:
@@ -86,17 +116,23 @@ def mu_update_a(A, Num, S, eps: float = 1e-16, *, impl: str = "auto",
     return _mu_pallas(A, Num, S, eps, bm=bm, interpret=impl == "interpret")
 
 
+def _panel_bytes(sp: BCSR, k: int, dtype, n_panels: int) -> int:
+    """VMEM-resident bytes of the BCSR kernels' (nb, bs, k) output
+    panel(s)."""
+    return n_panels * sp.nblocks * sp.bs * k * jnp.dtype(dtype).itemsize
+
+
 def _panel_overflow(sp: BCSR, k: int, dtype, n_panels: int) -> bool:
     """True when the BCSR kernels' VMEM-resident (nb, bs, k) output
     panel(s) exceed the panel budget (panelized outputs are a ROADMAP
     follow-on; until then the jnp oracle takes over)."""
-    itemsize = jnp.dtype(dtype).itemsize
-    return n_panels * sp.nblocks * sp.bs * k * itemsize > VMEM_PANEL_BYTES
+    return _panel_bytes(sp, k, dtype, n_panels) > VMEM_PANEL_BYTES
 
 
 def bcsr_spmm(sp: BCSR, B, *, impl: str = "auto"):
     impl = _resolve(impl)
     if impl == "pallas" and _panel_overflow(sp, B.shape[1], B.dtype, 1):
+        _note_fallback("bcsr_spmm", _panel_bytes(sp, B.shape[1], B.dtype, 1))
         impl = "ref"
     if impl == "ref":
         return _ref.ref_bcsr_spmm(sp, B)
@@ -108,6 +144,8 @@ def bcsr_xa_xta(sp: BCSR, B1, B2, *, impl: str = "auto"):
     — the sparse twin of `fused_xa_xtb` (kernels/bcsr_fused.py)."""
     impl = _resolve(impl)
     if impl == "pallas" and _panel_overflow(sp, B1.shape[1], B1.dtype, 2):
+        _note_fallback("bcsr_xa_xta",
+                       _panel_bytes(sp, B1.shape[1], B1.dtype, 2))
         impl = "ref"
     if impl == "ref":
         return _ref.ref_bcsr_xa_xta(sp, B1, B2)
@@ -123,8 +161,9 @@ def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
     # like the BCSR dispatchers (oversized heads fall back to the oracle)
     d = q.shape[-1]
     itemsize = jnp.dtype(q.dtype).itemsize
-    if impl == "pallas" and \
-            (bq + 2 * bk) * d * itemsize > VMEM_PANEL_BYTES:
+    window = (bq + 2 * bk) * d * itemsize
+    if impl == "pallas" and window > VMEM_PANEL_BYTES:
+        _note_fallback("flash_attention", window)
         impl = "ref"
     if impl == "ref":
         return _ref.ref_attention(q, k, v, causal=causal, q_offset=q_offset,

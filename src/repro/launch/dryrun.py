@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs import (ARCHS, RESCAL_CONFIGS, SHAPES, RescalConfig,
                            get_config, input_specs)
+from repro.dist import compat
 from repro.configs.base import ShapeSpec
 from repro.dist import sharding as shd
 from repro.dist.engine import (DistRescalConfig, make_dist_step,
@@ -176,14 +177,22 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
     compiled = lowered.compile()
     compile_s = time.time() - t0
     cost = hlo_costs.xla_cost_analysis(compiled)
-    mem = compiled.memory_analysis()
+    # normalized across JAX pins (dist.compat); None = backend reported no
+    # memory analysis — surfaced loudly below, never claimed as 0 bytes
+    mem = compat.program_memory(compiled)
     hlo = compiled.as_text()
     loop_aware = hlo_costs.analyze(hlo)     # trip-count-corrected
     coll = loop_aware["collectives"]
     ops = hlo_stats.op_histogram(hlo)
 
-    mem_total = (mem.argument_size_in_bytes + mem.output_size_in_bytes
-                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+    if mem is None:
+        print(f"WARNING: backend reported no memory analysis for "
+              f"{arch}/{shape}; the 16-GiB fit check cannot run",
+              file=sys.stderr)
+        memory = None
+    else:
+        memory = dict(mem,
+                      fits_16gib=bool(mem["total"] <= CHIP_HBM_BYTES))
     return dict(
         base,
         skipped=False,
@@ -194,14 +203,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
         xla_flops_raw=cost.get("flops", 0.0),     # while bodies counted 1x
         xla_bytes_raw=cost.get("bytes accessed", 0.0),
         model_flops_global=model_fl,
-        memory={
-            "argument": mem.argument_size_in_bytes,
-            "output": mem.output_size_in_bytes,
-            "temp": mem.temp_size_in_bytes,
-            "peak": getattr(mem, "peak_memory_in_bytes", 0),
-            "total": mem_total,
-            "fits_16gib": bool(mem_total <= CHIP_HBM_BYTES),
-        },
+        memory=memory,
         collectives=coll,
         ops=ops,
     )
@@ -274,8 +276,10 @@ def main():
         with open(args.out, "w") as f:
             f.write(js)
     print(js)
-    if not stats.get("skipped"):
-        print(f"\nmemory/device: {stats['memory']['total']/2**30:.2f} GiB "
+    if not stats.get("skipped") and stats.get("memory") is not None:
+        est = "~" if stats["memory"].get("peak_estimated") else ""
+        print(f"\nmemory/device: {stats['memory']['total']/2**30:.2f} GiB, "
+              f"peak {est}{stats['memory']['peak']/2**30:.2f} GiB "
               f"(fits 16 GiB: {stats['memory']['fits_16gib']})",
               file=sys.stderr)
 

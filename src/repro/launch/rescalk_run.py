@@ -85,6 +85,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="compute at most this many units, then exit "
                          "(deterministic kill for resume drills)")
     ap.add_argument("--max-retries", type=int, default=1)
+    ap.add_argument("--use-fused-kernel", action="store_true",
+                    help="route the sparse MU sweep through the fused "
+                         "single-X-pass BCSR kernel (kernels/ops.py "
+                         "bcsr_xa_xta; falls back to the jnp oracle per "
+                         "the VMEM panel budget, visibly when traced)")
+    ap.add_argument("--fused-impl", default="auto",
+                    choices=("auto", "pallas", "interpret", "ref"),
+                    help="kernel impl for --use-fused-kernel (auto: "
+                         "Pallas on TPU, oracle elsewhere)")
     ap.add_argument("--sanitize", action="store_true",
                     help="runtime factor sanitizer inside the MU programs "
                          "(finite / non-negative / masked-zero asserts; "
@@ -155,6 +164,8 @@ def _run(args):
                         n_perturbations=args.r, rescal_iters=args.iters,
                         schedule=args.schedule, init=args.init,
                         sanitize=args.sanitize,
+                        use_fused_kernel=args.use_fused_kernel,
+                        fused_impl=args.fused_impl,
                         trace_metrics=bool(args.trace))
     if args.grid_chunk is not None and args.mode != "grid":
         raise SystemExit("--grid-chunk requires --mode grid")
@@ -190,7 +201,33 @@ def _run(args):
     return X, sched.report
 
 
-def _write_trace_artifacts(trace_dir, tracer, buf, report, operand, iters):
+def _memory_ledger(tracer, report, operand, op, ks, args):
+    """Assemble the sweep's byte ledger (obs.memory.MemoryLedger): manifest
+    accounting + per-rank AOT breakdowns + runtime watermarks.  The fallback
+    count derives from the tracer's `kernel/fallback` instants — the same
+    stream check_trace.py recounts, so the two cannot disagree."""
+    from repro.io import manifest_of
+    from repro.obs import memory as obs_memory
+
+    man = manifest_of(operand)
+    n_fb = sum(1 for e in tracer.events
+               if e.get("ph") == "i" and e.get("name") == "kernel/fallback")
+    sampler = tracer.memory_sampler
+    peak_host = (sampler.peak_bytes if sampler is not None else
+                 obs_memory.read_host_memory().get("hwm_bytes"))
+    return obs_memory.MemoryLedger.from_manifest(
+        man,
+        per_k=obs_memory.measure_mu_memory(op, ks),
+        peak_host_bytes=peak_host,
+        peak_device_bytes=obs_memory.device_watermark(),
+        accounted_sweep_bytes=obs_memory.accounted_ensemble_bytes(
+            man, n_members=args.r, k_max=args.k_max),
+        kernel_fallbacks=n_fb,
+        meta={"n_units": 0 if report is None else len(report.units),
+              "n_samples": 0 if sampler is None else len(sampler.samples)})
+
+
+def _write_trace_artifacts(trace_dir, tracer, buf, report, operand, args):
     """Flush the sweep's trace into its on-disk artifact set (the contract
     README "Observability" documents and scripts/check_trace.py validates)."""
     import os
@@ -203,18 +240,24 @@ def _write_trace_artifacts(trace_dir, tracer, buf, report, operand, iters):
     tracer.export_chrome(os.path.join(trace_dir, "trace_chrome.json"))
     buf.save_npz(os.path.join(trace_dir, "metrics.npz"))
     parts = [tracer.summarize(), "", buf.summarize()]
-    if report is not None and report.units:
+    artifacts = "trace.jsonl trace_chrome.json metrics.npz summary.txt"
+    if operand is not None:
         op = operand.to_bcsr() if hasattr(operand, "to_bcsr") else operand
-        ks = sorted({k for rec in report.units
+        ks = sorted({k for rec in (report.units if report else [])
                      for k in obs_costs.unit_ks(rec)})
-        measured = obs_costs.measure_mu_costs(op, ks)
-        rows = obs_costs.cost_table(report.units, op, iters=iters,
-                                    measured=measured)
-        parts += ["", obs_costs.format_cost_table(rows)]
+        if ks:
+            measured = obs_costs.measure_mu_costs(op, ks)
+            rows = obs_costs.cost_table(report.units, op, iters=args.iters,
+                                        measured=measured)
+            parts += ["", obs_costs.format_cost_table(rows)]
+        ledger = _memory_ledger(tracer, report, operand, op, ks, args)
+        ledger.save(os.path.join(trace_dir, "memory.json"))
+        parts += ["", ledger.summarize()]
+        artifacts += " memory.json"
+        print(f"[obs] memory: {ledger.summary_line()}")
     with open(os.path.join(trace_dir, "summary.txt"), "w") as f:
         f.write("\n".join(parts) + "\n")
-    print(f"[obs] trace artifacts in {trace_dir}: trace.jsonl "
-          f"trace_chrome.json metrics.npz summary.txt")
+    print(f"[obs] trace artifacts in {trace_dir}: {artifacts}")
     print(f"[obs] {len(tracer.events)} events, {len(buf)} metric records"
           + (f" ({buf.dropped} dropped)" if buf.dropped else ""))
 
@@ -231,11 +274,16 @@ def main():
     from repro.obs import metrics as obs_metrics
     from repro.obs import trace as obs
 
+    from repro.obs.memory import HostMemorySampler
+
     os.makedirs(args.trace, exist_ok=True)
     tracer = obs.Tracer(args.trace, meta={"argv": vars(args)})
     buf = obs_metrics.MetricsBuffer()
     prev_tracer = obs.install(tracer)
     prev_buf = obs_metrics.install_buffer(buf)
+    # the tracer owns the host-RSS watermark sampler for the run; started
+    # after install so its mem/sample instants land in this trace
+    tracer.memory_sampler = HostMemorySampler().start()
     operand, report = None, None
     try:
         with capture_compiles(sink=tracer.compile_event):
@@ -243,9 +291,10 @@ def main():
     finally:
         # interrupted sweeps still get their artifacts (trace.jsonl is
         # already flushed incrementally; this adds the derived views)
+        tracer.memory_sampler.stop()
         try:
             _write_trace_artifacts(args.trace, tracer, buf, report,
-                                   operand, args.iters)
+                                   operand, args)
         finally:
             obs_metrics.install_buffer(prev_buf)
             obs.install(prev_tracer)

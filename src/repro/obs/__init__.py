@@ -1,25 +1,34 @@
 """repro.obs — zero-cost-off telemetry.
 
-Three halves (ISSUE 7):
+Four halves (ISSUE 7 time/flops, ISSUE 8 bytes):
 
 * `obs.trace`   — host spans / structured events (JSONL + Chrome export).
 * `obs.metrics` — per-iteration trajectories out of the jitted MU programs,
   staged only under the static `trace_metrics` flag.
 * `obs.costs`   — achieved-vs-theoretical FLOP/byte accounting per unit.
+* `obs.memory`  — the byte ledger: represented-vs-resident accounting,
+  per-rank AOT peak breakdowns, host/device runtime watermarks, and
+  kernel-fallback counting (`memory.json` trace artifact).
 
-Import discipline: `obs.trace` is stdlib-only (safe for `repro.io`);
-`obs.metrics` needs jax+numpy only (safe for `repro.core`/`repro.dist`,
-same footing as `analysis.sanitizer`); `obs.costs` imports the heavier
-launch/core pieces lazily.
+Import discipline: `obs.trace` and `obs.memory`'s host half are
+stdlib-only (safe for `repro.io`); `obs.metrics` needs jax+numpy only
+(safe for `repro.core`/`repro.dist`, same footing as
+`analysis.sanitizer`); `obs.costs` and `obs.memory`'s AOT/device halves
+import the heavier launch/core pieces lazily.
 """
+from repro.obs.memory import (HostMemorySampler, MemoryLedger,
+                              read_host_memory)
 from repro.obs.trace import (Tracer, current, event, install, span, timed,
                              tracing)
 
 __all__ = [
+    "HostMemorySampler",
+    "MemoryLedger",
     "Tracer",
     "current",
     "event",
     "install",
+    "read_host_memory",
     "span",
     "timed",
     "tracing",

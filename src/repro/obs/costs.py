@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import Any
 
 __all__ = [
+    "aot_mu_program",
     "bcsr_mu_cost",
     "cost_table",
     "dense_mu_cost",
@@ -66,52 +67,59 @@ def operand_mu_cost(operand: Any, k: int,
     return dense_mu_cost(n, m, k, dtype_bytes)
 
 
-def measure_mu_costs(operand: Any, ks: list[int], *,
-                     eps: float | None = None) -> dict[int, dict[str, float]]:
-    """XLA cost analysis of a one-iteration, one-member MU program per rank.
+def aot_mu_program(operand: Any, k: int, *, eps: float | None = None):
+    """AOT-compile a one-iteration, one-member MU program at rank `k`.
 
-    AOT `lower(...).compile()` on abstract factor shapes — nothing executes
+    `lower(...).compile()` on abstract factor shapes — nothing executes
     and nothing enters the jit caches the sweep uses (fresh `jax.jit`
-    wrappers).  Returns {} entries where the backend offers no analysis;
-    callers treat the column as optional.
+    wrappers).  The one program both cost accounting (`measure_mu_costs`)
+    and memory accounting (`obs.memory.measure_mu_memory`) interrogate,
+    so the two artifacts always describe the same compiled bytes.
     """
     import jax
 
+    if hasattr(operand, "nnzb"):
+        from repro.core.sparse import sparse_mu_step
+
+        def step(sp, A, R):
+            return sparse_mu_step(sp, A, R) if eps is None else \
+                sparse_mu_step(sp, A, R, eps)
+
+        n = operand.n
+        args = (operand,
+                jax.ShapeDtypeStruct((n, k), operand.data.dtype),
+                jax.ShapeDtypeStruct((operand.m, k, k),
+                                     operand.data.dtype))
+    else:
+        from repro.core.rescal import RescalState, mu_step_batched
+
+        def step(X, A, R, st):
+            state = RescalState(A=A, R=R, step=st)
+            s = mu_step_batched(X, state) if eps is None else \
+                mu_step_batched(X, state, eps)
+            return s.A, s.R
+
+        m, n = operand.shape[0], operand.shape[1]
+        dt = operand.dtype
+        args = (jax.ShapeDtypeStruct((m, n, n), dt),
+                jax.ShapeDtypeStruct((n, k), dt),
+                jax.ShapeDtypeStruct((m, k, k), dt),
+                jax.ShapeDtypeStruct((), "int32"))
+    return jax.jit(step).lower(*args).compile()
+
+
+def measure_mu_costs(operand: Any, ks: list[int], *,
+                     eps: float | None = None) -> dict[int, dict[str, float]]:
+    """XLA cost analysis of a one-iteration, one-member MU program per rank
+    (`aot_mu_program`).  Returns {} entries where the backend offers no
+    analysis; callers treat the column as optional.
+    """
     from repro.launch.hlo_costs import xla_cost_analysis
 
     out: dict[int, dict[str, float]] = {}
-    sparse = hasattr(operand, "nnzb")
     for k in ks:
         try:
-            if sparse:
-                from repro.core.sparse import sparse_mu_step
-
-                def step(sp, A, R):
-                    return sparse_mu_step(sp, A, R) if eps is None else \
-                        sparse_mu_step(sp, A, R, eps)
-
-                n = operand.n
-                args = (operand,
-                        jax.ShapeDtypeStruct((n, k), operand.data.dtype),
-                        jax.ShapeDtypeStruct((operand.m, k, k),
-                                             operand.data.dtype))
-            else:
-                from repro.core.rescal import RescalState, mu_step_batched
-
-                def step(X, A, R, st):
-                    state = RescalState(A=A, R=R, step=st)
-                    s = mu_step_batched(X, state) if eps is None else \
-                        mu_step_batched(X, state, eps)
-                    return s.A, s.R
-
-                m, n = operand.shape[0], operand.shape[1]
-                dt = operand.dtype
-                args = (jax.ShapeDtypeStruct((m, n, n), dt),
-                        jax.ShapeDtypeStruct((n, k), dt),
-                        jax.ShapeDtypeStruct((m, k, k), dt),
-                        jax.ShapeDtypeStruct((), "int32"))
-            compiled = jax.jit(step).lower(*args).compile()
-            out[k] = xla_cost_analysis(compiled)
+            out[k] = xla_cost_analysis(aot_mu_program(operand, k, eps=eps))
         except Exception:  # no cost analysis on this backend/version
             out[k] = {}
     return out

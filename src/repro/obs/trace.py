@@ -50,6 +50,8 @@ class Tracer:
                  meta: dict[str, Any] | None = None):
         self.out_dir = out_dir
         self.events: list[dict[str, Any]] = []
+        # host-RSS watermark sampler (obs.memory); attached by `tracing`
+        self.memory_sampler: Any | None = None
         self._lock = threading.Lock()
         self._t0 = time.perf_counter()
         self._pid = os.getpid()
@@ -177,13 +179,27 @@ def current() -> Tracer | None:
 
 @contextlib.contextmanager
 def tracing(out_dir: str | None = None, *,
-            meta: dict[str, Any] | None = None) -> Iterator[Tracer]:
-    """Scoped install: create a Tracer, install it, restore + close on exit."""
+            meta: dict[str, Any] | None = None,
+            sample_memory: bool = False,
+            sample_interval: float = 0.25) -> Iterator[Tracer]:
+    """Scoped install: create a Tracer, install it, restore + close on exit.
+
+    With ``sample_memory=True`` the tracer also owns a background host-RSS
+    watermark sampler (`obs.memory.HostMemorySampler`) for its lifetime —
+    started after install (so its `mem/sample` instants land in this trace)
+    and stopped before teardown; the sampler survives on
+    ``tracer.memory_sampler`` for peak readout.
+    """
     tracer = Tracer(out_dir, meta=meta)
     prev = install(tracer)
+    if sample_memory:
+        from repro.obs.memory import HostMemorySampler
+        tracer.memory_sampler = HostMemorySampler(sample_interval).start()
     try:
         yield tracer
     finally:
+        if tracer.memory_sampler is not None:
+            tracer.memory_sampler.stop()
         install(prev)
         tracer.close()
 

@@ -36,6 +36,13 @@ class UnitRecord:
     # previously executed units; baseline_seconds is that median
     straggler: bool = False
     baseline_seconds: float | None = None
+    # memory observability (ISSUE 8; defaults keep older reports loadable):
+    # host/device watermarks snapshotted when the unit finished, and how
+    # many pallas->oracle panel-budget fallbacks its execution triggered.
+    # None = watermark unavailable on this platform, never 0.
+    peak_host_bytes: int | None = None
+    peak_device_bytes: int | None = None
+    kernel_fallbacks: int = 0
 
 
 @dataclasses.dataclass

@@ -210,6 +210,9 @@ class UnitOutcome:
     retries: int
     straggler: bool = False         # flagged by the StragglerMonitor
     baseline: float | None = None   # monitor's median seconds at flag time
+    peak_host: int | None = None    # host HWM bytes when the unit finished
+    peak_device: int | None = None  # device allocator peak (None on CPU)
+    fallbacks: int = 0              # pallas->oracle fallbacks this unit
 
 
 class SweepScheduler:
@@ -365,6 +368,11 @@ class SweepScheduler:
                            seconds=0.0, reused=True, retries=0)
 
     def _execute_unit(self, X, unit: WorkUnit) -> UnitOutcome:
+        # kernel-fallback attribution: ops.py bumps a process counter on
+        # every budget-driven pallas->oracle downgrade; the delta around
+        # this unit's execution is its fallback count
+        from repro.kernels.ops import kernel_fallbacks
+        fb0 = kernel_fallbacks()
         attempt = 0
         while True:
             try:
@@ -404,9 +412,16 @@ class SweepScheduler:
             with obs.span("sched/checkpoint", uid=unit.uid):
                 ckpt.save(os.path.join(self.ckpt_dir, unit.uid), 0,
                           res._asdict())
+        # unit-boundary watermarks: kernel host HWM (cannot miss a spike)
+        # + device allocator peak where the backend reports one.  Pure
+        # host-side reads — nothing enters any traced program.
+        from repro.obs.memory import device_watermark, read_host_memory
         return UnitOutcome(unit=unit, result=res, seconds=dt, reused=False,
                            retries=attempt, straggler=straggler,
-                           baseline=baseline)
+                           baseline=baseline,
+                           peak_host=read_host_memory().get("hwm_bytes"),
+                           peak_device=device_watermark(),
+                           fallbacks=kernel_fallbacks() - fb0)
 
     # -- the sweep ----------------------------------------------------------
 
@@ -461,7 +476,10 @@ class SweepScheduler:
                                members=list(o.unit.members),
                                seconds=o.seconds, reused=o.reused,
                                retries=o.retries, straggler=o.straggler,
-                               baseline_seconds=o.baseline) for o in outs)
+                               baseline_seconds=o.baseline,
+                               peak_host_bytes=o.peak_host,
+                               peak_device_bytes=o.peak_device,
+                               kernel_fallbacks=o.fallbacks) for o in outs)
             with obs.span("sched/reduce", k=k):
                 per_k[k] = reduce_k(X_red, cfg, k, A_ens, R_ens, errs)
             if self.verbose:
@@ -492,7 +510,10 @@ class SweepScheduler:
                     reused=out.reused, retries=out.retries,
                     cells=[list(c) for c in unit.cells],
                     straggler=out.straggler,
-                    baseline_seconds=out.baseline))
+                    baseline_seconds=out.baseline,
+                    peak_host_bytes=out.peak_host,
+                    peak_device_bytes=out.peak_device,
+                    kernel_fallbacks=out.fallbacks))
                 done: list[int] = []
                 for row, (k, q) in enumerate(unit.cells):
                     # .copy(): a cropped VIEW would pin the whole padded
@@ -518,7 +539,9 @@ class SweepScheduler:
                                rel_err=rel, k_opt=k_opt, per_k=per_k)
 
         meta = {"n_units": len(self.units),
-                "n_stragglers": sum(1 for r in records if r.straggler)}
+                "n_stragglers": sum(1 for r in records if r.straggler),
+                "n_kernel_fallbacks": sum(r.kernel_fallbacks
+                                          for r in records)}
         if self.mesh is not None:
             meta["mesh"] = {str(a): int(s)
                             for a, s in dict(self.mesh.shape).items()}

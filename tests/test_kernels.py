@@ -179,6 +179,49 @@ class TestBcsrFused:
         assert calls, "overflow did not fall back to the ref oracle"
         np.testing.assert_allclose(xa, sp.spmm(s, B), rtol=1e-5, atol=1e-6)
 
+    def test_fallback_emits_event_with_budget_arithmetic(self, key,
+                                                         monkeypatch):
+        """A budget-driven downgrade must bump the fallback counter, leave
+        a kernel/fallback instant carrying requested-vs-budget bytes, and
+        still match the oracle numerically (ISSUE 8)."""
+        import repro.kernels.ops as ops
+        from repro.obs import trace as obs
+        s = sp.random_bcsr(key, m=2, n=128, bs=32, block_density=0.5)
+        B = jax.random.uniform(key, (s.n, 8))
+        monkeypatch.setattr(ops, "VMEM_PANEL_BYTES", 16)
+        n0 = ops.kernel_fallbacks()
+        with obs.tracing() as t:
+            xa, xtb = ops.bcsr_xa_xta(s, B, B, impl="pallas")
+            out = ops.bcsr_spmm(s, B, impl="pallas")
+        assert ops.kernel_fallbacks() - n0 == 2
+        evs = [e for e in t.events if e["name"] == "kernel/fallback"]
+        assert {e["args"]["kernel"] for e in evs} \
+            == {"bcsr_xa_xta", "bcsr_spmm"}
+        fused = next(e for e in evs
+                     if e["args"]["kernel"] == "bcsr_xa_xta")
+        itemsize = jnp.dtype(B.dtype).itemsize
+        assert fused["args"]["requested_bytes"] \
+            == 2 * s.nblocks * s.bs * 8 * itemsize
+        assert fused["args"]["budget_bytes"] == 16
+        assert fused["args"]["chosen"] == "ref"
+        np.testing.assert_allclose(xa, sp.spmm(s, B), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(xtb, sp.spmm_t(s, B), rtol=1e-5,
+                                   atol=1e-6)
+        np.testing.assert_allclose(out, sp.spmm(s, B), rtol=1e-5, atol=1e-6)
+
+    def test_fallback_counts_without_tracer(self, key, monkeypatch):
+        """Untraced dispatch still counts (the scheduler diffs the counter)
+        but emits nothing — the zero-cost-off contract."""
+        import repro.kernels.ops as ops
+        from repro.obs import trace as obs
+        assert obs.current() is None
+        s = sp.random_bcsr(key, m=2, n=128, bs=32, block_density=0.5)
+        B = jax.random.uniform(key, (s.n, 8))
+        monkeypatch.setattr(ops, "VMEM_PANEL_BYTES", 16)
+        n0 = ops.kernel_fallbacks()
+        ops.bcsr_xa_xta(s, B, B, impl="pallas")
+        assert ops.kernel_fallbacks() == n0 + 1
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (5, 1)])

@@ -18,8 +18,10 @@ from repro.core.rescal import (init_factors, masked_mu_step,
                                mu_step_batched, mu_step_sliced, rescal)
 from repro.core.sparse import masked_sparse_mu_step, sparse_mu_step
 from repro.data.synthetic import synthetic_rescal
-from repro.dist.compat import capture_compiles, drain_effects
+from repro.dist.compat import (capture_compiles, device_memory_stats,
+                               drain_effects, program_memory)
 from repro.obs import costs as obs_costs
+from repro.obs import memory as obs_memory
 from repro.obs import trace as obs
 from repro.obs.metrics import (MetricsBuffer, install_buffer,
                                record_metrics, update_ratio)
@@ -543,3 +545,288 @@ class TestCheckTrace:
         assert ct.main([str(tmp_path), "--expect-metrics"]) == 0
         np.savez(tmp_path / "metrics.npz", **{"t.other": np.ones(3)})
         assert ct.main([str(tmp_path), "--expect-metrics"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Memory observability (ISSUE 8): compat normalizer, host watermarks,
+# AOT per-rank accounting, the ledger, scheduler fields, the validator
+# ---------------------------------------------------------------------------
+
+class _FakeMemStats:
+    """Stand-in for CompiledMemoryStats with a controllable field set."""
+
+    def __init__(self, **fields):
+        for k, v in fields.items():
+            setattr(self, k, v)
+
+
+class _FakeCompiled:
+    def __init__(self, mem):
+        self._mem = mem
+
+    def memory_analysis(self):
+        if isinstance(self._mem, Exception):
+            raise self._mem
+        return self._mem
+
+
+class TestProgramMemory:
+    def test_real_compiled_program(self):
+        pm = program_memory(jax.jit(lambda x: x * 2 + 1)
+                            .lower(jnp.ones(8)).compile())
+        assert pm is not None
+        assert pm["total"] == (pm["argument"] + pm["output"] + pm["temp"]
+                               - pm["alias"])
+        assert pm["peak"] >= max(pm["argument"], pm["output"], pm["temp"])
+
+    def test_missing_peak_estimates_from_total(self):
+        pm = program_memory(_FakeCompiled(_FakeMemStats(
+            argument_size_in_bytes=100, output_size_in_bytes=20,
+            temp_size_in_bytes=30, alias_size_in_bytes=10)))
+        assert pm["peak_estimated"] is True
+        assert pm["peak"] == pm["total"] == 140
+
+    def test_reported_peak_passes_through(self):
+        pm = program_memory(_FakeCompiled(_FakeMemStats(
+            argument_size_in_bytes=100, output_size_in_bytes=20,
+            temp_size_in_bytes=30, alias_size_in_bytes=0,
+            peak_memory_in_bytes=999)))
+        assert pm["peak"] == 999 and pm["peak_estimated"] is False
+
+    def test_no_analysis_is_none_never_zero(self):
+        """The dryrun silent-zero bug: unknown must be None, not 0."""
+        assert program_memory(_FakeCompiled(None)) is None
+        assert program_memory(_FakeCompiled(RuntimeError("n/a"))) is None
+        assert program_memory(_FakeCompiled(_FakeMemStats())) is None
+
+    def test_device_memory_stats_is_a_dict(self):
+        # CPU backends report no stats -> {}, never an exception
+        assert isinstance(device_memory_stats(), dict)
+
+
+class TestHostMemory:
+    def test_read_host_memory_positive(self):
+        host = obs_memory.read_host_memory()
+        assert host["rss_bytes"] > 0
+        assert host["hwm_bytes"] >= host["rss_bytes"] - 64 * 2**20
+
+    def test_sampler_tracks_peak_and_emits_events(self):
+        with obs.tracing() as t:
+            s = obs_memory.HostMemorySampler(interval=0.01).start()
+            s.sample_once()
+            s.stop()
+        assert len(s.samples) >= 2
+        assert s.peak_rss_bytes > 0
+        assert s.peak_bytes >= s.peak_rss_bytes     # folds in kernel HWM
+        assert any(e["name"] == "mem/sample" and e["args"]["rss_bytes"] > 0
+                   for e in t.events)
+
+    def test_sampler_silent_without_tracer(self):
+        assert obs.current() is None
+        s = obs_memory.HostMemorySampler(interval=0.01)
+        s.sample_once()                              # no tracer: must not raise
+        assert s.peak_rss_bytes > 0
+
+    def test_tracing_owns_sampler_lifecycle(self):
+        with obs.tracing(sample_memory=True, sample_interval=0.01) as t:
+            assert t.memory_sampler is not None
+        assert t.memory_sampler._thread is None      # stopped on exit
+        assert t.memory_sampler.peak_bytes > 0
+
+
+class TestMeasureMuMemory:
+    def test_per_k_breakdown_dense_and_sparse(self):
+        X = jnp.ones((2, 12, 12))
+        s = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=32, bs=8,
+                              block_density=0.5)
+        for op in (X, s):
+            out = obs_memory.measure_mu_memory(op, [2, 3])
+            assert sorted(out) == [2, 3]
+            for entry in out.values():
+                if entry:            # {} allowed where backend has no analysis
+                    assert entry["peak"] >= max(entry["argument"],
+                                                entry["output"],
+                                                entry["temp"])
+
+
+class TestMemoryLedger:
+    def _ledger(self, **kw):
+        s = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=64, bs=16,
+                              block_density=0.25)
+        from repro.io import manifest_of
+        return obs_memory.MemoryLedger.from_manifest(manifest_of(s), **kw)
+
+    def test_from_manifest_and_compression(self):
+        led = self._ledger()
+        assert led.kind == "bcsr"
+        assert led.compression == led.logical_bytes / led.resident_bytes
+
+    def test_device_peak_prefers_runtime_then_aot(self):
+        led = self._ledger(per_k={2: {"peak": 100}, 3: {"peak": 300}})
+        assert led.device_peak() == 300              # AOT fallback: max per-k
+        led.peak_device_bytes = 777
+        assert led.device_peak() == 777              # runtime watermark wins
+        assert self._ledger().device_peak() is None  # neither known
+
+    def test_save_load_round_trip(self, tmp_path):
+        led = self._ledger(per_k={2: {"argument": 1, "output": 2, "temp": 3,
+                                      "alias": 0, "peak": 6, "total": 6,
+                                      "peak_estimated": True}},
+                           peak_host_bytes=10 * 2**20,
+                           kernel_fallbacks=4)
+        path = tmp_path / "memory.json"
+        led.save(str(path))
+        back = obs_memory.MemoryLedger.load(str(path))
+        assert back.per_k[2]["peak"] == 6            # int keys restored
+        assert back.kernel_fallbacks == 4
+        assert back.peak_device_bytes is None        # unknown stays unknown
+        assert back.compression == pytest.approx(led.compression)
+
+    def test_summary_states_the_claim(self):
+        led = self._ledger(peak_host_bytes=64 * 2**20, kernel_fallbacks=2)
+        line = led.summary_line()
+        assert "represented" in line and "resident" in line
+        assert "2 kernel fallback(s)" in line
+        assert "k" in led.summarize()
+
+    def test_accounted_ensemble_bytes_formula(self):
+        from repro.io import manifest_of
+        s = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=64, bs=16,
+                              block_density=0.25)
+        man = manifest_of(s)
+        got = obs_memory.accounted_ensemble_bytes(man, n_members=3, k_max=4)
+        want = (man.resident_bytes * 4
+                + 3 * (man.n_factor * 4 + man.m * 16) * 4)
+        assert got == want
+
+
+class TestSchedulerMemory:
+    def _run_sweep(self, **cfg_kw):
+        key = jax.random.PRNGKey(0)
+        X, _, _ = synthetic_rescal(key, n=16, m=2, k=3)
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=3, **cfg_kw)
+        sched = SweepScheduler(cfg, mode="batched")
+        sched.run(X)
+        return sched
+
+    def test_unit_records_carry_watermarks(self):
+        sched = self._run_sweep()
+        for rec in sched.report.units:
+            assert rec.peak_host_bytes is not None
+            assert rec.peak_host_bytes > 0
+            assert rec.kernel_fallbacks == 0         # dense sweep: no kernels
+        assert sched.report.meta["n_kernel_fallbacks"] == 0
+
+    def test_forced_fallback_sweep_counts_per_unit(self, monkeypatch):
+        """The end-to-end fallback contract: a fused-kernel sweep forced
+        onto a tiny panel budget must emit kernel/fallback instants, record
+        nonzero per-unit counts, and still select a k."""
+        import repro.kernels.ops as ops
+        monkeypatch.setattr(ops, "VMEM_PANEL_BYTES", 16)
+        s = spmod.random_bcsr(jax.random.PRNGKey(0), m=2, n=64, bs=16,
+                              block_density=0.5)
+        cfg = RescalkConfig(k_min=2, k_max=2, n_perturbations=2,
+                            rescal_iters=3, use_fused_kernel=True,
+                            fused_impl="pallas")
+        with obs.tracing() as t:
+            sched = SweepScheduler(cfg, mode="batched")
+            res = sched.run(s)
+        assert int(res.k_opt) == 2
+        evs = [e for e in t.events if e["name"] == "kernel/fallback"]
+        assert evs, "no kernel/fallback instants in the trace"
+        assert evs[0]["args"]["budget_bytes"] == 16
+        assert evs[0]["args"]["requested_bytes"] > 16
+        assert all(u.kernel_fallbacks >= 1 for u in sched.report.units)
+        assert sched.report.meta["n_kernel_fallbacks"] == len(evs)
+
+    def test_report_round_trips_memory_fields(self, tmp_path):
+        sched = self._run_sweep()
+        path = tmp_path / "r.json"
+        sched.report.save(str(path))
+        loaded = SelectionReport.load(str(path))
+        for rec in loaded.units:
+            assert rec.peak_host_bytes > 0
+            assert rec.peak_device_bytes is None     # CPU: unknown != 0
+            assert rec.kernel_fallbacks == 0
+
+    def test_pre_memory_report_json_still_loads(self, tmp_path):
+        """PR 7-era reports lack the byte fields; defaults must fill in."""
+        rec = {"uid": "unit_k2_q0-1", "k": 2, "members": [0, 1],
+               "seconds": 1.0, "reused": False, "retries": 0,
+               "cells": None, "straggler": False, "baseline_seconds": None}
+        d = {"ks": [2], "s_min": [0.9], "s_mean": [0.9], "rel_err": [0.1],
+             "k_opt": 2, "criterion": "threshold", "mode": "batched",
+             "n_perturbations": 2, "units": [rec], "meta": {}}
+        path = tmp_path / "old.json"
+        path.write_text(json.dumps(d))
+        loaded = SelectionReport.load(str(path))
+        assert loaded.units[0].peak_host_bytes is None
+        assert loaded.units[0].peak_device_bytes is None
+        assert loaded.units[0].kernel_fallbacks == 0
+
+
+class TestCheckTraceMemory:
+    def _trace_dir(self, tmp_path, *, n_fallback_events=0):
+        with obs.tracing(str(tmp_path)) as t:
+            with obs.span("sched/execute", uid="u0"):
+                for _ in range(n_fallback_events):
+                    obs.event("kernel/fallback", kernel="bcsr_spmm",
+                              requested_bytes=100, budget_bytes=16,
+                              chosen="ref")
+            t.export_chrome(str(tmp_path / "trace_chrome.json"))
+        return tmp_path
+
+    def _ledger_doc(self, **over):
+        doc = {"ledger": {"kind": "bcsr", "logical_bytes": 1000,
+                          "resident_bytes": 10, "compression": 100.0},
+               "per_k": {"2": {"argument": 5, "output": 1, "temp": 2,
+                               "alias": 0, "peak": 8, "total": 8,
+                               "peak_estimated": True}},
+               "runtime": {"peak_host_bytes": 2**20,
+                           "peak_device_bytes": None,
+                           "accounted_sweep_bytes": 40},
+               "fallbacks": {"count": 0}, "meta": {}}
+        doc.update(over)
+        return doc
+
+    def test_valid_ledger_passes(self, tmp_path):
+        ct = _load_check_trace()
+        d = self._trace_dir(tmp_path)
+        (d / "memory.json").write_text(json.dumps(self._ledger_doc()))
+        assert ct.main([str(d), "--expect-memory"]) == 0
+
+    def test_ratio_below_one_fails(self, tmp_path):
+        ct = _load_check_trace()
+        d = self._trace_dir(tmp_path)
+        doc = self._ledger_doc(ledger={"kind": "bcsr", "logical_bytes": 10,
+                                       "resident_bytes": 1000,
+                                       "compression": 0.01})
+        (d / "memory.json").write_text(json.dumps(doc))
+        assert ct.main([str(d), "--expect-memory"]) == 1
+
+    def test_missing_host_peak_fails(self, tmp_path):
+        ct = _load_check_trace()
+        d = self._trace_dir(tmp_path)
+        doc = self._ledger_doc(runtime={"peak_host_bytes": None,
+                                        "peak_device_bytes": None})
+        (d / "memory.json").write_text(json.dumps(doc))
+        assert ct.main([str(d), "--expect-memory"]) == 1
+
+    def test_fallback_count_must_match_trace(self, tmp_path):
+        ct = _load_check_trace()
+        d = self._trace_dir(tmp_path, n_fallback_events=2)
+        (d / "memory.json").write_text(
+            json.dumps(self._ledger_doc(fallbacks={"count": 2})))
+        assert ct.main([str(d), "--expect-memory"]) == 0
+        (d / "memory.json").write_text(
+            json.dumps(self._ledger_doc(fallbacks={"count": 5})))
+        assert ct.main([str(d), "--expect-memory"]) == 1
+
+    def test_truncated_ledger_is_exit_2(self, tmp_path):
+        ct = _load_check_trace()
+        d = self._trace_dir(tmp_path)
+        (d / "memory.json").write_text('{"ledger": {"kind"')
+        assert ct.main([str(d), "--expect-memory"]) == 2
+        (d / "memory.json").write_text(json.dumps({"no": "ledger"}))
+        assert ct.main([str(d), "--expect-memory"]) == 2
