@@ -15,7 +15,7 @@ import traceback
 
 from . import (clustering_bench, ingest, kernels, lm_step_bench,
                model_selection, perf_iterations, roofline, scaling,
-               sparse_bench)
+               serve, sparse_bench)
 
 MODULES = {
     "model_selection": model_selection,   # paper Fig. 5 / SS6.2
@@ -24,6 +24,7 @@ MODULES = {
     "sparse": sparse_bench,               # paper Figs. 10 / 13b
     "ingest": ingest,                     # io layer + SS6.3 residency
     "kernels": kernels,                   # fused-vs-oracle sparse MU (ISSUE 5)
+    "serve": serve,                       # score_topk vs dense oracle (ISSUE 9)
     "roofline": roofline,                 # SSRoofline over dry-run cells
     "lm_step": lm_step_bench,             # framework regression numbers
     "perf": perf_iterations,              # SSPerf variant lowerings

@@ -1,0 +1,120 @@
+"""Serving-tier benchmarks (ISSUE 9) — ``BENCH_serve.json``, gated by
+scripts/check_bench_gate.py.
+
+Two sections:
+
+  serve    : the ``kernels.ops.score_topk`` panel stream (running (b, topk)
+             carry, the n-wide score row NEVER materialized) vs the dense
+             oracle that materializes the full (b, n) score matrix and
+             ranks it with ``lax.top_k``.  Timed on the dispatcher's auto
+             path (Pallas on TPU, panelized jnp stream elsewhere) at
+             serving-shaped cases: modest batch, large n, zipf-irrelevant —
+             raw ranking throughput.  Gate fails < 1.0x, warns < 1.2x.
+  latency  : end-to-end ``ServeEngine`` request percentiles over a
+             zipf-skewed query stream (the hot-head shape the LRU absorbs):
+             p50/p99 per-request latency, queries/s, cache hit rate.
+             Informational — recorded for the README, not speedup-gated.
+
+The oracle side is a fair fight: one jitted program, same dtypes, same
+``lax.top_k`` reduction — it differs ONLY in materializing the (b, n) row.
+"""
+from __future__ import annotations
+
+import os
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.ref import ref_score_topk
+from repro.serve import FactorBundle, ServeConfig, ServeEngine, \
+    random_queries
+
+from .common import Report, time_fn
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+# (b, n, k, topk, pn) — serving-shaped: batch of live queries x entity
+# count; pn sized so the (pn, k) A panel + (b, pn) partials stay resident
+CASES = [
+    (64, 131072, 32, 16, 8192),
+    (64, 262144, 32, 16, 8192),
+    (128, 65536, 32, 32, 4096),
+]
+
+# latency section: one synthetic bundle, zipf stream
+LAT_N, LAT_M, LAT_K = 65536, 8, 32
+LAT_QUERIES, LAT_REQUESTS = 512, 64
+
+
+def _latency(report: Report) -> dict:
+    rng = np.random.default_rng(0)
+    bundle = FactorBundle(
+        A=rng.random((LAT_N, LAT_K), np.float32),
+        R=rng.random((LAT_M, LAT_K, LAT_K), np.float32))
+    engine = ServeEngine(bundle, ServeConfig(topk=10, batch=32))
+    queries = random_queries(LAT_N, LAT_M, LAT_QUERIES, skew=1.1, seed=0)
+    per_req = -(-len(queries) // LAT_REQUESTS)
+    engine.query(queries[:per_req])          # compile outside the clock
+    lat = []
+    t_all = time.perf_counter()
+    for c0 in range(0, len(queries), per_req):
+        t0 = time.perf_counter()
+        engine.query(queries[c0:c0 + per_req])
+        lat.append(time.perf_counter() - t0)
+    t_all = time.perf_counter() - t_all
+    st = engine.stats()
+    row = {"name": f"latency/n{LAT_N}m{LAT_M}k{LAT_K}"
+                   f"q{LAT_QUERIES}r{LAT_REQUESTS}",
+           "n": LAT_N, "m": LAT_M, "k": LAT_K,
+           "queries": LAT_QUERIES, "requests": LAT_REQUESTS,
+           "p50_ms": float(np.percentile(lat, 50) * 1e3),
+           "p99_ms": float(np.percentile(lat, 99) * 1e3),
+           "qps": len(queries) / t_all,
+           "cache_hits": st["hits"], "cache_misses": st["misses"],
+           "device_batches": st["batches"]}
+    report.add(row["name"], seconds=float(np.percentile(lat, 50)),
+               p99_ms=round(row["p99_ms"], 2), qps=round(row["qps"]),
+               hits=st["hits"], misses=st["misses"])
+    return row
+
+
+def run(report: Report | None = None) -> Report:
+    report = report or Report("serve")
+    bench = {"serve": [], "latency": []}
+    key = jax.random.PRNGKey(0)
+
+    for b, n, k, topk, pn in CASES:
+        kv, ka = jax.random.split(jax.random.fold_in(key, n + b))
+        V = jax.random.normal(kv, (b, k), jnp.float32)
+        A = jax.random.normal(ka, (n, k), jnp.float32)
+        kernel = partial(ops.score_topk, topk=topk, pn=pn)
+        oracle = jax.jit(partial(ref_score_topk, topk=topk))
+        t_o = time_fn(oracle, V, A, warmup=2, iters=5,
+                      name="bench/score_oracle")
+        t_k = time_fn(kernel, V, A, warmup=2, iters=5,
+                      name="bench/score_topk")
+        speedup = t_o / t_k
+        name = f"serve/b{b}n{n}k{k}top{topk}"
+        report.add(name, seconds=t_k,
+                   oracle_s=round(t_o, 5), kernel_s=round(t_k, 5),
+                   speedup=round(speedup, 2))
+        bench["serve"].append({
+            "name": name, "b": b, "n": n, "k": k, "topk": topk, "pn": pn,
+            "oracle_seconds": t_o, "kernel_seconds": t_k,
+            "oracle_row_bytes": 4 * b * n,     # the buffer the kernel skips
+            "speedup": speedup})
+
+    bench["latency"].append(_latency(report))
+
+    from repro.ckpt import atomic_json_dump
+    atomic_json_dump(BENCH_PATH, bench, indent=1, default=str)
+    return report
+
+
+if __name__ == "__main__":
+    run().print_csv()

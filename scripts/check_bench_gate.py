@@ -12,6 +12,10 @@ gated sections:
     "mu_iteration" — the fused single-pass sparse MU iteration vs the
                      spmm + spmm_t segment-sum oracle (ISSUE 5; timed
                      interpret-free on the jnp ref path)
+  BENCH_serve.json            (``benchmarks.run --only serve``)
+    "serve"        — score_topk's panel stream (never materializes the
+                     (batch, n) score row) vs the materialize-then-top_k
+                     dense oracle (ISSUE 9)
 
     speedup <  FAIL_BELOW (1.0x)  -> exit 1 (the fused program lost to
                                      its baseline: a regression)
@@ -30,9 +34,10 @@ FAIL_BELOW = 1.0
 WARN_BELOW = 1.2
 
 
-GATED_SECTIONS = ("ensemble", "grid", "mu_iteration")
+GATED_SECTIONS = ("ensemble", "grid", "mu_iteration", "serve")
 
-DEFAULT_PATHS = ("BENCH_model_selection.json", "BENCH_kernels.json")
+DEFAULT_PATHS = ("BENCH_model_selection.json", "BENCH_kernels.json",
+                 "BENCH_serve.json")
 
 
 class GateError(Exception):

@@ -19,6 +19,13 @@ Structural checks on the trace contract (README "Observability"):
                      fallback count that matches the ``kernel/fallback``
                      instants in trace.jsonl (and, with --report, the
                      report's per-unit sum)
+  bundle pointer     when the report's ``meta.bundle`` names a
+                     FactorBundle directory (``rescalk_run --bundle``),
+                     the bundle must validate standalone: format_version,
+                     factors.npz shapes consistent with bundle.json, and
+                     a matching sha1 factor digest (the same checks
+                     ``serve.FactorBundle.load`` re-runs, stdlib+numpy
+                     here so the guard needs no repro import)
 
 Exit codes follow the artifact-guard convention: 2 + one ``[trace-check]
 ERROR:`` line when the artifacts are missing/malformed (cannot validate),
@@ -124,6 +131,82 @@ def check_report_coverage(events: list[dict], report_path: str) -> list[str]:
         want = "sched/restore" if u.get("reused") else "sched/execute"
         if (want, uid) not in spanned:
             problems.append(f"unit {uid!r} has no {want!r} span")
+    return problems
+
+
+def check_bundle(report_path: str) -> list[str]:
+    """Validate the report's ``meta.bundle`` FactorBundle pointer, if any.
+
+    Mirrors ``serve.FactorBundle.load`` standalone (stdlib + numpy): the
+    manifest must be this build's format_version, the npz arrays must
+    match the manifest's shapes, and the sha1 digest over the factor
+    bytes must match — a report pointing at missing/corrupt factors is a
+    broken artifact set, reported as FAIL lines (exit 1)."""
+    import hashlib
+
+    import numpy as np
+    try:
+        with open(report_path) as f:
+            report = json.load(f)
+    except OSError as ex:
+        raise TraceError(f"cannot read {report_path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise TraceError(f"{report_path} is not valid JSON: {ex}")
+    ptr = (report.get("meta") or {}).get("bundle")
+    if ptr is None:
+        return []
+    # the pointer is the path rescalk_run was given; resolve relative
+    # pointers against the report's own directory as a fallback
+    bundle_dir = ptr
+    if not os.path.isdir(bundle_dir) and not os.path.isabs(ptr):
+        sibling = os.path.join(os.path.dirname(report_path) or ".", ptr)
+        if os.path.isdir(sibling):
+            bundle_dir = sibling
+    if not os.path.isdir(bundle_dir):
+        return [f"{report_path}: meta.bundle {ptr!r} is not a directory"]
+    man_path = os.path.join(bundle_dir, "bundle.json")
+    try:
+        with open(man_path) as f:
+            doc = json.load(f)
+    except OSError as ex:
+        return [f"cannot read {man_path}: {ex.strerror or ex}"]
+    except json.JSONDecodeError as ex:
+        return [f"{man_path} is not valid JSON: {ex}"]
+    if doc.get("format_version") != 1:
+        return [f"{man_path}: format_version {doc.get('format_version')!r} "
+                f"(this check reads 1)"]
+    npz_path = os.path.join(bundle_dir, doc.get("arrays", "factors.npz"))
+    try:
+        data = np.load(npz_path)
+    except OSError as ex:
+        return [f"cannot read {npz_path}: {ex.strerror or ex}"]
+    except Exception as ex:
+        return [f"{npz_path} is not a readable npz: {ex}"]
+    with data:
+        missing = [k for k in ("A", "R") if k not in data.files]
+        if missing:
+            return [f"{npz_path}: missing arrays {missing} "
+                    f"(has {sorted(data.files)})"]
+        A, R = data["A"], data["R"]
+    problems = []
+    if A.ndim != 2 or R.ndim != 3 or R.shape[1] != R.shape[2] or \
+            R.shape[1] != A.shape[1]:
+        return [f"{npz_path}: inconsistent factor shapes A{A.shape} "
+                f"R{R.shape}"]
+    for field, got in (("n", A.shape[0]), ("m", R.shape[0]),
+                       ("k", A.shape[1])):
+        if doc.get(field) != got:
+            problems.append(f"{man_path}: {field}={doc.get(field)!r} but "
+                            f"{npz_path} holds {field}={got}")
+    h = hashlib.sha1()
+    for arr in (A, R):
+        arr = np.ascontiguousarray(arr, dtype=np.float32)
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    if doc.get("digest") != h.hexdigest():
+        problems.append(f"{bundle_dir}: factor digest mismatch — manifest "
+                        f"{doc.get('digest')!r} vs arrays "
+                        f"{h.hexdigest()!r}")
     return problems
 
 
@@ -240,6 +323,7 @@ def main(argv: list[str]) -> int:
         problems += check_chrome(args.trace_dir)
         if args.report:
             problems += check_report_coverage(events, args.report)
+            problems += check_bundle(args.report)
         if args.expect_metrics:
             problems += check_metrics(args.trace_dir)
         if args.expect_memory:

@@ -167,6 +167,22 @@ else test $? -eq 2; fi
 grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/trace_neg.log"
 echo "== trace smoke OK =="
 
+echo "== serve smoke: sweep bundle -> 64 queries -> validated trace =="
+# The serving tier end to end (ISSUE 9): the traced TSV sweep above also
+# persisted its selected-k factors as a FactorBundle next to the report
+# (and pointed meta.bundle at it — check_trace already re-validated the
+# digest).  That bundle must answer a zipf query stream through the ONE
+# compiled micro-batch shape, with the serve spans landing in their own
+# check_trace-clean artifact set.
+grep -q '"bundle"' "$SMOKE_DIR/trace_report.json"
+python -m repro.launch.serve --factors "$SMOKE_DIR/trace_report.bundle" \
+    --queries random:64 --batch 16 --topk 5 \
+    --trace "$SMOKE_DIR/serve_trace" | tee "$SMOKE_DIR/serve.log"
+grep -q "\[serve\] 64 queries" "$SMOKE_DIR/serve.log"
+grep -q "\[serve\] cache:" "$SMOKE_DIR/serve.log"
+python scripts/check_trace.py "$SMOKE_DIR/serve_trace"
+echo "== serve smoke OK =="
+
 echo "== memory ledger smoke: exascale ratio + forced kernel fallback =="
 # The byte-ledger contract end to end (ISSUE 8): a virtual BCSR sweep whose
 # represented tensor is >10x its resident bytes, run with the fused kernel
@@ -208,11 +224,12 @@ else test $? -eq 2; fi
 grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/mem_neg.log"
 echo "== memory ledger smoke OK =="
 
-echo "== perf gate: ensemble, grid and fused-kernel speedups =="
+echo "== perf gate: ensemble, grid, fused-kernel and serve speedups =="
 # Soft regression gate on the recorded trajectories (refreshed by
-# `python -m benchmarks.run --only model_selection` / `--only kernels`):
+# `python -m benchmarks.run --only model_selection|kernels|serve`):
 # any case < 1.0x fails, < 1.2x warns.  BENCH_kernels.json carries the
-# fused-vs-oracle sparse MU iteration ratio (ISSUE 5).
+# fused-vs-oracle sparse MU iteration ratio (ISSUE 5); BENCH_serve.json
+# the score_topk panel stream vs the materializing dense oracle (ISSUE 9).
 python scripts/check_bench_gate.py BENCH_model_selection.json \
-    BENCH_kernels.json
+    BENCH_kernels.json BENCH_serve.json
 echo "== perf gate OK =="

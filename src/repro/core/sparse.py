@@ -179,14 +179,29 @@ def sqnorm(sp: BCSR) -> jax.Array:
 # Sparse MU step (local; mirrors rescal.mu_step_batched)
 # ---------------------------------------------------------------------------
 
+def _resolve_kernel_opts(policy, use_fused: bool, impl: str):
+    """Merge a ``kernels.KernelPolicy`` with the deprecated
+    ``use_fused=``/``impl=`` aliases (kept for one release).  Duck-typed
+    (reads ``.use_fused``/``.impl``) so this module never imports
+    repro.kernels at module scope — ops.py imports us."""
+    if policy is None:
+        return use_fused, impl
+    if use_fused or impl != "auto":
+        raise TypeError("pass either policy= or the deprecated "
+                        "use_fused=/impl= aliases, not both")
+    return policy.use_fused, policy.impl
+
+
 def sparse_products(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
-                    use_fused: bool = False, impl: str = "auto"):
+                    use_fused: bool = False, impl: str = "auto",
+                    policy=None):
     """Both X-sided products (X @ B1, X^T @ B2) for shared (n, k) operands
-    — THE hot pair of every sparse MU iteration.  ``use_fused`` routes
-    through ``kernels.ops.bcsr_xa_xta`` (ONE pass over the stored blocks,
-    no (m, nnzb, bs, k) HBM intermediate; ``impl`` is the kernels/ops.py
-    dispatch: auto|pallas|interpret|ref); the default is the two-pass
-    segment-sum oracle."""
+    — THE hot pair of every sparse MU iteration.  ``policy`` (a
+    ``kernels.KernelPolicy``) routes through ``kernels.ops.bcsr_xa_xta``
+    (ONE pass over the stored blocks, no (m, nnzb, bs, k) HBM
+    intermediate); ``use_fused``/``impl`` are its deprecated aliases.
+    The default is the two-pass segment-sum oracle."""
+    use_fused, impl = _resolve_kernel_opts(policy, use_fused, impl)
     if use_fused:
         from repro.kernels import ops                 # lazy: no cycle
         return ops.bcsr_xa_xta(sp, B1, B2, impl=impl)
@@ -195,12 +210,13 @@ def sparse_products(sp: BCSR, B1: jax.Array, B2: jax.Array, *,
 
 def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                    eps: float = EPS_DEFAULT, *, use_fused: bool = False,
-                   impl: str = "auto", sanitize: bool = False,
+                   impl: str = "auto", policy=None, sanitize: bool = False,
                    trace_metrics: bool = False):
     """One batched MU iteration on a BCSR tensor.  Identical math to the
-    dense step; only the X products change — and with ``use_fused`` they
+    dense step; only the X products change — and with the fused policy they
     come from ONE pass over the stored blocks (kernels/bcsr_fused.py)
     instead of the spmm + spmm_t double sweep."""
+    use_fused, impl = _resolve_kernel_opts(policy, use_fused, impl)
     A_in = A
     G = A.T @ A
     XA, XTA = sparse_products(sp, A, A, use_fused=use_fused, impl=impl)
@@ -226,7 +242,7 @@ def sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
 def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
                           mask: jax.Array, eps: float = EPS_DEFAULT, *,
                           use_fused: bool = False, impl: str = "auto",
-                          sanitize: bool = False,
+                          policy=None, sanitize: bool = False,
                           trace_metrics: bool = False):
     """One MU iteration on k_max-padded factors (the BCSR twin of
     rescal.masked_mu_step): same algebra, with the padded columns of A and
@@ -236,6 +252,7 @@ def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
     core/rescal.py).  The fused kernel preserves the fixed point: zero
     columns of A yield exact-zero panel columns (the panels are zeroed
     before accumulation and the tile products are plain matmuls)."""
+    use_fused, impl = _resolve_kernel_opts(policy, use_fused, impl)
     A_in = A
     A, R = sparse_mu_step(sp, A, R, eps, use_fused=use_fused, impl=impl)
     A, R = A * mask, R * (mask[:, None] * mask[None, :])
@@ -253,11 +270,12 @@ def masked_sparse_mu_step(sp: BCSR, A: jax.Array, R: jax.Array,
 
 def sparse_rel_error(sp: BCSR, A: jax.Array, R: jax.Array, *,
                      use_fused: bool = False,
-                     impl: str = "auto") -> jax.Array:
+                     impl: str = "auto", policy=None) -> jax.Array:
     """Relative error on a BCSR tensor.  Needs only the single X @ A
     product, so the fused path routes it through the ``bcsr_spmm`` kernel
     dispatch (one block sweep either way; the kernel removes the HBM
     product intermediate)."""
+    use_fused, impl = _resolve_kernel_opts(policy, use_fused, impl)
     G = A.T @ A
     if use_fused:
         from repro.kernels import ops                 # lazy: no cycle

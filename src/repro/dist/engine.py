@@ -17,7 +17,9 @@ dispatches on:
               psums/iter, ours) | "sliced" (the paper's per-slice Alg. 3
               loop, O(m) psums/iter).
 
-Fused-kernel path: ``cfg.use_fused_kernel`` routes the two X-sided products
+Fused-kernel path: ``cfg.kernel_policy.use_fused`` (a kernels.KernelPolicy;
+the deprecated ``use_fused_kernel``/``fused_impl`` fields still resolve
+through it) routes the two X-sided products
 of each MU iteration through the single-X-pass kernels (via ops.py
 dispatch) — dense operands through kernels/fused_bilinear, BCSR operands
 through kernels/bcsr_fused — so one pass over the (stored blocks of) X
@@ -25,7 +27,7 @@ emits both X @ A^(j) and X^T @ A^(i).  The engine exploits associativity,
 (X^T A) R == X^T (A R), so the single-pass products feed the exact
 reference update; on the sparse side this additionally eliminates the
 oracle's (m, nnzb, bs, k) gathered-AR intermediate (spmm_t with a
-per-slice operand).  ``cfg.fused_impl`` selects pallas / interpret /
+per-slice operand).  ``cfg.kernel_policy.impl`` selects pallas / interpret /
 jnp-oracle execution (interpret validates the kernel body on CPU).  The
 reference segment-sum/einsum path remains the default.
 
@@ -61,14 +63,26 @@ class DistRescalConfig:
     schedule: str = "batched"        # "batched" | "sliced"
     eps: float = EPS_DEFAULT
     comm_dtype: str | None = None    # e.g. "bfloat16"
-    use_fused_kernel: bool = False   # kernels/fused_bilinear single-X-pass
-    fused_impl: str = "auto"         # ops.py impl: auto|pallas|interpret|ref
+    # kernel: a kernels.KernelPolicy (the unified knob bundle, PR 9);
+    # use_fused_kernel / fused_impl are its deprecated aliases, honored
+    # when `kernel` is unset.  Engine code reads `kernel_policy` only.
+    kernel: object | None = None
+    use_fused_kernel: bool = False   # deprecated alias of kernel.use_fused
+    fused_impl: str = "auto"         # deprecated alias of kernel.impl
     sanitize: bool = False           # runtime factor checks (repro.analysis)
     trace_metrics: bool = False      # per-iteration telemetry (repro.obs)
 
     @property
     def comm_jnp_dtype(self):
         return None if self.comm_dtype is None else jnp.dtype(self.comm_dtype)
+
+    @property
+    def kernel_policy(self):
+        if self.kernel is not None:
+            return self.kernel
+        from repro.kernels.policy import KernelPolicy    # lazy: no cycle
+        return KernelPolicy(use_fused=self.use_fused_kernel,
+                            impl=self.fused_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +97,7 @@ def _fused_products(Xl, Aj, Ai, cfg: DistRescalConfig):
     from repro.kernels import ops
     m = Xl.shape[0]
     B2 = jnp.broadcast_to(Ai[None], (m,) + Ai.shape)
-    return ops.fused_xa_xtb(Xl, Aj, B2, impl=cfg.fused_impl)
+    return ops.fused_xa_xtb(Xl, Aj, B2, impl=cfg.kernel_policy.impl)
 
 
 def _mu_iter_batched(Xl, Ai, R, cfg: DistRescalConfig):
@@ -94,7 +108,7 @@ def _mu_iter_batched(Xl, Ai, R, cfg: DistRescalConfig):
     Aj = diag_broadcast_row_to_col(Ai, cd)
     G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
 
-    if cfg.use_fused_kernel:
+    if cfg.kernel_policy.use_fused:
         XA_loc, XTA_loc = _fused_products(Xl, Aj, Ai, cfg)
         XA = psum_cast(XA_loc, COL_AXIS, cd)                     # line 5
     else:
@@ -151,7 +165,7 @@ def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
         R_acc, num, S = carry
         Xt = jax.lax.dynamic_index_in_dim(Xl, t, 0, keepdims=False)
         Rt = jax.lax.dynamic_index_in_dim(R_acc, t, 0, keepdims=False)
-        if cfg.use_fused_kernel:
+        if cfg.kernel_policy.use_fused:
             XA_loc, XTA_loc = _fused_products(Xt[None], Aj, Ai, cfg)
             XA = psum_cast(XA_loc[0], COL_AXIS, cd)              # line 5
         else:
@@ -187,7 +201,7 @@ def _mu_iter_sliced(Xl, Ai, R, cfg: DistRescalConfig):
 def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
     """Batched MU iteration on a local BCSR block (core/sparse.py).
     Identical collective schedule to the dense batched iteration; with
-    ``cfg.use_fused_kernel`` the two X-sided products come from ONE pass
+    ``cfg.kernel_policy.use_fused`` the two X-sided products come from ONE pass
     over the stored blocks (core.sparse.sparse_products — the same
     dispatch the host sweep programs use — onto kernels/bcsr_fused.py),
     with no second block sweep and no (m, nnzb, bs, k) gathered
@@ -198,9 +212,9 @@ def _mu_iter_batched_sparse(spl, Ai, R, cfg: DistRescalConfig):
     Aj = diag_broadcast_row_to_col(Ai, cd)
     G = psum_cast(Ai.T @ Ai, ROW_AXIS, cd)                       # line 3
 
-    if cfg.use_fused_kernel:
+    if cfg.kernel_policy.use_fused:
         XA_loc, XTA_loc = sparse_products(spl, Aj, Ai, use_fused=True,
-                                          impl=cfg.fused_impl)
+                                          impl=cfg.kernel_policy.impl)
         XA = psum_cast(XA_loc, COL_AXIS, cd)                     # line 5
     else:
         XA = psum_cast(spmm(spl, Aj), COL_AXIS, cd)              # line 5
@@ -256,9 +270,9 @@ def _mu_iter_sliced_sparse(spl, Ai, R, cfg: DistRescalConfig):
         sp_t = BCSR(data=data_t, block_rows=spl.block_rows,
                     block_cols=spl.block_cols, n=spl.n)
         Rt = jax.lax.dynamic_index_in_dim(R_acc, t, 0, keepdims=False)
-        if cfg.use_fused_kernel:
+        if cfg.kernel_policy.use_fused:
             XA_loc, XTA_loc = sparse_products(sp_t, Aj, Ai, use_fused=True,
-                                              impl=cfg.fused_impl)
+                                              impl=cfg.kernel_policy.impl)
             XA = psum_cast(XA_loc[0], COL_AXIS, cd)
         else:
             XA = psum_cast(spmm(sp_t, Aj)[0], COL_AXIS, cd)

@@ -2,11 +2,12 @@
 
 Kernels target TPU (pl.pallas_call + explicit BlockSpec VMEM tiling) and are
 validated on CPU in interpret mode against ref.py.  ops.py is the public,
-backend-dispatching API.
+backend-dispatching API; KernelPolicy is the one knob bundle threaded
+through configs and the serve engine.
 """
 from . import ref
-from .ops import (bcsr_spmm, bcsr_xa_xta, flash_attention, fused_xa_xtb,
-                  mu_update_a)
+from .ops import (KernelPolicy, bcsr_spmm, bcsr_xa_xta, flash_attention,
+                  fused_xa_xtb, mu_update_a, score_topk)
 
-__all__ = ["bcsr_spmm", "bcsr_xa_xta", "flash_attention", "fused_xa_xtb",
-           "mu_update_a", "ref"]
+__all__ = ["KernelPolicy", "bcsr_spmm", "bcsr_xa_xta", "flash_attention",
+           "fused_xa_xtb", "mu_update_a", "ref", "score_topk"]

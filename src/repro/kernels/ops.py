@@ -18,8 +18,6 @@ bit-identical.
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
@@ -32,11 +30,20 @@ from .bcsr_spmm import bcsr_spmm as _bcsr_pallas
 from .flash_attention import flash_attention as _flash_pallas
 from .fused_bilinear import fused_xa_xtb as _fused_pallas
 from .mu_ratio import mu_update_a as _mu_pallas
+from .policy import KernelPolicy, env_panel_bytes
+from .score_topk import effective_pn as _effective_pn
+from .score_topk import score_topk as _score_topk_pallas
+from .score_topk import score_topk_stream as _score_topk_stream
+
+__all__ = ["KernelPolicy", "VMEM_PANEL_BYTES", "kernel_fallbacks",
+           "fused_xa_xtb", "mu_update_a", "bcsr_spmm", "bcsr_xa_xta",
+           "flash_attention", "score_topk"]
 
 # xtb window budget (pre double-buffer); RESCAL_VMEM_PANEL_BYTES overrides
-# so CI can force the oracle fallback on any shard size
-VMEM_PANEL_BYTES = int(os.environ.get("RESCAL_VMEM_PANEL_BYTES",
-                                      4 * 1024 * 1024))
+# so CI can force the oracle fallback on any shard size.  KernelPolicy
+# (kernels/policy.py, re-exported here as the public API surface) carries
+# a per-policy override; this module constant is the process default.
+VMEM_PANEL_BYTES = env_panel_bytes()
 
 _n_fallbacks = 0
 
@@ -150,6 +157,41 @@ def bcsr_xa_xta(sp: BCSR, B1, B2, *, impl: str = "auto"):
     if impl == "ref":
         return _ref.ref_bcsr_xa_xta(sp, B1, B2)
     return _bcsr_fused_pallas(sp, B1, B2, interpret=impl == "interpret")
+
+
+def _topk_window_bytes(b: int, k: int, topk: int, pn: int) -> int:
+    """VMEM-resident window of the score_topk kernel per grid step: the
+    (pn, k) A panel, the (b, pn) panel scores, and the two f32/i32
+    (b, topk + pn) merge candidate planes."""
+    return 4 * (pn * k + b * pn + 2 * b * (topk + pn))
+
+
+def score_topk(V, A, *, topk: int, impl: str = "auto",
+               pn: int | None = None):
+    """Batched top-k of V @ A^T without materializing (b, n).
+
+    impl: auto      — pallas on TPU, panelized jnp stream elsewhere
+          pallas    — compiled kernel (budget-gated; falls back to stream)
+          interpret — kernel body on the CPU interpreter
+          stream    — panelized jnp path (lax.scan, no (b, n) buffer)
+          ref       — materializing oracle (ref.ref_score_topk)
+    """
+    from .score_topk import DEFAULT_PN
+    pn = DEFAULT_PN if pn is None else pn
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "stream"
+    if impl == "ref":
+        return _ref.ref_score_topk(V, A, topk)
+    if impl == "stream":
+        return _score_topk_stream(V, A, topk=topk, pn=pn)
+    b, k = V.shape
+    pn_eff = _effective_pn(A.shape[0], pn)
+    window = _topk_window_bytes(b, k, topk, pn_eff)
+    if impl == "pallas" and window > VMEM_PANEL_BYTES:
+        _note_fallback("score_topk", window, chosen="stream")
+        return _score_topk_stream(V, A, topk=topk, pn=pn)
+    return _score_topk_pallas(V, A, topk=topk, pn=pn,
+                              interpret=impl == "interpret")
 
 
 def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,

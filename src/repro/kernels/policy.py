@@ -1,0 +1,76 @@
+"""KernelPolicy — the one knob bundle for kernel dispatch.
+
+Before PR 9 every layer grew its own pair of kernel switches
+(``use_fused_kernel`` / ``fused_impl`` on the configs, ``use_fused`` /
+``impl`` on the sparse ops) plus the ``RESCAL_VMEM_PANEL_BYTES`` env
+override.  ``KernelPolicy`` unifies them into a single frozen (hence
+jit-static-safe) dataclass that travels through ``RescalkConfig``,
+``DistRescalConfig``, ``core.sparse`` and the serve engine.
+
+The legacy kwargs stay accepted for one release as deprecated aliases
+(``KernelPolicy.resolve`` merges them; tests/test_serve.py asserts they
+still resolve).  This module is deliberately stdlib-only so the numpy-only
+``selection/types.py`` and scripts can reference it without importing jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+IMPLS = ("auto", "pallas", "interpret", "ref", "stream")
+
+# Default VMEM panel budget (bytes) when the env override is absent; kept
+# here (stdlib-only) so ops.py and scripts share one source of truth.
+DEFAULT_PANEL_BYTES = 4 * 1024 * 1024
+
+
+def env_panel_bytes() -> int:
+    """Panel budget honoring the RESCAL_VMEM_PANEL_BYTES env override."""
+    return int(os.environ.get("RESCAL_VMEM_PANEL_BYTES",
+                              DEFAULT_PANEL_BYTES))
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """How the sparse/serve ops pick a kernel implementation.
+
+    use_fused    route the MU products through the fused Pallas kernels
+                 (previously ``use_fused_kernel`` / ``use_fused``)
+    impl         auto|pallas|interpret|ref|stream (previously
+                 ``fused_impl`` / ``impl``); "stream" is the panelized
+                 jnp path (serve scoring only)
+    panel_bytes  VMEM panel budget override; None = honor the
+                 RESCAL_VMEM_PANEL_BYTES env var (ops.VMEM_PANEL_BYTES)
+    """
+    use_fused: bool = False
+    impl: str = "auto"
+    panel_bytes: int | None = None
+
+    def __post_init__(self):
+        if self.impl not in IMPLS:
+            raise ValueError(f"impl must be one of {IMPLS}, "
+                             f"got {self.impl!r}")
+
+    @property
+    def budget_bytes(self) -> int:
+        return self.panel_bytes if self.panel_bytes is not None \
+            else env_panel_bytes()
+
+    @classmethod
+    def resolve(cls, policy: "KernelPolicy | None" = None, *,
+                use_fused: bool | None = None,
+                impl: str | None = None) -> "KernelPolicy":
+        """Merge a new-style policy with the deprecated per-call kwargs.
+
+        The aliases only apply when no policy is given; passing both is an
+        error so callers can't silently disagree with themselves.
+        """
+        if policy is not None:
+            if use_fused is not None or impl is not None:
+                raise TypeError(
+                    "pass either policy= or the deprecated "
+                    "use_fused=/impl= aliases, not both")
+            return policy
+        return cls(use_fused=bool(use_fused) if use_fused is not None
+                   else False,
+                   impl=impl if impl is not None else "auto")

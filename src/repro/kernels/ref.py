@@ -54,6 +54,21 @@ def ref_bcsr_spmm(sp: BCSR, B: jax.Array) -> jax.Array:
     return _spmm(sp, B)
 
 
+def ref_score_topk(V: jax.Array, A: jax.Array, topk: int):
+    """The materializing oracle for kernels/score_topk.py: build the full
+    (b, n) score matrix, then `lax.top_k` it.  Slots past n (topk > n)
+    pad with (-inf, -1) to match the kernel contract."""
+    scores = jnp.dot(V.astype(jnp.float32), A.astype(jnp.float32).T)
+    b, n = scores.shape
+    s, i = jax.lax.top_k(scores, min(topk, n))
+    if topk > n:
+        s = jnp.concatenate(
+            [s, jnp.full((b, topk - n), -jnp.inf, s.dtype)], axis=1)
+        i = jnp.concatenate(
+            [i, jnp.full((b, topk - n), -1, jnp.int32)], axis=1)
+    return s, i.astype(jnp.int32)
+
+
 def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, q_offset: int = 0,
                   sm_scale: float | None = None) -> jax.Array:

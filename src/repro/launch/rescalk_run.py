@@ -81,6 +81,12 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-(k, q)-unit checkpoint directory")
     ap.add_argument("--report", default=None,
                     help="write the SelectionReport JSON here")
+    ap.add_argument("--bundle", default=None, metavar="DIR",
+                    help="persist the selected-k factors as a FactorBundle "
+                         "(repro.serve) here; default: <report>.bundle "
+                         "next to --report.  The report's meta gains a "
+                         "'bundle' pointer that scripts/check_trace.py "
+                         "validates")
     ap.add_argument("--stop-after-units", type=int, default=None,
                     help="compute at most this many units, then exit "
                          "(deterministic kill for resume drills)")
@@ -107,16 +113,18 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def load_operand(args):
-    """Resolve --data into a sweep operand + a descriptive label.
+    """Resolve --data into a sweep operand.
 
-    Returns (operand, A_true | None): ground truth only exists for the
-    default synthetic tensor (used for the correlation report)."""
+    Returns (operand, A_true | None, vocab | None): ground truth only
+    exists for the default synthetic tensor (used for the correlation
+    report); the vocab only for .tsv ingest (persisted into the
+    FactorBundle so the serve CLI can resolve entity names)."""
     from repro.io import manifest_of
     if args.data is None:
         key = jax.random.PRNGKey(0)
         X, A_true, _ = synthetic_rescal(key, n=args.n, m=args.m,
                                         k=args.k_true)
-        return X, A_true
+        return X, A_true, None
     if args.data.startswith("virtual:"):
         from repro.io import (VirtualSpec, virtual_dense_full,
                               virtual_sharded_bcsr)
@@ -127,11 +135,12 @@ def load_operand(args):
               f"{man.resident_bytes / 2**30:.3f} GiB "
               f"({man.compression:.0f}x)")
         if spec.kind == "dense":
-            return virtual_dense_full(spec), None
+            return virtual_dense_full(spec), None, None
         sharded = virtual_sharded_bcsr(spec)
         # single-host run: collapse one-shard layouts to the plain BCSR
-        return (sharded.to_bcsr() if spec.grid == 1 else sharded), None
+        return (sharded.to_bcsr() if spec.grid == 1 else sharded), None, None
     from repro.io import coo_to_bcsr, ingest_npz, ingest_tsv
+    vocab = None
     if args.data.endswith(".tsv"):
         coo, vocab = ingest_tsv(args.data)
         print(f"[io] {args.data}: {vocab.n} entities, {vocab.m} relations, "
@@ -147,15 +156,16 @@ def load_operand(args):
     print(f"[io] bcsr bs={args.bs} nnzb={sp.nnzb} logical "
           f"{man.logical_bytes / 2**20:.1f} MiB -> resident "
           f"{man.resident_bytes / 2**20:.1f} MiB")
-    return sp, None
+    return sp, None, vocab
 
 
 def _run(args):
     """Plan and run the sweep; returns (operand, report | None) for the
     trace-artifact writer (report is whatever the scheduler produced — None
     when the sweep was interrupted before the reduce)."""
-    X, A_true = load_operand(args)
+    X, A_true, vocab = load_operand(args)
     from repro.io import operand_dims
+    from repro.kernels.policy import KernelPolicy
     m, n = operand_dims(X)
     print(f"operand m={m} n={n}, schedule={args.schedule}, "
           f"mode={args.mode}, criterion={args.criterion}")
@@ -164,8 +174,8 @@ def _run(args):
                         n_perturbations=args.r, rescal_iters=args.iters,
                         schedule=args.schedule, init=args.init,
                         sanitize=args.sanitize,
-                        use_fused_kernel=args.use_fused_kernel,
-                        fused_impl=args.fused_impl,
+                        kernel=KernelPolicy(use_fused=args.use_fused_kernel,
+                                            impl=args.fused_impl),
                         trace_metrics=bool(args.trace))
     if args.grid_chunk is not None and args.mode != "grid":
         raise SystemExit("--grid-chunk requires --mode grid")
@@ -198,7 +208,45 @@ def _run(args):
                  for c in range(args.k_true)]
         print(f"feature correlation vs ground truth: "
               f"min={min(corrs):.3f} mean={np.mean(corrs):.3f}")
+    _persist_bundle(args, X, res, vocab, sched.report)
     return X, sched.report
+
+
+def _bundle_dir(args) -> str | None:
+    if args.bundle is not None:
+        return args.bundle
+    if args.report is not None:
+        import os
+        return os.path.splitext(args.report)[0] + ".bundle"
+    return None
+
+
+def _persist_bundle(args, X, res, vocab, report):
+    """The sweep's whole point of output: persist the selected-k best
+    factors (member-median A + regressed R) as a versioned FactorBundle
+    next to the report, and point the report's meta at it."""
+    bundle_dir = _bundle_dir(args)
+    if bundle_dir is None:
+        return
+    from repro.io import manifest_of
+    from repro.serve import FactorBundle
+
+    ents = rels = None
+    if vocab is not None:
+        ents = [w for w, _ in sorted(vocab.entities.items(),
+                                     key=lambda kv: kv[1])]
+        rels = [w for w, _ in sorted(vocab.relations.items(),
+                                     key=lambda kv: kv[1])]
+    bundle = FactorBundle.from_sweep(
+        res, entities=ents, relations=rels,
+        manifest=manifest_of(X).fingerprint(),
+        meta={"criterion": args.criterion})
+    bundle.save(bundle_dir)
+    print(f"[bundle] {bundle_dir}: n={bundle.n} m={bundle.m} "
+          f"k={bundle.k} digest={bundle.digest()[:12]}")
+    if report is not None and args.report:
+        report.meta["bundle"] = bundle_dir
+        report.save(args.report)
 
 
 def _memory_ledger(tracer, report, operand, op, ks, args):

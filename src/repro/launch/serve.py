@@ -1,72 +1,151 @@
-"""Serving launcher: batched prefill + autoregressive decode for any
-decoder arch, on any mesh.
+"""RESCAL link-prediction serving CLI — answer KG-completion queries from
+a swept FactorBundle (the artifact `rescalk_run` writes next to its
+report).
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
-        --reduced --batch 4 --prompt-len 16 --new-tokens 16
+    PYTHONPATH=src python -m repro.launch.serve \
+        --factors /tmp/report.bundle --queries random:256 --topk 10
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --factors /tmp/report.bundle --queries queries.tsv --batch 64
+
+Query sources (--queries):
+
+    random:COUNT[:SKEW]   a zipf-skewed synthetic stream (rank-r anchor
+                          ~ r^-SKEW, default 1.1) — the hot-head shape
+                          the engine's LRU cache exists for
+    path.tsv              `s<TAB>r<TAB>?` / `?<TAB>r<TAB>o` lines; names
+                          resolve through the bundle vocab when present
+
+--mode sro|sor forces every query's direction (mixed by default for
+random streams; TSV lines carry their own direction).  Requests are
+micro-batched into ONE compiled shape (pad-and-mask, --batch), scored by
+the `score_topk` panel kernel (never materializing the (batch, n) score
+row), and the reply prints per-request latency percentiles + throughput.
+With --trace DIR the request/score/cache spans land in a check_trace.py-
+validated artifact set, where a `kernel/fallback` instant marks any
+panel-budget downgrade.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import ARCHS, REDUCED_ARCHS
-from repro.models import transformer
-from repro.train import make_prefill_step, make_serve_step
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--factors", required=True, metavar="BUNDLE",
+                    help="FactorBundle directory (rescalk_run --bundle)")
+    ap.add_argument("--queries", default="random:256",
+                    help="random:COUNT[:SKEW] or a queries .tsv "
+                         "(default random:256)")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="compiled micro-batch width (one program total)")
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--mode", default="mixed",
+                    choices=("sro", "sor", "mixed"),
+                    help="force query direction (random streams; mixed "
+                         "draws both)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="split the query stream into this many requests "
+                         "(per-request latency percentiles)")
+    ap.add_argument("--impl", default="auto",
+                    choices=("auto", "pallas", "interpret", "ref",
+                             "stream"),
+                    help="score_topk dispatch (kernels/ops.py; auto = "
+                         "Pallas on TPU, panel stream elsewhere)")
+    ap.add_argument("--cache", type=int, default=4096,
+                    help="hot-head LRU entries (0 disables)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--show", type=int, default=3,
+                    help="print the top-k for this many queries")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write serve trace artifacts to DIR "
+                         "(scripts/check_trace.py validates)")
+    return ap
+
+
+def load_queries(args, bundle):
+    from repro.serve import parse_queries_tsv, random_queries
+    if args.queries.startswith("random:"):
+        parts = args.queries.split(":")
+        count = int(parts[1])
+        skew = float(parts[2]) if len(parts) > 2 else 1.1
+        return random_queries(bundle.n, bundle.m, count, skew=skew,
+                              seed=args.seed, mode=args.mode)
+    queries = parse_queries_tsv(args.queries, entities=bundle.entities,
+                                relations=bundle.relations)
+    if args.mode != "mixed":
+        queries = [q._replace(mode=args.mode) for q in queries]
+    return queries
+
+
+def _run(args):
+    from repro.kernels import KernelPolicy
+    from repro.serve import FactorBundle, ServeConfig, ServeEngine
+
+    bundle = FactorBundle.load(args.factors)
+    src = bundle.meta.get("k_opt")
+    print(f"[serve] bundle {args.factors}: n={bundle.n} m={bundle.m} "
+          f"k={bundle.k}" + (f" (k_opt={src})" if src is not None else ""))
+    engine = ServeEngine(bundle, ServeConfig(
+        topk=args.topk, batch=args.batch, cache_entries=args.cache,
+        kernel=KernelPolicy(impl=args.impl)))
+
+    queries = load_queries(args, bundle)
+    n_req = max(1, min(args.requests, len(queries)))
+    per_req = -(-len(queries) // n_req)
+
+    latencies, results = [], []
+    t_all = time.perf_counter()
+    for c0 in range(0, len(queries), per_req):
+        req = queries[c0:c0 + per_req]
+        t0 = time.perf_counter()
+        results.extend(engine.query(req))
+        latencies.append(time.perf_counter() - t0)
+    t_all = time.perf_counter() - t_all
+
+    for q, r in list(zip(queries, results))[:max(args.show, 0)]:
+        names = bundle.entities
+        tops = ", ".join(
+            (names[i] if names and 0 <= i < len(names) else str(i))
+            + f":{s:.3f}"
+            for s, i in zip(r.scores[:5], r.indices[:5]) if i >= 0)
+        print(f"  {q.mode}(anchor={q.anchor}, rel={q.rel}) -> {tops}")
+
+    lat = np.asarray(latencies)
+    st = engine.stats()
+    print(f"[serve] {len(queries)} queries in {len(lat)} requests: "
+          f"p50 {np.percentile(lat, 50) * 1e3:.2f} ms, "
+          f"p99 {np.percentile(lat, 99) * 1e3:.2f} ms, "
+          f"{len(queries) / t_all:.0f} q/s")
+    print(f"[serve] cache: {st['hits']} hits / {st['misses']} misses "
+          f"({st['evictions']} evicted), {st['batches']} device batches")
+    return results
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--mesh", default="none",
-                    choices=("none", "pod", "multipod"))
-    args = ap.parse_args()
+    args = build_parser().parse_args()
+    if args.trace is None:
+        _run(args)
+        return
+    import os
 
-    cfg = (REDUCED_ARCHS if args.reduced else ARCHS)[args.arch]
-    if cfg.family in ("encdec", "vlm"):
-        raise SystemExit("token-only server targets decoder-only archs")
-    mesh = None
-    if args.mesh != "none":
-        from repro.launch.mesh import make_production_mesh
-        mesh = make_production_mesh(multi_pod=args.mesh == "multipod")
+    from repro.dist.compat import capture_compiles
+    from repro.obs import trace as obs
 
-    kp, kd = jax.random.split(jax.random.PRNGKey(0))
-    params = transformer.init_params(kp, cfg)
-    if mesh is not None:
-        from repro.train.serve_step import params_shardings
-        params = jax.device_put(params, params_shardings(mesh, cfg))
-
-    B, Pn, T = args.batch, args.prompt_len, args.new_tokens
-    prompts = jax.random.randint(kd, (B, Pn), 0, cfg.vocab)
-
-    prefill = make_prefill_step(cfg, mesh)
-    t0 = time.perf_counter()
-    logits, _ = prefill(params, {"tokens": prompts})
-    jax.block_until_ready(logits)
-    print(f"prefill {B}x{Pn}: {(time.perf_counter() - t0) * 1e3:.0f} ms")
-
-    cache = transformer.init_cache(cfg, B, Pn + T)
-    if mesh is not None:
-        from repro.dist.sharding import cache_shardings
-        cache = jax.device_put(cache, cache_shardings(mesh, cache))
-    serve = make_serve_step(cfg, mesh)
-    mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
-    tok = jnp.argmax(jnp.where(mask, logits, -jnp.inf), -1).astype(jnp.int32)
-    t0 = time.perf_counter()
-    for pos in range(Pn, Pn + T):
-        logits, cache = serve(params, cache, tok, jnp.int32(pos))
-        tok = jnp.argmax(jnp.where(mask, logits, -jnp.inf),
-                         -1).astype(jnp.int32)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    print(f"decode: {T} steps x {B} seqs in {dt * 1e3:.0f} ms "
-          f"({B * T / dt:.0f} tok/s)")
+    os.makedirs(args.trace, exist_ok=True)
+    tracer = obs.Tracer(args.trace, meta={"argv": vars(args)})
+    prev = obs.install(tracer)
+    try:
+        with capture_compiles(sink=tracer.compile_event):
+            _run(args)
+    finally:
+        tracer.export_chrome(os.path.join(args.trace, "trace_chrome.json"))
+        obs.install(prev)
+        tracer.close()
+        print(f"[obs] serve trace artifacts in {args.trace}")
 
 
 if __name__ == "__main__":

@@ -172,8 +172,14 @@ def _require_random_init(cfg, what: str):
 
 
 def _fused_opts(cfg) -> dict:
-    """The sweep config's fused-kernel selection, duck-typed (older
-    RescalkConfig-shaped objects without the fields mean 'oracle')."""
+    """The sweep config's fused-kernel selection.  Reads the unified
+    ``kernel_policy`` (kernels.KernelPolicy — resolves the deprecated
+    ``use_fused_kernel``/``fused_impl`` aliases itself); duck-typed so
+    older RescalkConfig-shaped objects without any of the fields mean
+    'oracle'."""
+    kp = getattr(cfg, "kernel_policy", None)
+    if kp is not None:
+        return dict(use_fused=kp.use_fused, impl=kp.impl)
     return dict(use_fused=getattr(cfg, "use_fused_kernel", False),
                 impl=getattr(cfg, "fused_impl", "auto"))
 

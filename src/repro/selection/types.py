@@ -25,8 +25,12 @@ class RescalkConfig:
     seed: int = 0
     sil_threshold: float = 0.75        # stability bar for k selection
     # single-X-pass kernels on the MU hot loop (kernels/fused_bilinear for
-    # dense operands, kernels/bcsr_fused for BCSR — ISSUE 5); fused_impl is
-    # the kernels/ops.py dispatch: auto | pallas | interpret | ref
+    # dense operands, kernels/bcsr_fused for BCSR — ISSUE 5).
+    # `kernel` is a kernels.KernelPolicy (the unified knob bundle; typed
+    # loosely so this module stays numpy-only); `use_fused_kernel` /
+    # `fused_impl` are its deprecated aliases, honored when `kernel` is
+    # unset and removed after one release.  Read via `kernel_policy`.
+    kernel: object | None = None
     use_fused_kernel: bool = False
     fused_impl: str = "auto"
     # runtime factor sanitizer (repro.analysis.sanitizer): finite /
@@ -43,6 +47,17 @@ class RescalkConfig:
     @property
     def ks(self) -> list[int]:
         return list(range(self.k_min, self.k_max + 1))
+
+    @property
+    def kernel_policy(self):
+        """The effective kernels.KernelPolicy: `kernel` when set, else the
+        deprecated `use_fused_kernel`/`fused_impl` aliases.  Imported
+        lazily so this module keeps its numpy-only import surface."""
+        if self.kernel is not None:
+            return self.kernel
+        from repro.kernels.policy import KernelPolicy
+        return KernelPolicy(use_fused=self.use_fused_kernel,
+                            impl=self.fused_impl)
 
 
 @dataclasses.dataclass

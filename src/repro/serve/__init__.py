@@ -1,0 +1,21 @@
+"""repro.serve — online KG-completion from swept RESCAL factors.
+
+The sweep's whole point of output is the winning (A, R) pair; this package
+turns it into a product:
+
+  bundle.py   FactorBundle — the versioned on-disk factor artifact that
+              `rescalk_run` persists next to the report (A, R, vocab,
+              permutation, training-manifest digest) and `launch/serve`
+              loads
+  engine.py   ServeEngine — query micro-batching into ONE compiled shape
+              (pad-and-mask), hot-head LRU caching for zipf-skewed query
+              streams, and scoring through the `score_topk` panel kernel
+              (the (batch, n) score matrix never materializes)
+"""
+from .bundle import FORMAT_VERSION, BundleError, FactorBundle
+from .engine import (Query, ServeConfig, ServeEngine, parse_queries_tsv,
+                     random_queries)
+
+__all__ = ["BundleError", "FORMAT_VERSION", "FactorBundle", "Query",
+           "ServeConfig", "ServeEngine", "parse_queries_tsv",
+           "random_queries"]

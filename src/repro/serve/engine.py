@@ -1,0 +1,220 @@
+"""ServeEngine — online link-prediction over a FactorBundle.
+
+Request path (every stage wears an obs span, zero-cost when untraced):
+
+  1. **cache probe** — queries are keyed (mode, anchor, rel); a hot-head
+     LRU absorbs the head of zipf-skewed streams (the same skew the
+     virtual zipf patterns model) so repeated heads never reach the device
+  2. **micro-batching** — cache misses are deduplicated and padded to ONE
+     fixed compiled batch shape (`ServeConfig.batch`); the pad rows are
+     real (anchor 0, relation 0) but their results are dropped on the
+     host, so any query count reuses the same compiled program — program
+     count stays O(1), not O(distinct batch sizes)
+  3. **scoring** — one jitted program gathers the anchors, orients R per
+     query (`(s, r, ?)` uses R[r], `(?, r, o)` uses R[r]^T — the mode is
+     *data*, a boolean lane, so both directions share the program), and
+     ranks via `kernels.ops.score_topk`, which never materializes the
+     (batch, n) score matrix (Pallas kernel on TPU, panelized jnp stream
+     on CPU, per the engine's KernelPolicy)
+
+Scores are `A[anchor] @ R_q @ A^T` rows reduced to (topk,) — descending,
+missing slots (topk > n) as (-inf, -1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.policy import KernelPolicy
+from repro.obs import trace as obs
+
+from .bundle import FactorBundle
+
+MODES = ("sro", "sor")
+
+
+class Query(NamedTuple):
+    mode: str          # "sro" = (s, r, ?) | "sor" = (?, r, o)
+    anchor: int        # subject id (sro) or object id (sor)
+    rel: int
+
+
+class QueryResult(NamedTuple):
+    scores: np.ndarray     # (topk,) f32, descending
+    indices: np.ndarray    # (topk,) i32, -1 past n
+    cached: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    topk: int = 10
+    batch: int = 32              # the ONE compiled micro-batch width
+    cache_entries: int = 4096    # 0 disables the hot-head LRU
+    pn: int | None = None        # score_topk panel length (None = default)
+    kernel: KernelPolicy = KernelPolicy()
+
+
+class ServeEngine:
+    """Stateful server over one FactorBundle.  Not thread-safe by design
+    (one engine per worker; the jitted scorer itself is reentrant)."""
+
+    def __init__(self, bundle: FactorBundle, cfg: ServeConfig | None = None):
+        self.cfg = cfg = cfg or ServeConfig()
+        self.bundle = bundle
+        self.A = jnp.asarray(bundle.A, jnp.float32)
+        self.R = jnp.asarray(bundle.R, jnp.float32)
+        self.n, self.k = bundle.n, bundle.k
+        self.m = bundle.m
+        self._cache: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+        self.batches = 0
+
+        topk, impl, pn = cfg.topk, cfg.kernel.impl, cfg.pn
+
+        @jax.jit
+        def _score(A, R, anchors, rels, is_sro):
+            E = A[anchors]                                   # (b, k)
+            Rq = R[rels]                                     # (b, k, k)
+            Rq = jnp.where(is_sro[:, None, None], Rq,
+                           jnp.swapaxes(Rq, 1, 2))
+            V = jnp.einsum("bi,bij->bj", E, Rq)
+            kw = {} if pn is None else {"pn": pn}
+            return ops.score_topk(V, A, topk=topk, impl=impl, **kw)
+
+        self._score = _score
+
+    # -- cache ------------------------------------------------------------
+
+    def _cache_get(self, entry):
+        hit = self._cache.get(entry)
+        if hit is not None:
+            self._cache.move_to_end(entry)
+        return hit
+
+    def _cache_put(self, entry, value):
+        if self.cfg.cache_entries <= 0:
+            return
+        self._cache[entry] = value
+        self._cache.move_to_end(entry)
+        while len(self._cache) > self.cfg.cache_entries:
+            self._cache.popitem(last=False)
+            self.evictions += 1
+
+    # -- scoring ----------------------------------------------------------
+
+    def _score_chunk(self, keys: list[tuple]) -> list[tuple]:
+        """Score up to `batch` unique (mode, anchor, rel) keys through the
+        one compiled program; pad rows are dropped host-side."""
+        b = self.cfg.batch
+        anchors = np.zeros(b, np.int32)
+        rels = np.zeros(b, np.int32)
+        is_sro = np.ones(b, bool)
+        for j, (mode, anchor, rel) in enumerate(keys):
+            anchors[j], rels[j], is_sro[j] = anchor, rel, mode == "sro"
+        with obs.span("serve/score", batch=b, live=len(keys)):
+            s, i = self._score(self.A, self.R, jnp.asarray(anchors),
+                               jnp.asarray(rels), jnp.asarray(is_sro))
+            s, i = np.asarray(s), np.asarray(i)       # blocks until ready
+        self.batches += 1
+        return [(s[j], i[j]) for j in range(len(keys))]
+
+    def query(self, queries: Sequence[Query]) -> list[QueryResult]:
+        """Answer a request of queries; any count compiles ZERO new
+        programs after the first batch (pad-and-mask to cfg.batch)."""
+        with obs.span("serve/request", n=len(queries)):
+            results: list[QueryResult | None] = [None] * len(queries)
+            pending: OrderedDict[tuple, list[int]] = OrderedDict()
+            for i, q in enumerate(queries):
+                if q.mode not in MODES:
+                    raise ValueError(f"query mode must be one of {MODES}, "
+                                     f"got {q.mode!r}")
+                if not (0 <= q.anchor < self.n and 0 <= q.rel < self.m):
+                    raise ValueError(f"query out of range for (n={self.n}, "
+                                     f"m={self.m}): {q}")
+                key = (q.mode, int(q.anchor), int(q.rel))
+                hit = self._cache_get(key)
+                if hit is not None:
+                    self.hits += 1
+                    results[i] = QueryResult(hit[0], hit[1], True)
+                else:
+                    self.misses += 1
+                    pending.setdefault(key, []).append(i)
+            uniq = list(pending)
+            for c0 in range(0, len(uniq), self.cfg.batch):
+                chunk = uniq[c0:c0 + self.cfg.batch]
+                for key, out in zip(chunk, self._score_chunk(chunk)):
+                    self._cache_put(key, out)
+                    for i in pending[key]:
+                        results[i] = QueryResult(out[0], out[1], False)
+            obs.event("serve/cache", hits=self.hits, misses=self.misses,
+                      evictions=self.evictions, size=len(self._cache))
+        return results      # type: ignore[return-value]
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "batches": self.batches,
+                "cache_size": len(self._cache)}
+
+
+# -- query sources --------------------------------------------------------
+
+def random_queries(n: int, m: int, count: int, *, skew: float = 1.1,
+                   seed: int = 0, mode: str = "mixed") -> list[Query]:
+    """A zipf-skewed query stream (rank r anchor ~ r^-skew, the shape the
+    hot-head cache exists for).  mode: sro | sor | mixed."""
+    rng = np.random.default_rng(seed)
+    anchors = (rng.zipf(max(skew, 1.01), size=count) - 1) % n
+    rels = rng.integers(0, m, size=count)
+    if mode == "mixed":
+        modes = np.where(rng.random(count) < 0.5, "sro", "sor")
+    elif mode in MODES:
+        modes = np.full(count, mode)
+    else:
+        raise ValueError(f"mode must be sro|sor|mixed, got {mode!r}")
+    return [Query(str(md), int(a), int(r))
+            for md, a, r in zip(modes, anchors, rels)]
+
+
+def parse_queries_tsv(path: str, *, entities: list[str] | None = None,
+                      relations: list[str] | None = None) -> list[Query]:
+    """Parse `s<TAB>r<TAB>?` / `?<TAB>r<TAB>o` lines into queries.  Names
+    resolve through the bundle vocab when present; otherwise every field
+    must already be an integer id."""
+    ent_id = {name: i for i, name in enumerate(entities or [])}
+    rel_id = {name: i for i, name in enumerate(relations or [])}
+
+    def _id(tok: str, table: dict, what: str, lineno: int) -> int:
+        if tok in table:
+            return table[tok]
+        try:
+            return int(tok)
+        except ValueError:
+            raise ValueError(f"{path}:{lineno}: unknown {what} {tok!r} "
+                             f"(not in bundle vocab, not an id)")
+
+    queries = []
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = line.split("\t")
+            if len(parts) != 3 or (parts[0] == "?") == (parts[2] == "?"):
+                raise ValueError(f"{path}:{lineno}: want "
+                                 f"'s<TAB>r<TAB>?' or '?<TAB>r<TAB>o', "
+                                 f"got {line!r}")
+            s, r, o = parts
+            rel = _id(r, rel_id, "relation", lineno)
+            if o == "?":
+                queries.append(Query("sro", _id(s, ent_id, "entity",
+                                                lineno), rel))
+            else:
+                queries.append(Query("sor", _id(o, ent_id, "entity",
+                                                lineno), rel))
+    return queries

@@ -1,0 +1,403 @@
+"""repro.serve + kernels.score_topk: streamed top-k parity against the
+materializing oracle (ties, k > n tails, panel-overflow fallback), the
+KernelPolicy alias resolution, the engine's pad-and-mask micro-batcher
+(O(1) compiled programs), FactorBundle persistence through a real tiny
+sweep, hot-head cache accounting under zipf, and the check_trace.py
+bundle-pointer validation.
+"""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import RescalkConfig, rescalk
+from repro.core.sparse import (_resolve_kernel_opts, random_bcsr,
+                               sparse_products)
+from repro.data.synthetic import synthetic_rescal
+from repro.dist.compat import capture_compiles
+from repro.dist.engine import DistRescalConfig
+from repro.kernels import ops
+from repro.kernels.policy import KernelPolicy
+from repro.kernels.ref import ref_score_topk
+from repro.kernels.score_topk import effective_pn, score_topk_stream
+from repro.serve import (BundleError, FactorBundle, Query, ServeConfig,
+                         ServeEngine, parse_queries_tsv, random_queries)
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _rand_va(key, b, n, k):
+    kv, ka = jax.random.split(key)
+    return (jax.random.normal(kv, (b, k), jnp.float32),
+            jax.random.normal(ka, (n, k), jnp.float32))
+
+
+def _assert_topk_matches(got, want):
+    gs, gi = np.asarray(got[0]), np.asarray(got[1])
+    ws, wi = np.asarray(want[0]), np.asarray(want[1])
+    np.testing.assert_array_equal(gi, wi)
+    np.testing.assert_allclose(gs, ws, atol=1e-5, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# score_topk kernel parity (indices AND scores vs the materializing oracle)
+# ---------------------------------------------------------------------------
+
+class TestScoreTopk:
+    IMPLS = ("stream", "interpret")
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    @pytest.mark.parametrize("b,n,topk,pn", [
+        (4, 300, 5, 128),      # multi-panel with a ragged tail
+        (3, 128, 4, 128),      # exactly one panel
+        (2, 700, 16, 256),     # deeper top-k across panels
+    ])
+    def test_matches_oracle(self, key, impl, b, n, topk, pn):
+        V, A = _rand_va(key, b, n, 8)
+        got = ops.score_topk(V, A, topk=topk, impl=impl, pn=pn)
+        _assert_topk_matches(got, ref_score_topk(V, A, topk))
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_topk_past_n_pads_neg_inf(self, key, impl):
+        V, A = _rand_va(key, 2, 3, 4)
+        s, i = ops.score_topk(V, A, topk=8, impl=impl, pn=128)
+        s, i = np.asarray(s), np.asarray(i)
+        assert s.shape == (2, 8) and i.shape == (2, 8)
+        assert np.all(i[:, 3:] == -1) and np.all(np.isneginf(s[:, 3:]))
+        _assert_topk_matches((s, i), ref_score_topk(V, A, 8))
+
+    @pytest.mark.parametrize("impl", IMPLS)
+    def test_exact_ties_break_to_lowest_index(self, key, impl):
+        # duplicated A rows make bitwise-identical scores; lax.top_k (the
+        # oracle) keeps the LOWEST index first and the kernel must agree
+        V, A = _rand_va(key, 3, 40, 8)
+        A = jnp.concatenate([A, A[:13]], axis=0)      # exact duplicates
+        got = ops.score_topk(V, A, topk=10, impl=impl, pn=128)
+        _assert_topk_matches(got, ref_score_topk(V, A, 10))
+
+    def test_panel_overflow_falls_back_to_stream(self, key, monkeypatch):
+        V, A = _rand_va(key, 4, 300, 8)
+        monkeypatch.setattr(ops, "VMEM_PANEL_BYTES", 64)
+        before = ops.kernel_fallbacks()
+        got = ops.score_topk(V, A, topk=5, impl="pallas", pn=128)
+        assert ops.kernel_fallbacks() == before + 1
+        _assert_topk_matches(got, ref_score_topk(V, A, 5))
+
+    def test_auto_dispatch_off_tpu_is_stream_no_fallback_event(self, key):
+        V, A = _rand_va(key, 4, 300, 8)
+        before = ops.kernel_fallbacks()
+        got = ops.score_topk(V, A, topk=5, impl="auto", pn=128)
+        assert ops.kernel_fallbacks() == before     # stream is not a demotion
+        _assert_topk_matches(got, ref_score_topk(V, A, 5))
+
+    def test_stream_never_materializes_wide_row(self, key):
+        # the stream's carry is (b, topk); its scan sees (pn, k) panels —
+        # check the jaxpr holds no (b, n) intermediate
+        b, n, topk, pn = 4, 4096, 5, 256
+        V, A = _rand_va(key, b, n, 8)
+        jaxpr = jax.make_jaxpr(
+            lambda v, a: score_topk_stream(v, a, topk=topk, pn=pn))(V, A)
+        shapes = [tuple(v.aval.shape) for eqn in jaxpr.jaxpr.eqns
+                  for v in eqn.outvars]
+        assert (b, n) not in shapes
+
+    def test_effective_pn_clamps(self):
+        assert effective_pn(100, 2048) == 128       # lane floor
+        assert effective_pn(100000, 2048) == 2048   # cap at requested
+        assert effective_pn(300, 2048) == 384       # round n up to lanes
+
+
+# ---------------------------------------------------------------------------
+# KernelPolicy + deprecated alias resolution
+# ---------------------------------------------------------------------------
+
+class TestKernelPolicy:
+    def test_aliases_resolve_to_policy(self):
+        kp = KernelPolicy.resolve(None, use_fused=True, impl="interpret")
+        assert kp.use_fused and kp.impl == "interpret"
+        assert KernelPolicy.resolve(None) == KernelPolicy()
+
+    def test_policy_plus_alias_is_an_error(self):
+        with pytest.raises(TypeError, match="not both"):
+            KernelPolicy.resolve(KernelPolicy(), use_fused=True)
+        with pytest.raises(TypeError, match="not both"):
+            _resolve_kernel_opts(KernelPolicy(), True, "auto")
+
+    def test_invalid_impl_rejected(self):
+        with pytest.raises(ValueError, match="impl"):
+            KernelPolicy(impl="warp")
+
+    def test_sparse_layer_duck_typing(self):
+        kp = KernelPolicy(use_fused=True, impl="ref")
+        assert _resolve_kernel_opts(kp, False, "auto") == (True, "ref")
+        assert _resolve_kernel_opts(None, True, "ref") == (True, "ref")
+
+    def test_config_kernel_policy_fallback(self):
+        # legacy fields still resolve through the property...
+        cfg = RescalkConfig(use_fused_kernel=True, fused_impl="interpret")
+        assert cfg.kernel_policy.use_fused
+        assert cfg.kernel_policy.impl == "interpret"
+        # ...and an explicit policy wins over them
+        kp = KernelPolicy(use_fused=True, impl="ref")
+        assert RescalkConfig(kernel=kp).kernel_policy is kp
+        dcfg = DistRescalConfig(use_fused_kernel=True, fused_impl="ref")
+        assert dcfg.kernel_policy.use_fused
+        assert DistRescalConfig(kernel=kp).kernel_policy is kp
+
+    def test_sparse_products_policy_equals_aliases(self, key):
+        sp = random_bcsr(key, m=2, n=64, bs=16, block_density=0.3)
+        B = jax.random.uniform(jax.random.fold_in(key, 1), (64, 4))
+        kp = KernelPolicy(use_fused=True, impl="ref")
+        xa_p, xtb_p = sparse_products(sp, B, B, policy=kp)
+        xa_a, xtb_a = sparse_products(sp, B, B, use_fused=True, impl="ref")
+        np.testing.assert_allclose(np.asarray(xa_p), np.asarray(xa_a))
+        np.testing.assert_allclose(np.asarray(xtb_p), np.asarray(xtb_a))
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: micro-batching, dedup, cache, validation
+# ---------------------------------------------------------------------------
+
+def _tiny_bundle(n=20, m=3, k=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return FactorBundle(A=rng.random((n, k), np.float32),
+                        R=rng.random((m, k, k), np.float32))
+
+
+def _oracle_topk(bundle, q, topk):
+    Rq = bundle.R[q.rel] if q.mode == "sro" else bundle.R[q.rel].T
+    scores = (bundle.A[q.anchor] @ Rq @ bundle.A.T).astype(np.float32)
+    idx = np.argsort(-scores, kind="stable")[:topk]
+    return scores[idx], idx
+
+
+class TestServeEngine:
+    def test_results_match_direct_computation_both_modes(self):
+        bundle = _tiny_bundle()
+        engine = ServeEngine(bundle, ServeConfig(topk=6, batch=4))
+        queries = [Query("sro", 3, 1), Query("sor", 3, 1),
+                   Query("sro", 17, 2), Query("sor", 0, 0),
+                   Query("sro", 5, 0)]                 # 5 live > batch 4
+        for q, r in zip(queries, engine.query(queries)):
+            ws, wi = _oracle_topk(bundle, q, 6)
+            np.testing.assert_array_equal(r.indices, wi)
+            np.testing.assert_allclose(r.scores, ws, atol=1e-5)
+        assert engine.stats()["batches"] == 2          # ceil(5 / 4)
+
+    def test_any_request_size_compiles_one_program(self):
+        bundle = _tiny_bundle(n=40)
+        engine = ServeEngine(bundle, ServeConfig(topk=3, batch=8,
+                                                 cache_entries=0))
+        compiles = []
+        with capture_compiles(sink=lambda **kw: compiles.append(kw)):
+            engine.query([Query("sro", i, 0) for i in range(3)])
+            n_first = len(compiles)
+            engine.query([Query("sro", i, 1) for i in range(7)])
+            engine.query([Query("sor", i, 2) for i in range(20)])
+        assert len(compiles) == n_first    # pad-and-mask: zero new programs
+
+    def test_in_request_dedup_scores_once(self):
+        bundle = _tiny_bundle()
+        engine = ServeEngine(bundle, ServeConfig(topk=4, batch=8))
+        q = Query("sro", 2, 1)
+        res = engine.query([q, Query("sor", 1, 0), q])
+        assert engine.stats()["batches"] == 1
+        assert not res[2].cached           # deduped compute, not a cache hit
+        np.testing.assert_array_equal(res[0].scores, res[2].scores)
+        np.testing.assert_array_equal(res[0].indices, res[2].indices)
+
+    def test_cache_hit_on_repeat_request(self):
+        bundle = _tiny_bundle()
+        engine = ServeEngine(bundle, ServeConfig(topk=4, batch=8))
+        q = [Query("sro", 2, 1)]
+        first = engine.query(q)[0]
+        second = engine.query(q)[0]
+        assert not first.cached and second.cached
+        assert engine.stats() == {"hits": 1, "misses": 1, "evictions": 0,
+                                  "batches": 1, "cache_size": 1}
+        np.testing.assert_array_equal(first.scores, second.scores)
+
+    def test_lru_eviction_accounted(self):
+        bundle = _tiny_bundle()
+        engine = ServeEngine(bundle, ServeConfig(topk=2, batch=4,
+                                                 cache_entries=3))
+        engine.query([Query("sro", i, 0) for i in range(5)])
+        st = engine.stats()
+        assert st["cache_size"] == 3 and st["evictions"] == 2
+
+    def test_zipf_stream_cache_accounting(self):
+        bundle = _tiny_bundle(n=50, m=2)
+        engine = ServeEngine(bundle, ServeConfig(topk=4, batch=16))
+        queries = random_queries(50, 2, 200, skew=2.0, seed=3)
+        for c0 in range(0, 200, 20):                 # 10 requests
+            engine.query(queries[c0:c0 + 20])
+        st = engine.stats()
+        assert st["hits"] + st["misses"] == 200
+        assert st["hits"] > 0                        # the head repeats
+
+    def test_rejects_bad_queries(self):
+        engine = ServeEngine(_tiny_bundle(n=20, m=3))
+        with pytest.raises(ValueError, match="mode"):
+            engine.query([Query("rso", 0, 0)])
+        with pytest.raises(ValueError, match="out of range"):
+            engine.query([Query("sro", 20, 0)])
+        with pytest.raises(ValueError, match="out of range"):
+            engine.query([Query("sor", 0, 3)])
+
+
+class TestQuerySources:
+    def test_random_queries_deterministic_and_in_range(self):
+        qs = random_queries(30, 4, 64, skew=1.3, seed=7)
+        assert qs == random_queries(30, 4, 64, skew=1.3, seed=7)
+        assert all(0 <= q.anchor < 30 and 0 <= q.rel < 4 for q in qs)
+        assert {q.mode for q in qs} == {"sro", "sor"}
+        assert all(q.mode == "sor"
+                   for q in random_queries(30, 4, 16, mode="sor"))
+
+    def test_parse_tsv_names_and_ids(self, tmp_path):
+        p = tmp_path / "q.tsv"
+        p.write_text("# kg-completion queries\n"
+                     "alice\tknows\t?\n"
+                     "?\tknows\tbob\n"
+                     "2\t0\t?\n")
+        qs = parse_queries_tsv(str(p), entities=["alice", "bob", "carol"],
+                               relations=["knows"])
+        assert qs == [Query("sro", 0, 0), Query("sor", 1, 0),
+                      Query("sro", 2, 0)]
+
+    def test_parse_tsv_rejects_unknowns_and_malformed(self, tmp_path):
+        p = tmp_path / "q.tsv"
+        p.write_text("dave\t0\t?\n")
+        with pytest.raises(ValueError, match="unknown entity"):
+            parse_queries_tsv(str(p), entities=["alice"], relations=["r"])
+        p.write_text("a\tb\n")
+        with pytest.raises(ValueError, match="TAB"):
+            parse_queries_tsv(str(p))
+
+
+# ---------------------------------------------------------------------------
+# FactorBundle persistence
+# ---------------------------------------------------------------------------
+
+class TestFactorBundle:
+    def test_sweep_save_load_score_roundtrip(self, key, tmp_path):
+        """The full artifact path: a real (tiny) sweep -> bundle ->
+        reload -> engine answers match the loaded factors."""
+        X, _, _ = synthetic_rescal(key, n=24, m=2, k=3, noise=0.01)
+        cfg = RescalkConfig(k_min=2, k_max=3, n_perturbations=2,
+                            rescal_iters=30, regress_iters=10, seed=0)
+        res = rescalk(X, cfg)
+        ents = [f"e{i}" for i in range(24)]
+        bundle = FactorBundle.from_sweep(res, entities=ents,
+                                         relations=["r0", "r1"],
+                                         meta={"criterion": "auto"})
+        assert bundle.meta["k_opt"] == res.k_opt
+        bdir = str(tmp_path / "b.bundle")
+        bundle.save(bdir)
+        loaded = FactorBundle.load(bdir)
+        np.testing.assert_array_equal(loaded.A, bundle.A)
+        np.testing.assert_array_equal(loaded.R, bundle.R)
+        assert loaded.entities == ents and loaded.meta["k_opt"] == res.k_opt
+        assert loaded.digest() == bundle.digest()
+        engine = ServeEngine(loaded, ServeConfig(topk=5, batch=4))
+        q = Query("sro", 1, 0)
+        r = engine.query([q])[0]
+        ws, wi = _oracle_topk(loaded, q, 5)
+        np.testing.assert_array_equal(r.indices, wi)
+        np.testing.assert_allclose(r.scores, ws, atol=1e-5)
+
+    def test_load_refuses_tampered_factors(self, tmp_path):
+        bundle = _tiny_bundle()
+        bdir = str(tmp_path / "b")
+        bundle.save(bdir)
+        arrs = dict(np.load(tmp_path / "b" / "factors.npz"))
+        arrs["A"] = arrs["A"] + 1.0
+        np.savez(tmp_path / "b" / "factors.npz", **arrs)
+        with pytest.raises(BundleError, match="digest"):
+            FactorBundle.load(bdir)
+        assert FactorBundle.load(bdir, check_digest=False) is not None
+
+    def test_load_refuses_future_format(self, tmp_path):
+        bdir = str(tmp_path / "b")
+        _tiny_bundle().save(bdir)
+        man = tmp_path / "b" / "bundle.json"
+        doc = json.loads(man.read_text())
+        doc["format_version"] = 99
+        man.write_text(json.dumps(doc))
+        with pytest.raises(BundleError, match="format_version"):
+            FactorBundle.load(bdir)
+
+    def test_inconsistent_shapes_rejected(self):
+        with pytest.raises(BundleError, match="shapes"):
+            FactorBundle(A=np.zeros((4, 3), np.float32),
+                         R=np.zeros((2, 5, 5), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# check_trace.py bundle-pointer validation (imported; CI runs the CLI)
+# ---------------------------------------------------------------------------
+
+def _load_check_trace():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "check_trace", REPO / "scripts" / "check_trace.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _trace_with_report(tmp_path, meta):
+    from repro.obs import trace as obs
+    with obs.tracing(str(tmp_path)) as t:
+        with obs.span("sched/execute", uid="u0"):
+            pass
+        t.export_chrome(str(tmp_path / "trace_chrome.json"))
+    rp = tmp_path / "report.json"
+    rp.write_text(json.dumps(
+        {"units": [{"uid": "u0", "reused": False}], "meta": meta}))
+    return rp
+
+
+class TestCheckTraceBundle:
+    def test_valid_pointer_passes(self, tmp_path):
+        ct = _load_check_trace()
+        _tiny_bundle().save(str(tmp_path / "r.bundle"))
+        # relative pointer resolves against the report's directory
+        rp = _trace_with_report(tmp_path, {"bundle": "r.bundle"})
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 0
+        assert ct.check_bundle(str(rp)) == []
+
+    def test_no_pointer_is_fine(self, tmp_path):
+        ct = _load_check_trace()
+        rp = _trace_with_report(tmp_path, {})
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 0
+
+    def test_missing_bundle_dir_fails(self, tmp_path):
+        ct = _load_check_trace()
+        rp = _trace_with_report(tmp_path, {"bundle": "gone.bundle"})
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 1
+        assert "not a directory" in ct.check_bundle(str(rp))[0]
+
+    def test_digest_mismatch_fails(self, tmp_path):
+        ct = _load_check_trace()
+        bdir = tmp_path / "r.bundle"
+        _tiny_bundle().save(str(bdir))
+        doc = json.loads((bdir / "bundle.json").read_text())
+        doc["digest"] = "0" * 40
+        (bdir / "bundle.json").write_text(json.dumps(doc))
+        rp = _trace_with_report(tmp_path, {"bundle": "r.bundle"})
+        assert ct.main([str(tmp_path), "--report", str(rp)]) == 1
+        assert any("digest" in p for p in ct.check_bundle(str(rp)))
+
+    def test_shape_drift_fails(self, tmp_path):
+        ct = _load_check_trace()
+        bdir = tmp_path / "r.bundle"
+        _tiny_bundle().save(str(bdir))
+        doc = json.loads((bdir / "bundle.json").read_text())
+        doc["n"] = 999
+        (bdir / "bundle.json").write_text(json.dumps(doc))
+        rp = _trace_with_report(tmp_path, {"bundle": "r.bundle"})
+        assert any("n=999" in p for p in ct.check_bundle(str(rp)))
