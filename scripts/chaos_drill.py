@@ -1,0 +1,277 @@
+#!/usr/bin/env python
+"""Chaos drill: a faulted sweep must agree with its fault-free twin.
+
+Four phases over one tiny virtual-BCSR sweep (the resilience capstone,
+ISSUE 10).  Every phase shells out to the real CLI
+(``repro.launch.rescalk_run``) so the drill exercises the same process
+boundary a production kill does:
+
+  baseline    fault-free run -> report R0; trace validated by
+              scripts/check_trace.py (which also cross-checks the new
+              per-unit retry accounting against the sched/retry events)
+  transient   FaultPlan: one TransientError on a unit's first attempt +
+              one forced kernel VMEM-budget overflow.  The run must
+              retry/fall back and finish with a report member-for-member
+              identical to R0 (same k_opt, same curves, same units) —
+              and every injected fault must have a matching recovery
+              event in the trace (``sched/retry`` with the faulted
+              unit's uid; ``kernel/fallback``)
+  torn write  FaultPlan: truncate the first unit checkpoint during an
+              interrupted ("killed") run.  The resume must quarantine
+              the torn step (``ckpt/quarantine``), recompute the unit,
+              and still match R0
+  fail fast   FaultPlan: a DeterministicFault on the first attempt ->
+              nonzero exit after exactly ONE attempt, zero retries (a
+              deterministic error must not burn the retry budget)
+
+Reports are compared after dropping the volatile execution telemetry
+(timings, watermarks, retry counters, meta) — everything the paper's
+numbers depend on (ks, curves, k_opt, unit identities) must be equal.
+
+Exit codes: 0 all phases green, 1 a drill assertion failed, 2 the drill
+could not run at all.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+# one tiny sweep, shared by every phase: a virtual BCSR operand through
+# the fused kernel so the kernel/dispatch seam is actually on the path
+SWEEP = ["--data", "virtual:bcsr:n=512,m=2,k=3,bs=128,density=0.02",
+         "--k-min", "2", "--k-max", "3", "--r", "2", "--iters", "10",
+         "--use-fused-kernel", "--max-retries", "2",
+         "--retry-base-delay", "0.01"]
+
+
+class DrillFailure(AssertionError):
+    """A phase assertion failed — exit 1, the drill graded a regression."""
+
+
+def check(cond: bool, what: str) -> None:
+    if not cond:
+        raise DrillFailure(what)
+
+
+def run_cli(args: list[str], *, log: str, expect_fail: bool = False
+            ) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "-m", "repro.launch.rescalk_run", *args]
+    proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          cwd=REPO)
+    with open(log, "w") as f:
+        f.write(f"$ {' '.join(cmd)}\n-- stdout --\n{proc.stdout}"
+                f"\n-- stderr --\n{proc.stderr}\n-- exit {proc.returncode}\n")
+    if expect_fail:
+        check(proc.returncode != 0,
+              f"expected a nonzero exit, got {proc.returncode} (see {log})")
+    elif proc.returncode != 0:
+        sys.stderr.write(proc.stdout + proc.stderr)
+        raise DrillFailure(f"rescalk_run exited {proc.returncode} "
+                           f"(see {log})")
+    return proc
+
+
+def check_trace_cli(trace_dir: str, report: str) -> None:
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "check_trace.py"),
+         trace_dir, "--report", report],
+        capture_output=True, text=True, cwd=REPO)
+    check(proc.returncode == 0,
+          f"check_trace.py failed on {trace_dir}:\n{proc.stdout}"
+          f"{proc.stderr}")
+
+
+def events(trace_dir: str) -> list[dict]:
+    out = []
+    with open(os.path.join(trace_dir, "trace.jsonl")) as f:
+        for line in f:
+            if line.strip():
+                out.append(json.loads(line))
+    return out
+
+
+def instants(evs: list[dict], name: str) -> list[dict]:
+    return [e.get("args") or {} for e in evs
+            if e.get("ph") == "i" and e.get("name") == name]
+
+
+# per-unit execution telemetry: legitimately differs between a faulted
+# run and its fault-free twin; everything NOT listed here must be equal
+VOLATILE_UNIT_FIELDS = frozenset({
+    "seconds", "reused", "retries", "attempts", "backoff_seconds",
+    "straggler", "baseline_seconds", "peak_host_bytes",
+    "peak_device_bytes", "kernel_fallbacks", "fail_fast"})
+
+
+def normalize(report_path: str) -> dict:
+    with open(report_path) as f:
+        d = json.load(f)
+    for key in ("total_seconds", "n_reused", "meta"):
+        d.pop(key, None)
+    d["units"] = sorted(
+        ({k: v for k, v in u.items() if k not in VOLATILE_UNIT_FIELDS}
+         for u in d.get("units", [])),
+        key=lambda u: u["uid"])
+    return d
+
+
+def check_parity(report_path: str, baseline: dict, phase: str) -> None:
+    got = normalize(report_path)
+    if got == baseline:
+        return
+    diff = [k for k in sorted(set(got) | set(baseline))
+            if got.get(k) != baseline.get(k)]
+    raise DrillFailure(f"{phase}: report diverged from the fault-free "
+                       f"baseline in {diff} — "
+                       f"got k_opt={got.get('k_opt')} "
+                       f"s_min={got.get('s_min')}, want "
+                       f"k_opt={baseline.get('k_opt')} "
+                       f"s_min={baseline.get('s_min')}")
+
+
+def write_plan(path: str, specs: dict[str, list[dict]]) -> str:
+    with open(path, "w") as f:
+        json.dump({"specs": specs}, f, indent=1)
+    return path
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workdir", default=None,
+                    help="keep artifacts here instead of a temp dir")
+    args = ap.parse_args(argv)
+
+    work = args.workdir or tempfile.mkdtemp(prefix="chaos-drill-")
+    os.makedirs(work, exist_ok=True)
+    try:
+        _drill(work)
+    except DrillFailure as ex:
+        print(f"[chaos-drill] FAIL: {ex}")
+        print(f"[chaos-drill] artifacts kept in {work}")
+        return 1
+    except Exception as ex:     # infrastructure, not a graded regression
+        print(f"[chaos-drill] ERROR: {type(ex).__name__}: {ex}")
+        print(f"[chaos-drill] artifacts kept in {work}")
+        return 2
+    if args.workdir is None:
+        shutil.rmtree(work, ignore_errors=True)
+    print("[chaos-drill] OK: faulted sweeps match the fault-free "
+          "baseline; every fault had its recovery event")
+    return 0
+
+
+def _drill(work: str) -> None:
+    j = lambda *p: os.path.join(work, *p)  # noqa: E731
+
+    # -- phase 0: fault-free baseline --------------------------------------
+    print("[chaos-drill] phase 0: fault-free baseline")
+    run_cli([*SWEEP, "--trace", j("t0"), "--report", j("r0.json")],
+            log=j("phase0.log"))
+    check_trace_cli(j("t0"), j("r0.json"))
+    baseline = normalize(j("r0.json"))
+    check(len(baseline["units"]) >= 2,
+          f"baseline sweep too small to drill: {baseline['units']}")
+    check(not instants(events(j("t0")), "fault/inject"),
+          "fault-free baseline emitted fault/inject events")
+
+    # -- phase 1: transient unit failure + forced kernel overflow ----------
+    print("[chaos-drill] phase 1: transient failure + kernel overflow")
+    plan1 = write_plan(j("plan1.json"), {
+        # hit 1 = the SECOND unit's first attempt (0-based probe count)
+        "sched/unit": [{"kind": "raise-transient", "at": [1]}],
+        # hit 0 = the first kernel dispatch of the run
+        "kernel/dispatch": [{"kind": "budget-overflow", "at": [0]}]})
+    run_cli([*SWEEP, "--fault-plan", plan1, "--trace", j("t1"),
+             "--report", j("r1.json")], log=j("phase1.log"))
+    check_trace_cli(j("t1"), j("r1.json"))
+    check_parity(j("r1.json"), baseline, "phase 1")
+    ev1 = events(j("t1"))
+    injected = instants(ev1, "fault/inject")
+    unit_faults = [e for e in injected if e.get("seam") == "sched/unit"]
+    check(len(unit_faults) == 1,
+          f"expected exactly 1 injected unit fault, got {injected}")
+    faulted_uid = unit_faults[0].get("uid")
+    retried = {e.get("uid") for e in instants(ev1, "sched/retry")}
+    check(faulted_uid in retried,
+          f"no sched/retry recovery event for faulted unit "
+          f"{faulted_uid!r} (retried: {sorted(retried)})")
+    check(any(e.get("seam") == "kernel/dispatch" for e in injected),
+          "kernel/dispatch overflow fault never fired")
+    check(bool(instants(ev1, "kernel/fallback")),
+          "no kernel/fallback recovery event for the forced overflow")
+    with open(j("r1.json")) as f:
+        r1 = json.load(f)
+    by_uid = {u["uid"]: u for u in r1["units"]}
+    check(by_uid[faulted_uid]["attempts"] == 2
+          and by_uid[faulted_uid]["retries"] == 1,
+          f"faulted unit should record attempts=2/retries=1, got "
+          f"{by_uid[faulted_uid]}")
+    check(all(u["attempts"] == 1 for uid, u in by_uid.items()
+              if uid != faulted_uid),
+          f"un-faulted units must record attempts=1: {r1['units']}")
+
+    # -- phase 2: torn checkpoint write, then a self-healing resume --------
+    print("[chaos-drill] phase 2: torn checkpoint + self-healing resume")
+    plan2 = write_plan(j("plan2.json"), {
+        # hit 0 = the first (and only, --stop-after-units 1) unit save
+        "ckpt/write": [{"kind": "truncate-file", "at": [0],
+                        "fraction": 0.5}]})
+    proc = run_cli([*SWEEP, "--fault-plan", plan2, "--ckpt-dir", j("ck"),
+                    "--stop-after-units", "1", "--trace", j("t2a")],
+                   log=j("phase2a.log"))
+    check("interrupted after 1 computed units" in proc.stdout,
+          "the killed run did not stop after 1 unit")
+    torn = [e for e in instants(events(j("t2a")), "fault/inject")
+            if e.get("seam") == "ckpt/write"]
+    check(len(torn) == 1 and torn[0].get("kind") == "truncate-file",
+          f"expected one truncate-file injection, got {torn}")
+    run_cli([*SWEEP, "--ckpt-dir", j("ck"), "--trace", j("t2b"),
+             "--report", j("r2.json")], log=j("phase2b.log"))
+    check_trace_cli(j("t2b"), j("r2.json"))
+    check_parity(j("r2.json"), baseline, "phase 2")
+    quarantined = instants(events(j("t2b")), "ckpt/quarantine")
+    check(bool(quarantined),
+          "resume never quarantined the torn checkpoint step")
+    with open(j("r2.json")) as f:
+        r2 = json.load(f)
+    check(r2["n_reused"] == 0,
+          f"the torn checkpoint must not be reused (n_reused="
+          f"{r2['n_reused']})")
+
+    # -- phase 3: deterministic fault fails fast ---------------------------
+    print("[chaos-drill] phase 3: deterministic fault fails fast")
+    plan3 = write_plan(j("plan3.json"), {
+        "sched/unit": [{"kind": "raise-deterministic", "at": [0],
+                        "message": "chaos drill"}]})
+    proc = run_cli([*SWEEP, "--fault-plan", plan3, "--trace", j("t3")],
+                   log=j("phase3.log"), expect_fail=True)
+    check("DeterministicFault" in proc.stderr,
+          f"expected DeterministicFault to surface, stderr:\n"
+          f"{proc.stderr[-800:]}")
+    check("selected k_opt" not in proc.stdout,
+          "a deterministically-failing sweep still selected a k")
+    ev3 = events(j("t3"))
+    attempts = [e for e in instants(ev3, "fault/inject")
+                if e.get("seam") == "sched/unit"]
+    check(len(attempts) == 1,
+          f"deterministic fault must see exactly 1 attempt, got "
+          f"{len(attempts)}")
+    check(not instants(ev3, "sched/retry"),
+          "a deterministic error burned retry budget (sched/retry seen)")
+    check(bool(instants(ev3, "sched/fail_fast")),
+          "no sched/fail_fast event for the deterministic error")
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

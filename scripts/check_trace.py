@@ -9,7 +9,9 @@ Structural checks on the trace contract (README "Observability"):
                      ``traceEvents`` list
   --report R.json    every executed unit in the SelectionReport has a
                      ``sched/execute`` span; every checkpoint-reused unit
-                     has a ``sched/restore`` span
+                     has a ``sched/restore`` span; units reporting
+                     ``attempts`` match the ``sched/retry`` instants
+                     (attempts - 1 retries, summed backoff agrees)
   --expect-metrics   metrics.npz holds at least one non-empty
                      ``*.rel_error`` trajectory (a traced program's
                      per-iteration convergence actually reached the host)
@@ -131,6 +133,60 @@ def check_report_coverage(events: list[dict], report_path: str) -> list[str]:
         want = "sched/restore" if u.get("reused") else "sched/execute"
         if (want, uid) not in spanned:
             problems.append(f"unit {uid!r} has no {want!r} span")
+    return problems
+
+
+def check_retry_accounting(events: list[dict],
+                           report_path: str) -> list[str]:
+    """UnitRecord retry fields must agree with the ``sched/retry``
+    instants (ISSUE 10): a unit reporting ``attempts`` ran exactly
+    ``attempts - 1`` retries, a checkpoint-reused unit ran zero attempts,
+    and the summed per-retry backoff matches ``backoff_seconds``."""
+    try:
+        with open(report_path) as f:
+            report = json.load(f)
+    except OSError as ex:
+        raise TraceError(f"cannot read {report_path}: {ex.strerror or ex}")
+    except json.JSONDecodeError as ex:
+        raise TraceError(f"{report_path} is not valid JSON: {ex}")
+    retries: dict[str | None, list[float]] = {}
+    for ev in events:
+        if ev["ph"] == "i" and ev["name"] == "sched/retry":
+            args = ev.get("args") or {}
+            retries.setdefault(args.get("uid"), []).append(
+                float(args.get("backoff", 0.0)))
+    problems = []
+    units = report.get("units", [])
+    for u in units:
+        attempts = u.get("attempts")
+        if attempts is None:       # pre-resilience report: nothing to check
+            continue
+        uid = u.get("uid")
+        pauses = retries.get(uid, [])
+        if u.get("reused"):
+            if attempts != 0:
+                problems.append(f"unit {uid!r} is checkpoint-reused but "
+                                f"reports attempts={attempts} (want 0)")
+            if pauses:
+                problems.append(f"unit {uid!r} is checkpoint-reused but "
+                                f"the trace holds {len(pauses)} "
+                                f"sched/retry event(s)")
+            continue
+        if attempts - 1 != len(pauses):
+            problems.append(f"unit {uid!r}: attempts={attempts} implies "
+                            f"{attempts - 1} sched/retry event(s), trace "
+                            f"holds {len(pauses)}")
+            continue
+        reported = u.get("backoff_seconds", 0.0)
+        if abs(sum(pauses) - reported) > 1e-4 * max(1, len(pauses)):
+            problems.append(f"unit {uid!r}: backoff_seconds={reported} "
+                            f"but the sched/retry events sum to "
+                            f"{sum(pauses):.6f}")
+    known = {u.get("uid") for u in units}
+    for uid in retries:
+        if uid not in known:
+            problems.append(f"sched/retry event(s) for unknown unit "
+                            f"{uid!r} (not in {report_path})")
     return problems
 
 
@@ -323,6 +379,7 @@ def main(argv: list[str]) -> int:
         problems += check_chrome(args.trace_dir)
         if args.report:
             problems += check_report_coverage(events, args.report)
+            problems += check_retry_accounting(events, args.report)
             problems += check_bundle(args.report)
         if args.expect_metrics:
             problems += check_metrics(args.trace_dir)

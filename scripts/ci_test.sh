@@ -224,6 +224,16 @@ else test $? -eq 2; fi
 grep -q "\[trace-check\] ERROR:" "$SMOKE_DIR/mem_neg.log"
 echo "== memory ledger smoke OK =="
 
+echo "== chaos drill: faulted sweeps must match the fault-free twin =="
+# The resilience contract end to end (ISSUE 10): deterministic fault
+# injection through the seam registry — a transient unit failure, a torn
+# checkpoint write, and a forced kernel-budget overflow must each recover
+# (sched/retry, ckpt/quarantine, kernel/fallback) and produce a report
+# member-for-member identical to the fault-free baseline; a deterministic
+# fault must fail fast after exactly one attempt.
+python scripts/chaos_drill.py
+echo "== chaos drill OK =="
+
 echo "== perf gate: ensemble, grid, fused-kernel and serve speedups =="
 # Soft regression gate on the recorded trajectories (refreshed by
 # `python -m benchmarks.run --only model_selection|kernels|serve`):

@@ -6,5 +6,6 @@ from . import (  # noqa: F401
     obs_coverage,
     pallas_kernel,
     recompile_hazard,
+    resilience_seams,
     sanitizer_coverage,
 )

@@ -1,0 +1,115 @@
+"""resilience-seam-coverage: the fault-seam registry matches reality.
+
+The fault-injection contract (repro.resilience.faults) is only worth
+anything if the registry and the code agree: a seam listed in ``SEAMS``
+with no ``faults.fire("<seam>")`` call site is a *dead seam* (a chaos
+plan targeting it silently never fires), and a ``fire()`` call with a
+seam the registry doesn't know is an *unregistered injection point*
+(FaultPlan.add would reject it, so no plan can ever reach it — and the
+seam table in the README stops being exhaustive).  This rule enforces
+both directions, plus the stronger invariant the drill relies on: every
+registered seam appears at EXACTLY one call site, so a plan's per-seam
+hit counters have a single, predictable meaning.
+
+Call sites are recognized through the import-alias map (``faults.fire``,
+``_faults.fire``, ...); the first argument must be a string literal —
+a computed seam name defeats static registry checking and is itself an
+error.  ``resilience/faults.py`` is exempt (it contains the registry and
+the forwarding ``fire`` implementation, not probe sites).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import (ERROR, Finding, Rule, dotted, import_aliases,
+                         register, resolve_alias)
+
+REGISTRY_PATH = "resilience/faults.py"
+
+
+@register
+class ResilienceSeamCoverage(Rule):
+    name = "resilience-seam-coverage"
+    description = ("every registered fault seam fires at exactly one "
+                   "call site; unregistered or computed fire() targets "
+                   "are errors")
+
+    def check_project(self, ctx):
+        regs = [f for f in ctx.files if f.rel.endswith(REGISTRY_PATH)]
+        if not regs:
+            # Self-contained mode (fixtures): a linted file that defines
+            # its own literal SEAMS tuple acts as the registry, and its
+            # own fire() calls count as sites (the path-based exemption
+            # below doesn't match it).
+            regs = [f for f in ctx.files
+                    if self._parse_seams(f.tree)[0] is not None]
+        if not regs:
+            return      # linting a subtree without the registry
+        reg = regs[0]
+        seams, seams_line = self._parse_seams(reg.tree)
+        if seams is None:
+            yield Finding(self.name, reg.rel, 1, 0,
+                          "no literal SEAMS tuple found — the seam "
+                          "registry must be statically parseable", ERROR)
+            return
+        sites: dict[str, list[tuple[str, int, int]]] = {}
+        for src in ctx.files:
+            if src.rel.endswith(REGISTRY_PATH):
+                continue
+            aliases = import_aliases(src.tree)
+            for node in ast.walk(src.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                full = resolve_alias(dotted(node.func), aliases)
+                if not full.endswith("faults.fire"):
+                    continue
+                arg = node.args[0] if node.args else None
+                if not (isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)):
+                    yield Finding(
+                        self.name, src.rel, node.lineno, node.col_offset,
+                        "faults.fire() seam must be a string literal so "
+                        "the seam registry stays statically checkable",
+                        ERROR)
+                    continue
+                if arg.value not in seams:
+                    yield Finding(
+                        self.name, src.rel, node.lineno, node.col_offset,
+                        f"unregistered injection point {arg.value!r} — "
+                        f"add it to resilience.faults.SEAMS (registered: "
+                        f"{sorted(seams)})", ERROR)
+                    continue
+                sites.setdefault(arg.value, []).append(
+                    (src.rel, node.lineno, node.col_offset))
+        for seam in sorted(seams):
+            locs = sites.get(seam, [])
+            if not locs:
+                yield Finding(
+                    self.name, reg.rel, seams_line, 0,
+                    f"dead seam {seam!r}: registered in SEAMS but fired "
+                    f"at no call site — a FaultPlan targeting it can "
+                    f"never fire", ERROR)
+            elif len(locs) > 1:
+                where = ", ".join(f"{r}:{ln}" for r, ln, _ in locs)
+                for rel, line, col in locs:
+                    yield Finding(
+                        self.name, rel, line, col,
+                        f"seam {seam!r} fires at {len(locs)} call sites "
+                        f"({where}) — exactly one is allowed so the "
+                        f"plan's hit counter has a single meaning", ERROR)
+
+    @staticmethod
+    def _parse_seams(tree: ast.AST):
+        """The literal SEAMS tuple and its line, or (None, 0)."""
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not any(isinstance(t, ast.Name) and t.id == "SEAMS"
+                       for t in node.targets):
+                continue
+            if isinstance(node.value, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)
+                    for e in node.value.elts):
+                return ({e.value for e in node.value.elts}, node.lineno)
+        return None, 0

@@ -1,6 +1,7 @@
-"""Atomic, grid-agnostic checkpointing (elastic restore)."""
-from .checkpoint import (atomic_json_dump, latest_step, restore,
-                         save, save_async)
+"""Atomic, digest-verified, self-healing checkpointing (elastic restore)."""
+from .checkpoint import (AsyncSave, CheckpointError, atomic_json_dump,
+                         latest_step, restore, save, save_async,
+                         verify_step)
 
-__all__ = ["atomic_json_dump", "latest_step", "restore", "save",
-           "save_async"]
+__all__ = ["AsyncSave", "CheckpointError", "atomic_json_dump",
+           "latest_step", "restore", "save", "save_async", "verify_step"]

@@ -1,4 +1,4 @@
-"""Grid-agnostic checkpointing with atomic writes and elastic restore.
+"""Grid-agnostic checkpointing with atomic writes, digests, and self-healing.
 
 Checkpoints store every leaf in *global* layout (device_get assembles the
 global array regardless of the mesh it lived on), keyed by its tree path.
@@ -9,23 +9,46 @@ relies on for fault tolerance.
 
 Layout on disk:
     <dir>/step_<n>.npz        one array per flattened tree path
-    <dir>/step_<n>.json       manifest: step, paths, shapes, dtypes
+    <dir>/step_<n>.json       manifest: step, paths, shapes, dtypes,
+                              per-leaf sha256 digests
     <dir>/LATEST              text file with the newest step number
 
 Writes are atomic (tmp file + os.replace) so a crash mid-save never
-corrupts the restore point.  `save_async` moves serialization off the
-training thread (device_get happens synchronously to snapshot the values,
-the file write happens in the background).
+corrupts the restore point; digests make the weaker failures — torn
+multi-file writes (npz replaced, manifest not), bit rot, truncation —
+*detectable*, and `restore` makes them *survivable*: a step that fails
+verification is quarantined (renamed `step_<n>.corrupt.*`, with a
+`ckpt/quarantine` trace event) and restore falls back through older
+steps to the newest verifiable one instead of crashing.
+
+`save_async` moves serialization off the training thread (device_get
+happens synchronously to snapshot the values, the file write happens in
+the background) and returns an :class:`AsyncSave` handle whose
+``join()``/``result()`` re-raise any background-write failure — a failed
+save can no longer silently age the restore point.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import threading
+import warnings
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.obs import trace as obs
+from repro.resilience import faults
+
+_STEP_MANIFEST = re.compile(r"^step_(\d+)\.json$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed to load or verify.  Unlike the bare asserts it
+    replaces, this survives `python -O` and carries the reason."""
 
 
 def atomic_json_dump(path: str, obj, **json_kwargs) -> str:
@@ -52,81 +75,240 @@ def _flatten(tree) -> dict[str, np.ndarray]:
     return out
 
 
-def save(ckpt_dir: str, step: int, tree) -> str:
+def _leaf_digest(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def _manifest(step: int, arrays: dict[str, np.ndarray]) -> dict:
+    return {"step": step,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                           "sha256": _leaf_digest(v)}
+                       for k, v in arrays.items()}}
+
+
+def _write_step(ckpt_dir: str, step: int,
+                arrays: dict[str, np.ndarray]) -> str:
+    """The ONE step writer behind save/save_async: npz then manifest then
+    LATEST, each via tmp + os.replace so every prefix of a crash leaves a
+    coherent (verifiable or absent) step behind."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    arrays = _flatten(tree)
-    manifest = {"step": step,
-                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
-                           for k, v in arrays.items()}}
     base = os.path.join(ckpt_dir, f"step_{step}")
-    tmp_npz, tmp_json = base + ".npz.tmp", base + ".json.tmp"
-    with open(tmp_npz, "wb") as f:
+    with open(base + ".npz.tmp", "wb") as f:
         np.savez(f, **arrays)
-    with open(tmp_json, "w") as f:
-        json.dump(manifest, f)
-    os.replace(tmp_npz, base + ".npz")
-    os.replace(tmp_json, base + ".json")
+    with open(base + ".json.tmp", "w") as f:
+        json.dump(_manifest(step, arrays), f)
+    os.replace(base + ".npz.tmp", base + ".npz")
+    os.replace(base + ".json.tmp", base + ".json")
     tmp_latest = os.path.join(ckpt_dir, "LATEST.tmp")
     with open(tmp_latest, "w") as f:
         f.write(str(step))
     os.replace(tmp_latest, os.path.join(ckpt_dir, "LATEST"))
+    faults.fire("ckpt/write", path=base + ".npz", step=step)
     return base + ".npz"
 
 
-def save_async(ckpt_dir: str, step: int, tree) -> threading.Thread:
-    """Snapshot now (device_get), write in the background."""
-    arrays = _flatten(tree)   # synchronous snapshot
+def save(ckpt_dir: str, step: int, tree) -> str:
+    return _write_step(ckpt_dir, step, _flatten(tree))
 
-    def _write():
-        os.makedirs(ckpt_dir, exist_ok=True)
-        manifest = {"step": step,
-                    "leaves": {k: {"shape": list(v.shape),
-                                   "dtype": str(v.dtype)}
-                               for k, v in arrays.items()}}
-        base = os.path.join(ckpt_dir, f"step_{step}")
-        with open(base + ".npz.tmp", "wb") as f:
-            np.savez(f, **arrays)
-        with open(base + ".json.tmp", "w") as f:
-            json.dump(manifest, f)
-        os.replace(base + ".npz.tmp", base + ".npz")
-        os.replace(base + ".json.tmp", base + ".json")
-        with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
-            f.write(str(step))
-        os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
-                   os.path.join(ckpt_dir, "LATEST"))
 
-    t = threading.Thread(target=_write, daemon=True)
-    t.start()
-    return t
+class AsyncSave:
+    """Handle for a background checkpoint write.  The write thread parks
+    its exception here; ``join()``/``result()`` re-raise it so callers
+    surface failed saves at the next checkpoint boundary instead of
+    silently aging their restore point."""
+
+    def __init__(self, ckpt_dir: str, step: int,
+                 arrays: dict[str, np.ndarray]):
+        self.step = step
+        self._path: str | None = None
+        self._error: BaseException | None = None
+
+        def _write():
+            try:
+                self._path = _write_step(ckpt_dir, step, arrays)
+            except BaseException as err:    # noqa: BLE001 — re-raised in join
+                self._error = err
+
+        self._thread = threading.Thread(target=_write, daemon=True,
+                                        name=f"ckpt-save-{step}")
+        self._thread.start()
+
+    def done(self) -> bool:
+        return not self._thread.is_alive()
+
+    def join(self, timeout: float | None = None) -> None:
+        """Wait for the write; re-raise any background failure."""
+        self._thread.join(timeout)
+        if self._error is not None:
+            raise CheckpointError(
+                f"async save of step {self.step} failed: "
+                f"{self._error}") from self._error
+
+    def result(self, timeout: float | None = None) -> str:
+        """join() and return the written npz path."""
+        self.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(f"async save of step {self.step} still "
+                               f"running after {timeout}s")
+        assert self._path is not None
+        return self._path
+
+
+def save_async(ckpt_dir: str, step: int, tree) -> AsyncSave:
+    """Snapshot now (device_get), write in the background.  The returned
+    handle's join()/result() re-raise background-write failures."""
+    return AsyncSave(ckpt_dir, step, _flatten(tree))
+
+
+def _scan_steps(ckpt_dir: str) -> list[int]:
+    """Newest-first step numbers with a manifest on disk (quarantined
+    `step_*.corrupt.json` files do not match)."""
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    steps = [int(m.group(1)) for name in names
+             if (m := _STEP_MANIFEST.match(name))]
+    return sorted(steps, reverse=True)
 
 
 def latest_step(ckpt_dir: str) -> int | None:
     path = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(path):
-        return None
-    with open(path) as f:
-        return int(f.read().strip())
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                text = f.read().strip()
+            if text:
+                return int(text)
+            raise ValueError("empty LATEST")
+        except (OSError, ValueError) as err:
+            warnings.warn(f"unreadable LATEST in {ckpt_dir} ({err}); "
+                          f"scanning step manifests instead",
+                          stacklevel=2)
+    steps = _scan_steps(ckpt_dir)
+    return steps[0] if steps else None
+
+
+def verify_step(ckpt_dir: str, step: int) -> bool:
+    """True iff step `step` loads and every leaf matches its manifest
+    entry (shape, dtype, sha256)."""
+    try:
+        _load_step(ckpt_dir, step)
+        return True
+    except CheckpointError:
+        return False
+
+
+def _load_step(ckpt_dir: str, step: int) -> dict[str, np.ndarray]:
+    """Load + verify one step against its manifest.  Raises
+    CheckpointError on any inconsistency: missing/torn files, leaf-set
+    mismatch (the kill-between-replace signature), shape/dtype drift,
+    digest mismatch.  Pre-digest manifests verify shape/dtype only."""
+    base = os.path.join(ckpt_dir, f"step_{step}")
+    try:
+        with open(base + ".json") as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as err:
+        raise CheckpointError(f"step {step}: bad manifest: {err}") from err
+    try:
+        with np.load(base + ".npz", allow_pickle=False) as data:
+            arrays = {k: data[k] for k in data.files}
+    except Exception as err:
+        raise CheckpointError(f"step {step}: bad npz: {err}") from err
+    leaves = manifest.get("leaves", {})
+    if set(arrays) != set(leaves):
+        raise CheckpointError(
+            f"step {step}: npz/manifest leaf sets differ "
+            f"(npz-only={sorted(set(arrays) - set(leaves))}, "
+            f"manifest-only={sorted(set(leaves) - set(arrays))})")
+    for key, meta in leaves.items():
+        arr = arrays[key]
+        if list(arr.shape) != list(meta["shape"]):
+            raise CheckpointError(f"step {step}: leaf {key!r} shape "
+                                  f"{list(arr.shape)} != manifest "
+                                  f"{meta['shape']}")
+        want = meta.get("sha256")
+        if want is not None and _leaf_digest(arr) != want:
+            raise CheckpointError(f"step {step}: leaf {key!r} sha256 "
+                                  f"mismatch (corrupt bytes?)")
+    return arrays
+
+
+def _quarantine(ckpt_dir: str, step: int, reason: str) -> None:
+    """Rename a bad step out of the restore path and record it."""
+    base = os.path.join(ckpt_dir, f"step_{step}")
+    moved = []
+    for ext in (".npz", ".json"):
+        src = base + ext
+        if os.path.exists(src):
+            os.replace(src, f"{base}.corrupt{ext}")
+            moved.append(ext)
+    warnings.warn(f"quarantined checkpoint step {step} in {ckpt_dir}: "
+                  f"{reason}", stacklevel=3)
+    obs.event("ckpt/quarantine", step=step, reason=reason,
+              files=len(moved))
 
 
 def restore(ckpt_dir: str, like, step: int | None = None,
             shardings=None) -> tuple[Any, int]:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  `shardings`, if given, is a matching pytree of
-    NamedSharding — this is the elastic-reshard path."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+    NamedSharding — this is the elastic-reshard path.
 
+    Self-healing: a step that fails verification is quarantined
+    (`step_<n>.corrupt.*` + `ckpt/quarantine` event) and restore falls
+    back through older steps to the newest verifiable one; only when no
+    step survives does it raise.  A structure mismatch against `like`
+    is a caller error, not corruption — it raises without quarantine.
+    """
+    newest = latest_step(ckpt_dir)
+    if newest is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    candidates = sorted({newest, *_scan_steps(ckpt_dir)}, reverse=True)
+    if step is not None:
+        candidates = [s for s in candidates if s <= step]
+        if not candidates:
+            raise CheckpointError(f"no checkpoint step <= {step} "
+                                  f"in {ckpt_dir}")
+    healed = False
+    for s in candidates:
+        faults.fire("ckpt/read", path=os.path.join(ckpt_dir,
+                                                   f"step_{s}.npz"),
+                    step=s)
+        try:
+            arrays = _load_step(ckpt_dir, s)
+        except CheckpointError as err:
+            _quarantine(ckpt_dir, s, str(err))
+            healed = True
+            continue
+        tree = _assemble(arrays, like, s)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        if healed:      # LATEST pointed at a quarantined step — repoint it
+            tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+            with open(tmp, "w") as f:
+                f.write(str(s))
+            os.replace(tmp, os.path.join(ckpt_dir, "LATEST"))
+        return tree, s
+    raise CheckpointError(f"no verifiable checkpoint step in {ckpt_dir} "
+                          f"({len(candidates)} candidate(s) quarantined)")
+
+
+def _assemble(arrays: dict[str, np.ndarray], like, step: int):
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path)
-        arr = data[key]
-        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape,
-                                                       leaf.shape)
+        if key not in arrays:
+            raise CheckpointError(f"step {step}: leaf {key!r} missing "
+                                  f"from checkpoint (have "
+                                  f"{sorted(arrays)})")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise CheckpointError(f"step {step}: leaf {key!r} shape "
+                                  f"{tuple(arr.shape)} != restore target "
+                                  f"{tuple(leaf.shape)}")
         want = np.dtype(leaf.dtype)
         if arr.dtype != want:
             if arr.dtype.kind == "V" and arr.dtype.itemsize == want.itemsize:
@@ -135,7 +317,4 @@ def restore(ckpt_dir: str, like, step: int | None = None,
             else:
                 arr = arr.astype(want)
         leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
-    if shardings is not None:
-        tree = jax.device_put(tree, shardings)
-    return tree, step
+    return jax.tree_util.tree_unflatten(treedef, leaves)

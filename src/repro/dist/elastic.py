@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 import statistics
+import warnings
 from typing import Callable, Iterable, Sequence
 
 
@@ -84,13 +85,21 @@ def ensemble_plan(r: int, n_pods: int, spares_per_pod: int = 0
 
 def retry_loop(run: Callable[[int], None], steps: Iterable[int], *,
                restore: Callable[[], int], max_restarts: int = 3) -> None:
-    """Drive ``run(step)`` over `steps`, replaying from ``restore()`` on
-    failure.
+    """Deprecated: use ``repro.resilience.RetryPolicy`` (classified
+    transient-vs-deterministic errors, deterministic seeded backoff,
+    per-attempt deadlines) — this alias retries ANY exception immediately
+    and is kept for one release, mirroring the KernelPolicy migration.
 
-    `restore()` returns the step to resume from (typically the last
-    checkpointed step); steps at or after it are re-executed — callers
-    must make ``run`` idempotent under replay (the loop.py contract).
+    Drive ``run(step)`` over `steps`, replaying from ``restore()`` on
+    failure.  `restore()` returns the step to resume from (typically the
+    last checkpointed step); steps at or after it are re-executed —
+    callers must make ``run`` idempotent under replay (the loop.py
+    contract).
     """
+    warnings.warn(
+        "dist.elastic.retry_loop is deprecated and will be removed next "
+        "release; use repro.resilience.RetryPolicy (classified retry "
+        "with deterministic backoff)", DeprecationWarning, stacklevel=2)
     items: Sequence[int] = list(steps)
     restarts = 0
     i = 0

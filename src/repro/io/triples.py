@@ -28,6 +28,8 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro.resilience import faults
+
 DEFAULT_CHUNK = 1 << 16
 
 
@@ -156,10 +158,15 @@ class COOBuilder:
 
     def add(self, rels: np.ndarray, rows: np.ndarray, cols: np.ndarray,
             vals: np.ndarray) -> "COOBuilder":
+        vals = np.asarray(vals, np.float32)
+        # the ONE ingest fault seam: a raise-* spec kills the chunk, a
+        # nan-poison spec corrupts its values in place (what the manifest
+        # digest / runtime sanitizer exist to catch downstream)
+        faults.fire("ingest/chunk", arrays=vals, chunk=len(self._rels))
         self._rels.append(np.asarray(rels, np.int64))
         self._rows.append(np.asarray(rows, np.int64))
         self._cols.append(np.asarray(cols, np.int64))
-        self._vals.append(np.asarray(vals, np.float32))
+        self._vals.append(vals)
         return self
 
     def finalize(self, *, n: int | None = None, m: int | None = None

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.sparse import BCSR
 from repro.obs import trace as _obs
+from repro.resilience import faults as _faults
 
 from . import ref as _ref
 from .bcsr_fused import bcsr_xa_xta as _bcsr_fused_pallas
@@ -67,9 +68,20 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(impl: str) -> str:
+def _dispatch(kernel: str, impl: str, *, cpu_impl: str = "ref") -> str:
+    """Resolve `impl` ("auto" -> pallas on TPU, `cpu_impl` elsewhere) and
+    probe the ONE kernel/dispatch fault seam.  A fired budget-overflow
+    spec forces the documented oracle fallback — `_note_fallback`
+    telemetry included — regardless of the real window arithmetic; the
+    chaos drill uses this to exercise the fallback path end to end.
+    Dispatch runs at Python trace time, so probes are per-compile and the
+    no-plan path stays out of every compiled program."""
     if impl == "auto":
-        return "pallas" if _on_tpu() else "ref"
+        impl = "pallas" if _on_tpu() else cpu_impl
+    fired = _faults.fire("kernel/dispatch", kernel=kernel, impl=impl)
+    if fired == "budget-overflow":
+        _note_fallback(kernel, VMEM_PANEL_BYTES + 1, chosen=cpu_impl)
+        impl = cpu_impl
     return impl
 
 
@@ -85,7 +97,7 @@ def _largest_tile(n: int, cap: int) -> int:
 def fused_xa_xtb(X, B1, B2, *, impl: str = "auto", bm: int = 256,
                  bn: int = 256):
     """One-pass (X_t @ B1, X_t^T @ B2_t).  X: (m, n1, n2)."""
-    impl = _resolve(impl)
+    impl = _dispatch("fused_xa_xtb", impl)
     if impl == "ref":
         return _ref.ref_fused_xa_xtb(X, B1, B2)
     interpret = impl == "interpret"
@@ -117,7 +129,7 @@ def fused_xa_xtb(X, B1, B2, *, impl: str = "auto", bm: int = 256,
 
 def mu_update_a(A, Num, S, eps: float = 1e-16, *, impl: str = "auto",
                 bm: int = 512):
-    impl = _resolve(impl)
+    impl = _dispatch("mu_update_a", impl)
     if impl == "ref":
         return _ref.ref_mu_update_a(A, Num, S, eps)
     return _mu_pallas(A, Num, S, eps, bm=bm, interpret=impl == "interpret")
@@ -137,7 +149,7 @@ def _panel_overflow(sp: BCSR, k: int, dtype, n_panels: int) -> bool:
 
 
 def bcsr_spmm(sp: BCSR, B, *, impl: str = "auto"):
-    impl = _resolve(impl)
+    impl = _dispatch("bcsr_spmm", impl)
     if impl == "pallas" and _panel_overflow(sp, B.shape[1], B.dtype, 1):
         _note_fallback("bcsr_spmm", _panel_bytes(sp, B.shape[1], B.dtype, 1))
         impl = "ref"
@@ -149,7 +161,7 @@ def bcsr_spmm(sp: BCSR, B, *, impl: str = "auto"):
 def bcsr_xa_xta(sp: BCSR, B1, B2, *, impl: str = "auto"):
     """One-pass (X @ B1, X^T @ B2) on a BCSR tensor, B1/B2 shared (n, k)
     — the sparse twin of `fused_xa_xtb` (kernels/bcsr_fused.py)."""
-    impl = _resolve(impl)
+    impl = _dispatch("bcsr_xa_xta", impl)
     if impl == "pallas" and _panel_overflow(sp, B1.shape[1], B1.dtype, 2):
         _note_fallback("bcsr_xa_xta",
                        _panel_bytes(sp, B1.shape[1], B1.dtype, 2))
@@ -178,8 +190,7 @@ def score_topk(V, A, *, topk: int, impl: str = "auto",
     """
     from .score_topk import DEFAULT_PN
     pn = DEFAULT_PN if pn is None else pn
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "stream"
+    impl = _dispatch("score_topk", impl, cpu_impl="stream")
     if impl == "ref":
         return _ref.ref_score_topk(V, A, topk)
     if impl == "stream":
@@ -197,7 +208,7 @@ def score_topk(V, A, *, topk: int, impl: str = "auto",
 def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
                     sm_scale: float | None = None, impl: str = "auto",
                     bq: int = 256, bk: int = 256):
-    impl = _resolve(impl)
+    impl = _dispatch("flash_attention", impl)
     # VMEM-resident window per q-tile: the (bq, d) accumulator plus the
     # streamed (bk, d) k/v tiles — gate against the shared panel budget
     # like the BCSR dispatchers (oversized heads fall back to the oracle)

@@ -90,7 +90,28 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--stop-after-units", type=int, default=None,
                     help="compute at most this many units, then exit "
                          "(deterministic kill for resume drills)")
-    ap.add_argument("--max-retries", type=int, default=1)
+    ap.add_argument("--max-retries", type=int, default=1,
+                    help="per-unit transient-retry budget "
+                         "(resilience.RetryPolicy max_attempts - 1; "
+                         "deterministic errors always fail fast)")
+    ap.add_argument("--retry-base-delay", type=float, default=0.05,
+                    metavar="SEC",
+                    help="first-retry backoff; doubles per attempt with "
+                         "deterministic seeded jitter")
+    ap.add_argument("--unit-deadline", type=float, default=None,
+                    metavar="SEC",
+                    help="per-attempt wall-clock budget for one unit; "
+                         "overruns raise DeadlineExceeded (transient) and "
+                         "retried attempts shrink to the straggler "
+                         "baseline")
+    ap.add_argument("--fault-plan", default=None, metavar="FILE",
+                    help="JSON FaultPlan (resilience.faults) installed "
+                         "for the run — the chaos-drill hook; every "
+                         "firing emits a fault/inject trace event")
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="write unit checkpoints on a background thread "
+                         "(failures surface at the next checkpoint "
+                         "boundary)")
     ap.add_argument("--use-fused-kernel", action="store_true",
                     help="route the sparse MU sweep through the fused "
                          "single-X-pass BCSR kernel (kernels/ops.py "
@@ -179,10 +200,14 @@ def _run(args):
                         trace_metrics=bool(args.trace))
     if args.grid_chunk is not None and args.mode != "grid":
         raise SystemExit("--grid-chunk requires --mode grid")
+    from repro.resilience import RetryPolicy
+    retry = RetryPolicy(max_attempts=args.max_retries + 1,
+                        base_delay=args.retry_base_delay,
+                        deadline=args.unit_deadline)
     sched = SweepScheduler(cfg, mode=args.mode, ckpt_dir=args.ckpt_dir,
                            criterion=args.criterion,
                            grid_chunk=args.grid_chunk,
-                           max_retries=args.max_retries,
+                           retry=retry, async_ckpt=args.async_ckpt,
                            stop_after_units=args.stop_after_units,
                            report_path=args.report, verbose=True)
     try:
@@ -312,6 +337,13 @@ def _write_trace_artifacts(trace_dir, tracer, buf, report, operand, args):
 
 def main():
     args = build_parser().parse_args()
+    if args.fault_plan is not None:
+        # installed before the tracer so every fault/inject instant of
+        # the run lands in the trace; process-wide, like the tracer
+        from repro.resilience import faults
+        plan = faults.FaultPlan.load(args.fault_plan)
+        faults.install(plan)
+        print(f"[faults] {args.fault_plan}: {plan.summary()}")
     if args.trace is None:
         _run(args)
         return

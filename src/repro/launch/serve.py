@@ -57,6 +57,12 @@ def build_parser() -> argparse.ArgumentParser:
                          "Pallas on TPU, panel stream elsewhere)")
     ap.add_argument("--cache", type=int, default=4096,
                     help="hot-head LRU entries (0 disables)")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="per-request wall-clock budget; chunks past it "
+                         "are shed with the (-inf, -1) sentinel")
+    ap.add_argument("--admit", type=int, default=None, metavar="N",
+                    help="max uncached keys scored per request; the rest "
+                         "are shed (bounded admission)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--show", type=int, default=3,
                     help="print the top-k for this many queries")
@@ -91,7 +97,8 @@ def _run(args):
           f"k={bundle.k}" + (f" (k_opt={src})" if src is not None else ""))
     engine = ServeEngine(bundle, ServeConfig(
         topk=args.topk, batch=args.batch, cache_entries=args.cache,
-        kernel=KernelPolicy(impl=args.impl)))
+        kernel=KernelPolicy(impl=args.impl),
+        deadline=args.deadline, admit=args.admit))
 
     queries = load_queries(args, bundle)
     n_req = max(1, min(args.requests, len(queries)))
@@ -121,7 +128,8 @@ def _run(args):
           f"p99 {np.percentile(lat, 99) * 1e3:.2f} ms, "
           f"{len(queries) / t_all:.0f} q/s")
     print(f"[serve] cache: {st['hits']} hits / {st['misses']} misses "
-          f"({st['evictions']} evicted), {st['batches']} device batches")
+          f"({st['evictions']} evicted), {st['batches']} device batches"
+          + (f", {st['sheds']} shed" if st["sheds"] else ""))
     return results
 
 

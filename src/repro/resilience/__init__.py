@@ -1,0 +1,22 @@
+"""repro.resilience — deterministic fault injection + classified retry.
+
+Two halves, one discipline:
+
+- :mod:`repro.resilience.faults` — the seeded fault-injection registry.
+  A :class:`FaultPlan` maps the registered seams to fault specs;
+  ``faults.fire(seam)`` call sites probe it.  Uninstalled = a single
+  module-level None check (zero-cost-off, like ``obs.trace``).
+- :mod:`repro.resilience.policy` — ONE :class:`RetryPolicy` (bounded
+  attempts, exponential backoff with deterministic seeded jitter,
+  per-attempt deadlines, transient-vs-deterministic error classifier)
+  shared by the scheduler, the train loop, and anything else that used
+  to hand-roll an attempt loop.
+"""
+from .faults import (SEAMS, DeterministicFault, FaultPlan, FaultSpec,
+                     TransientError)
+from .policy import DeadlineExceeded, RetryPolicy, RetryStats
+
+__all__ = [
+    "SEAMS", "DeterministicFault", "DeadlineExceeded", "FaultPlan",
+    "FaultSpec", "RetryPolicy", "RetryStats", "TransientError",
+]

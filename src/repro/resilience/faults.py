@@ -1,0 +1,275 @@
+"""Deterministic, seeded fault injection — the seam registry of `repro.resilience`.
+
+A :class:`FaultPlan` maps named *seams* (fixed code points listed in
+:data:`SEAMS`) to :class:`FaultSpec` entries.  Each seam call site probes the
+plan with :func:`fire`; the plan counts probes per seam ("hits") and a spec
+fires on exactly the hit indices it names (``at``) or on every hit
+(``always``) — so a plan replays bit-identically run after run, which is what
+lets the chaos drill assert report parity between a faulted and a fault-free
+sweep.  Byte-level randomness (corrupt offsets, NaN positions) comes from
+``random.Random(spec.seed)``, never from global state.
+
+Fault kinds:
+
+    raise-transient      raise :class:`TransientError` (retryable — the
+                         RetryPolicy classifier backs off and replays)
+    raise-deterministic  raise :class:`DeterministicFault` (NOT retryable —
+                         the policy fails fast with the original traceback)
+    truncate-file        truncate ``path`` to ``fraction`` of its bytes
+                         (torn-write / partial-flush simulation)
+    corrupt-bytes        XOR ``nbytes`` seeded positions of ``path``
+                         (bit-rot simulation; digests must catch it)
+    nan-poison           overwrite seeded entries of the passed float
+                         array(s) with NaN (the corruption the runtime
+                         sanitizer exists to catch)
+    delay                ``time.sleep(seconds)`` (straggler simulation)
+    budget-overflow      no side effect; the kernel dispatcher interprets a
+                         fired probe as a forced VMEM-budget overflow and
+                         takes its documented oracle fallback path
+
+Install/uninstall mirrors ``obs.trace.install``: module-level
+:func:`install` / :func:`active`, and the hot path is a module-level
+``_PLAN is None`` check — with no plan installed :func:`fire` returns
+immediately, allocates nothing, and stages nothing anywhere near a jit
+trace (tests/test_resilience.py pins jaxpr identity).
+
+This module deliberately imports no jax/numpy (numpy lazily, only when a
+``nan-poison`` spec actually fires) so ``repro.io`` and ``repro.ckpt`` can
+depend on it for free; every firing emits a ``fault/inject`` instant
+through ``repro.obs.trace`` (itself jax-free) and is appended to
+``plan.fired`` for the drill's fault-vs-recovery matching.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import random
+import time
+from typing import Any, Iterator
+
+from repro.obs import trace as obs
+
+__all__ = [
+    "SEAMS", "KINDS", "DeterministicFault", "FaultPlan", "FaultSpec",
+    "TransientError", "active", "current", "fire", "install",
+]
+
+# The registered seams — every name here must appear at EXACTLY one call
+# site (analysis/rules/resilience_seams.py enforces both directions: a dead
+# seam and an unregistered injection point are both lint errors).
+SEAMS = (
+    "ckpt/read",        # ckpt.checkpoint.restore, before loading a step
+    "ckpt/write",       # ckpt.checkpoint._write_step, after the atomic writes
+    "ingest/chunk",     # io.triples.COOBuilder.add, once per ingest chunk
+    "kernel/dispatch",  # kernels.ops._dispatch, at impl resolution
+    "sched/unit",       # selection.scheduler, before each unit attempt
+    "serve/request",    # serve.engine.ServeEngine.query, at admission
+    "train/step",       # train.loop.train_loop, before each step
+)
+
+KINDS = ("raise-transient", "raise-deterministic", "truncate-file",
+         "corrupt-bytes", "nan-poison", "delay", "budget-overflow")
+
+
+class TransientError(RuntimeError):
+    """A retryable failure (lost rank, flaky I/O, preempted host).  The
+    RetryPolicy classifier treats subclasses as worth replaying; everything
+    else fails fast.  Raised by ``raise-transient`` specs and available for
+    runtime code to signal genuinely transient conditions."""
+
+
+class DeterministicFault(RuntimeError):
+    """An injected *non*-transient failure: replaying it can only burn the
+    retry budget on identical outcomes, so the policy must fail fast."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One seeded fault: fires on the hit indices in ``at`` (0-based count
+    of probes of its seam) or on every hit with ``always=True``."""
+    kind: str
+    at: tuple[int, ...] = ()
+    always: bool = False
+    seed: int = 0
+    fraction: float = 0.5       # truncate-file: keep this share of bytes
+    nbytes: int = 64            # corrupt-bytes: positions to flip
+    seconds: float = 0.01       # delay: sleep length
+    message: str = ""           # raise-*: extra context in the exception
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"fault kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        object.__setattr__(self, "at", tuple(int(i) for i in self.at))
+
+    def matches(self, hit: int) -> bool:
+        return self.always or hit in self.at
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class FaultPlan:
+    """Seam -> [FaultSpec] with per-seam hit counters and a fired log.
+
+    Counters live on the plan instance, so a fresh process (or a fresh
+    plan) replays the same schedule — determinism is the whole point.
+    """
+
+    def __init__(self, specs: dict[str, list[FaultSpec]] | None = None):
+        self.specs: dict[str, list[FaultSpec]] = {}
+        for seam, entries in (specs or {}).items():
+            self.add(seam, *entries)
+        self.hits: dict[str, int] = {}
+        self.fired: list[dict[str, Any]] = []
+
+    def add(self, seam: str, *entries: FaultSpec) -> "FaultPlan":
+        if seam not in SEAMS:
+            raise ValueError(f"unknown seam {seam!r}; registered seams: "
+                             f"{SEAMS}")
+        self.specs.setdefault(seam, []).extend(entries)
+        return self
+
+    # -- the probe ---------------------------------------------------------
+
+    def fire(self, seam: str, *, path: str | None = None,
+             arrays: Any | None = None, **ctx: Any) -> str | None:
+        """Count one probe of `seam`; perform and record any fault due on
+        this hit.  Returns the fired kind (raise-* kinds raise instead),
+        or None when nothing fired."""
+        hit = self.hits.get(seam, 0)
+        self.hits[seam] = hit + 1
+        fired_kind: str | None = None
+        for spec in self.specs.get(seam, ()):
+            if not spec.matches(hit):
+                continue
+            record = {"seam": seam, "kind": spec.kind, "hit": hit, **ctx}
+            self.fired.append(record)
+            obs.event("fault/inject", seam=seam, kind=spec.kind, hit=hit,
+                      **{k: v for k, v in ctx.items()
+                         if isinstance(v, (str, int, float, bool))})
+            self._act(spec, seam, hit, path=path, arrays=arrays)
+            fired_kind = spec.kind
+        return fired_kind
+
+    @staticmethod
+    def _act(spec: FaultSpec, seam: str, hit: int, *, path, arrays) -> None:
+        tail = f" at {seam} (hit {hit})" + \
+            (f": {spec.message}" if spec.message else "")
+        if spec.kind == "raise-transient":
+            raise TransientError("injected transient fault" + tail)
+        if spec.kind == "raise-deterministic":
+            raise DeterministicFault("injected deterministic fault" + tail)
+        if spec.kind == "delay":
+            time.sleep(spec.seconds)
+            return
+        if spec.kind == "budget-overflow":
+            return                      # the dispatcher interprets the probe
+        if spec.kind == "truncate-file":
+            if path is None:
+                raise ValueError(f"truncate-file{tail} needs a path= "
+                                 f"at the seam call site")
+            size = os.path.getsize(path)
+            os.truncate(path, int(size * spec.fraction))
+            return
+        if spec.kind == "corrupt-bytes":
+            if path is None:
+                raise ValueError(f"corrupt-bytes{tail} needs a path= "
+                                 f"at the seam call site")
+            rng = random.Random(spec.seed)
+            size = os.path.getsize(path)
+            with open(path, "r+b") as f:
+                for _ in range(min(spec.nbytes, size)):
+                    off = rng.randrange(size)
+                    f.seek(off)
+                    byte = f.read(1)
+                    f.seek(off)
+                    f.write(bytes([byte[0] ^ 0xFF]))
+            return
+        if spec.kind == "nan-poison":
+            if arrays is None:
+                raise ValueError(f"nan-poison{tail} needs arrays= "
+                                 f"at the seam call site")
+            import numpy as np            # lazy: only a firing poison pays
+            rng = random.Random(spec.seed)
+            items = (arrays.values() if isinstance(arrays, dict)
+                     else [arrays])
+            for arr in items:
+                arr = np.asarray(arr)
+                if arr.size == 0 or not np.issubdtype(arr.dtype,
+                                                      np.floating):
+                    continue
+                flat = arr.reshape(-1)
+                flat[rng.randrange(arr.size)] = np.nan
+            return
+
+    # -- persistence (the chaos drill ships plans as JSON) -----------------
+
+    def to_json(self) -> str:
+        return json.dumps({"specs": {
+            seam: [s.to_dict() for s in entries]
+            for seam, entries in self.specs.items()}}, indent=1)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        doc = json.loads(text)
+        plan = cls()
+        for seam, entries in (doc.get("specs") or {}).items():
+            for entry in entries:
+                plan.add(seam, FaultSpec(**entry))
+        return plan
+
+    @classmethod
+    def load(cls, path: str) -> "FaultPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+        return path
+
+    def summary(self) -> str:
+        n = sum(len(v) for v in self.specs.values())
+        return (f"{n} fault spec(s) over {len(self.specs)} seam(s): "
+                + ", ".join(f"{seam}[{len(v)}]"
+                            for seam, v in sorted(self.specs.items())))
+
+
+# -- module-global installation (mirrors obs.trace's channel) ---------------
+
+_PLAN: FaultPlan | None = None
+
+
+def install(plan: FaultPlan | None) -> FaultPlan | None:
+    """Install `plan` process-wide; returns the previous plan."""
+    global _PLAN
+    prev, _PLAN = _PLAN, plan
+    return prev
+
+
+def current() -> FaultPlan | None:
+    return _PLAN
+
+
+@contextlib.contextmanager
+def active(plan: FaultPlan) -> Iterator[FaultPlan]:
+    """Scoped install: the plan is live inside the block, restored after."""
+    prev = install(plan)
+    try:
+        yield plan
+    finally:
+        install(prev)
+
+
+def fire(seam: str, *, path: str | None = None, arrays: Any | None = None,
+         **ctx: Any) -> str | None:
+    """Probe a seam.  THE hot-path entry: with no plan installed this is a
+    single attribute load + None check — nothing allocated, nothing staged
+    (the zero-cost-off contract tests/test_resilience.py pins)."""
+    plan = _PLAN
+    if plan is None:
+        return None
+    return plan.fire(seam, path=path, arrays=arrays, **ctx)

@@ -1,0 +1,178 @@
+"""RetryPolicy — the ONE classified attempt loop.
+
+Before this module the repo had two hand-rolled retry loops (the sweep
+scheduler's inline ``while True`` and ``dist/elastic.retry_loop``), both
+of which replayed *any* exception immediately: a deterministic failure
+(NaN factor, bad shard, shape bug) burned the whole budget on identical
+replays, and transient failures hammered the faulty resource with no
+backoff.  :class:`RetryPolicy` fixes both:
+
+- **classification** — :class:`~repro.resilience.faults.TransientError`
+  subclasses (plus OSError/ConnectionError/TimeoutError and anything an
+  extensible ``classify`` predicate accepts) are retried; every other
+  exception fails fast via a bare ``raise``, preserving the original
+  traceback.
+- **bounded backoff, deterministically jittered** — attempt ``a`` sleeps
+  ``min(base_delay * 2**(a-1), max_delay) * (1 + jitter * u)`` where
+  ``u ∈ [-1, 1)`` comes from ``zlib.crc32(f"{seed}:{key}:{a}")`` — NOT
+  Python's per-process-randomized ``hash`` — so two runs of the same
+  sweep back off identically (reproducible wall-clock, reproducible
+  traces).
+- **per-attempt deadline** — with ``deadline`` set (or a ``deadline_fn``
+  supplied per call, e.g. the scheduler shrinking a straggler's next
+  attempt), the callable runs on a worker thread and a ``join(timeout)``
+  overrun raises :class:`DeadlineExceeded` (a TransientError: slow is
+  retryable).  ``deadline=None`` keeps execution inline — the default
+  path adds zero threads and zero overhead.
+
+``call`` returns ``(result, RetryStats)`` so callers (the scheduler's
+``UnitRecord``) can account attempts/backoff without re-deriving them
+from the trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import Any, Callable
+
+from repro.obs import trace as obs
+
+from .faults import TransientError
+
+__all__ = ["DeadlineExceeded", "RetryPolicy", "RetryStats"]
+
+# Exception families that are transient by construction: I/O and
+# connectivity flake, timeouts.  KeyboardInterrupt/SystemExit are
+# BaseException and never reach the classifier.
+_TRANSIENT_TYPES = (TransientError, OSError, ConnectionError, TimeoutError)
+
+
+class DeadlineExceeded(TransientError):
+    """An attempt overran its per-attempt deadline.  Transient: the retry
+    that follows gets a fresh (possibly shrunken) budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryStats:
+    """Accounting for one ``RetryPolicy.call``: how many attempts ran,
+    how long the policy slept between them, and whether a non-transient
+    error short-circuited the budget."""
+    attempts: int = 1
+    backoff_seconds: float = 0.0
+    fail_fast: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded, classified, deterministically-jittered retry.
+
+    max_attempts  total tries including the first (1 = no retry)
+    base_delay    backoff before attempt 2; doubles per attempt
+    max_delay     backoff ceiling
+    jitter        +/- fraction of the backoff drawn from the seeded hash
+    seed          jitter seed (same seed + key + attempt -> same sleep)
+    deadline      per-attempt wall-clock budget in seconds (None = off)
+    classify      extra predicate: return True to retry an exception the
+                  built-in taxonomy would fail fast on
+    """
+    max_attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 5.0
+    jitter: float = 0.25
+    seed: int = 0
+    deadline: float | None = None
+    classify: Callable[[BaseException], bool] | None = None
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, "
+                             f"got {self.max_attempts}")
+
+    # -- classification ----------------------------------------------------
+
+    def is_transient(self, err: BaseException) -> bool:
+        if isinstance(err, _TRANSIENT_TYPES):
+            return True
+        return bool(self.classify and self.classify(err))
+
+    # -- deterministic backoff ---------------------------------------------
+
+    def backoff(self, attempt: int, key: str = "") -> float:
+        """Sleep length before `attempt` (attempt 2 is the first retry).
+        Pure function of (seed, key, attempt) — crc32, not hash(), so it
+        is stable across processes and PYTHONHASHSEED."""
+        if attempt <= 1:
+            return 0.0
+        delay = min(self.base_delay * 2.0 ** (attempt - 2), self.max_delay)
+        u = zlib.crc32(f"{self.seed}:{key}:{attempt}".encode()) / 0xFFFFFFFF
+        return max(0.0, delay * (1.0 + self.jitter * (2.0 * u - 1.0)))
+
+    # -- the loop ----------------------------------------------------------
+
+    def call(self, fn: Callable[[int], Any], *, key: str = "",
+             on_retry: Callable[[int, BaseException, float], None]
+             | None = None,
+             deadline_fn: Callable[[int], float | None] | None = None,
+             sleep: Callable[[float], None] = time.sleep,
+             ) -> tuple[Any, RetryStats]:
+        """Run ``fn(attempt)`` (attempt is 0-based) under this policy.
+
+        on_retry(next_attempt, err, backoff) fires before each backoff
+        sleep; deadline_fn(attempt) overrides self.deadline per attempt
+        (the scheduler uses it to shrink a flagged straggler's budget).
+        Returns (result, RetryStats).  Non-transient errors and budget
+        exhaustion re-raise the ORIGINAL exception via bare `raise`.
+        """
+        backoff_total = 0.0
+        for attempt in range(self.max_attempts):
+            limit = (deadline_fn(attempt) if deadline_fn is not None
+                     else self.deadline)
+            try:
+                result = (_run_with_deadline(fn, attempt, limit)
+                          if limit is not None else fn(attempt))
+            except Exception as err:
+                if not self.is_transient(err):
+                    obs.event(
+                        "sched/fail_fast", key=key,  # rescal-lint: disable=key-discipline -- string label, not a PRNG key
+                        attempt=attempt + 1, error=type(err).__name__)
+                    raise           # original traceback, zero replays
+                if attempt + 1 >= self.max_attempts:
+                    raise           # budget exhausted
+                pause = self.backoff(attempt + 2, key)  # rescal-lint: disable=key-discipline -- string label, not a PRNG key
+                if on_retry is not None:
+                    on_retry(attempt + 1, err, pause)
+                if pause > 0.0:
+                    sleep(pause)
+                backoff_total += pause
+                continue
+            return result, RetryStats(attempts=attempt + 1,
+                                      backoff_seconds=backoff_total)
+        raise AssertionError("unreachable")     # pragma: no cover
+
+
+def _run_with_deadline(fn: Callable[[int], Any], attempt: int,
+                       limit: float) -> Any:
+    """Run fn(attempt) on a worker thread; join(limit) overrun raises
+    DeadlineExceeded.  The overrun thread is daemonized and abandoned —
+    callers' fns must be replay-safe anyway (they already are: every
+    retried unit restarts from its checkpoint)."""
+    import threading
+    box: dict[str, Any] = {}
+
+    def _target():
+        try:
+            box["result"] = fn(attempt)
+        except BaseException as err:        # noqa: BLE001 — relayed below
+            box["error"] = err
+
+    t = threading.Thread(target=_target, daemon=True,
+                         name=f"retry-attempt-{attempt}")
+    t.start()
+    t.join(limit)
+    if t.is_alive():
+        raise DeadlineExceeded(
+            f"attempt {attempt} exceeded its {limit:.3f}s deadline")
+    if "error" in box:
+        raise box["error"]
+    return box["result"]

@@ -43,6 +43,16 @@ class UnitRecord:
     peak_host_bytes: int | None = None
     peak_device_bytes: int | None = None
     kernel_fallbacks: int = 0
+    # resilience accounting (ISSUE 10; defaults keep older reports
+    # loadable): attempts = executions this run (0 when the unit was
+    # reused from a checkpoint; None in pre-resilience reports),
+    # backoff_seconds = total RetryPolicy sleep between attempts,
+    # fail_fast = a non-transient error ended the unit without consuming
+    # the retry budget.  check_trace.py --report cross-checks attempts
+    # against the sched/retry events in the trace.
+    attempts: int | None = None
+    backoff_seconds: float = 0.0
+    fail_fast: bool = False
 
 
 @dataclasses.dataclass

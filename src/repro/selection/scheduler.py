@@ -34,7 +34,6 @@ import dataclasses
 import json
 import os
 import time
-from typing import Callable
 
 import jax
 import numpy as np
@@ -46,6 +45,7 @@ from repro.core.rescal import rel_error
 from repro.core.silhouette import SilhouetteResult, silhouettes
 from repro.dist.elastic import StragglerMonitor, ensemble_plan
 from repro.obs import trace as obs
+from repro.resilience import RetryPolicy, faults
 
 from . import criteria
 from .ensemble import EnsembleResult, run_ensemble, run_sweep_batched
@@ -208,6 +208,8 @@ class UnitOutcome:
     seconds: float
     reused: bool
     retries: int
+    attempts: int = 1               # executions this run (0 when reused)
+    backoff: float = 0.0            # total RetryPolicy sleep, seconds
     straggler: bool = False         # flagged by the StragglerMonitor
     baseline: float | None = None   # monitor's median seconds at flag time
     peak_host: int | None = None    # host HWM bytes when the unit finished
@@ -238,12 +240,21 @@ class SweepScheduler:
         Deliberately NOT part of the checkpoint fingerprint — chunk uids
         encode their exact cell range, so re-chunking a sweep reuses only
         chunks whose contents truly coincide
-    max_retries : per-unit re-execution budget on failure
+    retry : the unit RetryPolicy (resilience.policy) — classified
+        transient-vs-deterministic errors, deterministic seeded backoff,
+        optional per-attempt deadline (straggler-shrunk on retries).
+        Fault injection goes through the `sched/unit` seam of a
+        `resilience.faults.FaultPlan` (which replaced the old ad-hoc
+        ``failure_injector`` callable)
+    max_retries : back-compat alias — ``RetryPolicy(max_attempts=
+        max_retries + 1)`` when ``retry`` is not given
     stop_after_units : compute at most this many units (checked before
         each execution; 0 = resume-only), then raise SweepInterrupted —
         the testing/CI hook for kill-and-resume drills
-    failure_injector : optional fn(unit, attempt) called before each
-        execution attempt — tests use it to inject faults and count runs
+    async_ckpt : write unit checkpoints on a background thread; the
+        previous write is joined (and any failure re-raised) at the next
+        checkpoint boundary, so a failed save can never silently age the
+        restore point
     report_path : write the SelectionReport JSON here after the sweep
     """
 
@@ -251,8 +262,9 @@ class SweepScheduler:
                  mesh=None, ckpt_dir: str | None = None,
                  criterion: str = "threshold", n_pods: int = 1,
                  grid_chunk: int | None = None,
+                 retry: RetryPolicy | None = None,
                  max_retries: int = 1, stop_after_units: int | None = None,
-                 failure_injector: Callable | None = None,
+                 async_ckpt: bool = False,
                  report_path: str | None = None, verbose: bool = False,
                  straggler_factor: float = 2.5):
         criteria.require(criterion)
@@ -271,9 +283,12 @@ class SweepScheduler:
         self.mesh = mesh
         self.ckpt_dir = ckpt_dir
         self.criterion = criterion
-        self.max_retries = max_retries
+        self.retry = (retry if retry is not None
+                      else RetryPolicy(max_attempts=max_retries + 1))
+        self.max_retries = self.retry.max_attempts - 1
         self.stop_after_units = stop_after_units
-        self.failure_injector = failure_injector
+        self.async_ckpt = async_ckpt
+        self._pending_save: ckpt.AsyncSave | None = None
         self.report_path = report_path
         self.verbose = verbose
         # flags units whose wall time blows past factor x the median of
@@ -361,11 +376,38 @@ class SweepScheduler:
         if ckpt.latest_step(tag) is None:
             return None
         with obs.span("sched/restore", uid=unit.uid):
-            tree, _ = ckpt.restore(tag, self._unit_like(X, unit))
+            try:
+                tree, _ = ckpt.restore(tag, self._unit_like(X, unit))
+            except ckpt.CheckpointError:
+                # every step of this unit's checkpoint failed verification
+                # (restore quarantined them + emitted ckpt/quarantine);
+                # fall through to recomputing the unit
+                return None
         if self.verbose:
             print(f"  [ckpt] reused {unit.uid}")
         return UnitOutcome(unit=unit, result=EnsembleResult(**tree),
-                           seconds=0.0, reused=True, retries=0)
+                           seconds=0.0, reused=True, retries=0, attempts=0)
+
+    def _unit_deadline(self, attempt: int) -> float | None:
+        """Per-attempt wall-clock budget.  The StragglerMonitor is a soft
+        signal into the policy: once the sweep has a baseline, a RETRIED
+        attempt's deadline shrinks to factor x the median unit time — a
+        unit that was slow enough to need a second try doesn't get to
+        wait out the full deadline again."""
+        limit = self.retry.deadline
+        if limit is None:
+            return None
+        base = self.stragglers.baseline
+        if attempt > 0 and base is not None:
+            limit = min(limit, self.stragglers.factor * base)
+        return limit
+
+    def _surface_pending_save(self) -> None:
+        """Join the in-flight async checkpoint write, re-raising any
+        background failure at this (the next) checkpoint boundary."""
+        handle, self._pending_save = self._pending_save, None
+        if handle is not None:
+            handle.join()
 
     def _execute_unit(self, X, unit: WorkUnit) -> UnitOutcome:
         # kernel-fallback attribution: ops.py bumps a process counter on
@@ -373,31 +415,35 @@ class SweepScheduler:
         # this unit's execution is its fallback count
         from repro.kernels.ops import kernel_fallbacks
         fb0 = kernel_fallbacks()
-        attempt = 0
-        while True:
-            try:
-                if self.failure_injector is not None:
-                    self.failure_injector(unit, attempt)
-                with obs.span("sched/execute", uid=unit.uid,
-                              attempt=attempt):
-                    t0 = time.perf_counter()
-                    if isinstance(unit, GridChunk):
-                        res = run_sweep_batched(X, unit.cells, self.cfg,
-                                                mesh=self.mesh)
-                    else:
-                        res = run_ensemble(X, unit.k, self.cfg,
-                                           members=unit.members,
-                                           mesh=self.mesh, mode=self.mode)
-                    jax.block_until_ready(res.A)
-                    dt = time.perf_counter() - t0
-                break
-            except Exception:
-                attempt += 1
-                obs.event("sched/retry", uid=unit.uid, attempt=attempt)
-                if attempt > self.max_retries:
-                    raise
-                if self.verbose:
-                    print(f"  [retry] {unit.uid} attempt {attempt}")
+        timing: dict[str, float] = {}
+
+        def _attempt(attempt: int):
+            faults.fire("sched/unit", uid=unit.uid, attempt=attempt)
+            with obs.span("sched/execute", uid=unit.uid, attempt=attempt):
+                t0 = time.perf_counter()
+                if isinstance(unit, GridChunk):
+                    res = run_sweep_batched(X, unit.cells, self.cfg,
+                                            mesh=self.mesh)
+                else:
+                    res = run_ensemble(X, unit.k, self.cfg,
+                                       members=unit.members,
+                                       mesh=self.mesh, mode=self.mode)
+                jax.block_until_ready(res.A)
+                timing["dt"] = time.perf_counter() - t0
+            return res
+
+        def _on_retry(next_attempt: int, err: BaseException,
+                      pause: float) -> None:
+            obs.event("sched/retry", uid=unit.uid, attempt=next_attempt,
+                      backoff=round(pause, 6), error=type(err).__name__)
+            if self.verbose:
+                print(f"  [retry] {unit.uid} attempt {next_attempt} after "
+                      f"{type(err).__name__} (backoff {pause:.3f}s)")
+
+        res, stats = self.retry.call(_attempt, key=unit.uid,
+                                     on_retry=_on_retry,
+                                     deadline_fn=self._unit_deadline)
+        dt = timing["dt"]
         # straggler flagging against the median of prior units; flagged
         # durations stay OUT of the baseline so one slow unit doesn't
         # normalize slowness for the rest of the sweep
@@ -410,14 +456,22 @@ class SweepScheduler:
                       baseline=baseline)
         if self.ckpt_dir:
             with obs.span("sched/checkpoint", uid=unit.uid):
-                ckpt.save(os.path.join(self.ckpt_dir, unit.uid), 0,
-                          res._asdict())
+                self._surface_pending_save()
+                tag = os.path.join(self.ckpt_dir, unit.uid)
+                if self.async_ckpt:
+                    self._pending_save = ckpt.save_async(tag, 0,
+                                                         res._asdict())
+                else:
+                    ckpt.save(tag, 0, res._asdict())
         # unit-boundary watermarks: kernel host HWM (cannot miss a spike)
         # + device allocator peak where the backend reports one.  Pure
         # host-side reads — nothing enters any traced program.
         from repro.obs.memory import device_watermark, read_host_memory
         return UnitOutcome(unit=unit, result=res, seconds=dt, reused=False,
-                           retries=attempt, straggler=straggler,
+                           retries=stats.attempts - 1,
+                           attempts=stats.attempts,
+                           backoff=stats.backoff_seconds,
+                           straggler=straggler,
                            baseline=baseline,
                            peak_host=read_host_memory().get("hwm_bytes"),
                            peak_device=device_watermark(),
@@ -475,7 +529,9 @@ class SweepScheduler:
                     UnitRecord(uid=o.unit.uid, k=k,
                                members=list(o.unit.members),
                                seconds=o.seconds, reused=o.reused,
-                               retries=o.retries, straggler=o.straggler,
+                               retries=o.retries, attempts=o.attempts,
+                               backoff_seconds=o.backoff,
+                               straggler=o.straggler,
                                baseline_seconds=o.baseline,
                                peak_host_bytes=o.peak_host,
                                peak_device_bytes=o.peak_device,
@@ -494,6 +550,9 @@ class SweepScheduler:
                 # really means "compute at most N" (0 = resume-only)
                 if (self.stop_after_units is not None
                         and executed >= self.stop_after_units):
+                    # make the last checkpoint durable before "dying":
+                    # the resume contract depends on it
+                    self._surface_pending_save()
                     raise SweepInterrupted(executed, pos, len(self.units),
                                            resumable=bool(self.ckpt_dir))
                 out = self._execute_unit(X_exec, unit)
@@ -508,6 +567,7 @@ class SweepScheduler:
                 records.append(UnitRecord(
                     uid=unit.uid, k=-1, members=[], seconds=out.seconds,
                     reused=out.reused, retries=out.retries,
+                    attempts=out.attempts, backoff_seconds=out.backoff,
                     cells=[list(c) for c in unit.cells],
                     straggler=out.straggler,
                     baseline_seconds=out.baseline,
@@ -529,6 +589,7 @@ class SweepScheduler:
             pending[unit.k].append(out)
             if len(pending[unit.k]) == expected[unit.k]:
                 reduce_ready(unit.k)
+        self._surface_pending_save()
 
         s_min = np.array([per_k[k].s_min for k in ks])
         s_mean = np.array([per_k[k].s_mean for k in ks])
@@ -539,6 +600,7 @@ class SweepScheduler:
                                rel_err=rel, k_opt=k_opt, per_k=per_k)
 
         meta = {"n_units": len(self.units),
+                "n_retries": sum(r.retries for r in records),
                 "n_stragglers": sum(1 for r in records if r.straggler),
                 "n_kernel_fallbacks": sum(r.kernel_fallbacks
                                           for r in records)}

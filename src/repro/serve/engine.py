@@ -19,10 +19,21 @@ Request path (every stage wears an obs span, zero-cost when untraced):
 
 Scores are `A[anchor] @ R_q @ A^T` rows reduced to (topk,) — descending,
 missing slots (topk > n) as (-inf, -1).
+
+Robustness (ISSUE 10): `ServeConfig.deadline` bounds each request's
+wall-clock and `ServeConfig.admit` bounds how many uncached keys one
+request may score; work past either bound is *shed* — those queries get
+the (-inf, -1) sentinel with ``shed=True``, a `serve/shed` event, and a
+counter in `stats()` — so an overloaded engine degrades by answering
+less, never by queueing unboundedly.  `reload()` hot-swaps a new
+digest-validated FactorBundle atomically (factors + cache swap only
+after the bundle fully validates, so a corrupt push can never leave the
+engine half-updated).
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import OrderedDict
 from typing import NamedTuple, Sequence
 
@@ -33,6 +44,7 @@ import numpy as np
 from repro.kernels import ops
 from repro.kernels.policy import KernelPolicy
 from repro.obs import trace as obs
+from repro.resilience import faults
 
 from .bundle import FactorBundle
 
@@ -49,6 +61,7 @@ class QueryResult(NamedTuple):
     scores: np.ndarray     # (topk,) f32, descending
     indices: np.ndarray    # (topk,) i32, -1 past n
     cached: bool
+    shed: bool = False     # dropped under deadline/admission pressure
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +71,8 @@ class ServeConfig:
     cache_entries: int = 4096    # 0 disables the hot-head LRU
     pn: int | None = None        # score_topk panel length (None = default)
     kernel: KernelPolicy = KernelPolicy()
+    deadline: float | None = None  # per-request wall-clock budget, seconds
+    admit: int | None = None     # max uncached keys scored per request
 
 
 class ServeEngine:
@@ -74,6 +89,7 @@ class ServeEngine:
         self._cache: OrderedDict[tuple, tuple] = OrderedDict()
         self.hits = self.misses = self.evictions = 0
         self.batches = 0
+        self.sheds = self.reloads = 0
 
         topk, impl, pn = cfg.topk, cfg.kernel.impl, cfg.pn
 
@@ -124,10 +140,20 @@ class ServeEngine:
         self.batches += 1
         return [(s[j], i[j]) for j in range(len(keys))]
 
+    def _shed_sentinel(self) -> tuple[np.ndarray, np.ndarray]:
+        return (np.full(self.cfg.topk, -np.inf, np.float32),
+                np.full(self.cfg.topk, -1, np.int32))
+
     def query(self, queries: Sequence[Query]) -> list[QueryResult]:
         """Answer a request of queries; any count compiles ZERO new
-        programs after the first batch (pad-and-mask to cfg.batch)."""
+        programs after the first batch (pad-and-mask to cfg.batch).
+
+        Overload degrades, never queues: uncached keys past cfg.admit —
+        and chunks that would start after cfg.deadline has elapsed — are
+        shed with the (-inf, -1) sentinel and ``shed=True``."""
         with obs.span("serve/request", n=len(queries)):
+            faults.fire("serve/request", n=len(queries))
+            t0 = time.perf_counter()
             results: list[QueryResult | None] = [None] * len(queries)
             pending: OrderedDict[tuple, list[int]] = OrderedDict()
             for i, q in enumerate(queries):
@@ -146,19 +172,62 @@ class ServeEngine:
                     self.misses += 1
                     pending.setdefault(key, []).append(i)
             uniq = list(pending)
+            shed_keys: list[tuple] = []
+            admit = self.cfg.admit
+            if admit is not None and len(uniq) > admit:
+                uniq, shed_keys = uniq[:admit], uniq[admit:]
             for c0 in range(0, len(uniq), self.cfg.batch):
+                if (self.cfg.deadline is not None
+                        and time.perf_counter() - t0 > self.cfg.deadline):
+                    shed_keys.extend(uniq[c0:])
+                    break
                 chunk = uniq[c0:c0 + self.cfg.batch]
                 for key, out in zip(chunk, self._score_chunk(chunk)):
                     self._cache_put(key, out)
                     for i in pending[key]:
                         results[i] = QueryResult(out[0], out[1], False)
+            if shed_keys:
+                sent = self._shed_sentinel()
+                n_shed = 0
+                for key in shed_keys:
+                    for i in pending[key]:
+                        results[i] = QueryResult(sent[0], sent[1], False,
+                                                 True)
+                        n_shed += 1
+                self.sheds += n_shed
+                obs.event("serve/shed", queries=n_shed,
+                          keys=len(shed_keys),
+                          elapsed=round(time.perf_counter() - t0, 6))
             obs.event("serve/cache", hits=self.hits, misses=self.misses,
                       evictions=self.evictions, size=len(self._cache))
         return results      # type: ignore[return-value]
 
+    # -- hot reload --------------------------------------------------------
+
+    def reload(self, bundle_dir: str) -> FactorBundle:
+        """Hot-swap the factors from a new on-disk bundle.  The load is
+        digest-validated (FactorBundle.load re-derives the sha1 and
+        raises BundleError on mismatch) and the swap is atomic from the
+        engine's point of view: factors, dims, and cache all change only
+        after the new bundle fully validates — a corrupt push leaves the
+        engine serving the old factors untouched."""
+        with obs.span("serve/reload", path=bundle_dir):
+            new = FactorBundle.load(bundle_dir)             # may raise
+            A = jnp.asarray(new.A, jnp.float32)
+            R = jnp.asarray(new.R, jnp.float32)
+            # commit point — nothing before this mutated engine state
+            self.bundle, self.A, self.R = new, A, R
+            self.n, self.k, self.m = new.n, new.k, new.m
+            self._cache.clear()
+            self.reloads += 1
+            obs.event("serve/reload", digest=new.digest(), n=new.n,
+                      k=new.k, m=new.m)
+        return new
+
     def stats(self) -> dict:
         return {"hits": self.hits, "misses": self.misses,
                 "evictions": self.evictions, "batches": self.batches,
+                "sheds": self.sheds, "reloads": self.reloads,
                 "cache_size": len(self._cache)}
 
 

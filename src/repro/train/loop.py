@@ -3,8 +3,13 @@
 The loop is restart-identical by construction: the data pipeline is a pure
 function of the step index and checkpoints capture (params, opt, step), so
 `resume -> replay` reproduces the exact trajectory (tested in
-tests/test_fault_tolerance.py).  `failure_injector` lets tests (and chaos
-drills) raise at chosen steps to exercise the restart path.
+tests/test_fault_tolerance.py).  Fault injection goes through the
+`train/step` seam of a `resilience.faults.FaultPlan` (which replaced the
+old ad-hoc ``failure_injector`` callable), and restarts are *classified*:
+only transient errors (``resilience.TransientError`` and the policy's
+built-in taxonomy) trigger restore-and-replay — a deterministic failure
+would replay identically, so it raises immediately with its original
+traceback instead of burning the restart budget.
 """
 from __future__ import annotations
 
@@ -18,6 +23,8 @@ from repro import ckpt
 from repro.dist.elastic import StragglerMonitor
 from repro.obs import trace as obs
 from repro.optim import AdamW
+from repro.resilience import RetryPolicy, faults
+
 from .train_step import TrainState, init_state, make_train_step
 
 
@@ -30,19 +37,25 @@ class LoopConfig:
     max_restarts: int = 3
     straggler_factor: float = 2.5
     seed: int = 0
+    # write checkpoints on a background thread; the previous write is
+    # joined (re-raising any failure) at the next save boundary
+    async_save: bool = False
 
 
 def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
                mesh=None, optimizer: AdamW | None = None,
                remat: bool = True, moe_impl: str = "einsum",
-               failure_injector: Callable[[int], None] | None = None,
+               retry: RetryPolicy | None = None,
                verbose: bool = False) -> tuple[TrainState, list[dict]]:
     """Run `loop.steps` steps of `cfg` with checkpoint/restart.
 
     batch_fn(step) -> batch pytree (pure function of step — determinism is
-    what makes restart replay exact).
+    what makes restart replay exact).  `retry` supplies the error
+    classifier and the deterministic backoff between restarts (attempts
+    come from loop.max_restarts, not the policy's own budget).
     """
     optimizer = optimizer or AdamW()
+    policy = retry or RetryPolicy()
     step_fn = make_train_step(cfg, mesh, optimizer=optimizer, remat=remat,
                               moe_impl=moe_impl)
 
@@ -56,6 +69,21 @@ def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
             return state, step
         return fresh_state(), 0
 
+    pending: list[ckpt.AsyncSave] = []
+
+    def surface_pending() -> None:
+        # a failed background save surfaces HERE, at the next checkpoint
+        # boundary — it must not silently age the restore point
+        while pending:
+            pending.pop().join()
+
+    def save_state(step: int, state: TrainState) -> None:
+        surface_pending()
+        if loop.async_save:
+            pending.append(ckpt.save_async(loop.ckpt_dir, step, state))
+        else:
+            ckpt.save(loop.ckpt_dir, step, state)
+
     state, start = try_restore()
     monitor = StragglerMonitor(factor=loop.straggler_factor)
     history: list[dict] = []
@@ -63,8 +91,7 @@ def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
     step = start
     while step < loop.steps:
         try:
-            if failure_injector:
-                failure_injector(step)
+            faults.fire("train/step", step=step)
             t0 = time.perf_counter()
             state, metrics = step_fn(state, batch_fn(step))
             metrics = {k: float(v) for k, v in metrics.items()}
@@ -85,12 +112,19 @@ def train_loop(cfg, batch_fn: Callable[[int], Any], loop: LoopConfig, *,
                 print(f"[train] step={step} {head} ({dt*1e3:.0f} ms)")
             step += 1
             if loop.ckpt_dir and step % loop.save_every == 0:
-                ckpt.save(loop.ckpt_dir, step, state)
-        except Exception:            # noqa: BLE001 — supervised restart
+                save_state(step, state)
+        except Exception as err:     # noqa: BLE001 — classified below
             restarts += 1
-            if restarts > loop.max_restarts or not loop.ckpt_dir:
+            if (not policy.is_transient(err) or not loop.ckpt_dir
+                    or restarts > loop.max_restarts):
                 raise
+            obs.event("train/restart", step=step, restarts=restarts,
+                      error=type(err).__name__)
+            pause = policy.backoff(restarts + 1, key="train")
+            if pause > 0.0:
+                time.sleep(pause)
             state, step = try_restore()
     if loop.ckpt_dir:
-        ckpt.save(loop.ckpt_dir, step, state)
+        save_state(step, state)
+        surface_pending()
     return state, history

@@ -1,0 +1,26 @@
+"""Bad: every way the seam registry and the code can disagree —
+a dead seam, an unregistered injection point, a duplicated call site,
+and a computed (non-literal) seam name."""
+from repro.resilience import faults
+
+SEAMS = ("fix/one", "fix/two", "fix/dead")
+
+
+def probe_one():
+    faults.fire("fix/one")
+
+
+def probe_one_again():
+    faults.fire("fix/one")      # second site for the same seam
+
+
+def probe_two():
+    faults.fire("fix/two")
+
+
+def probe_unregistered():
+    faults.fire("fix/unknown")
+
+
+def probe_computed(seam):
+    faults.fire(seam)

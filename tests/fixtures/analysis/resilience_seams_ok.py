@@ -1,0 +1,13 @@
+"""Near miss: registry and code agree — every registered seam fires at
+exactly one literal call site, through an import alias."""
+from repro.resilience import faults as _faults
+
+SEAMS = ("fix/one", "fix/two")
+
+
+def probe_one():
+    _faults.fire("fix/one", step=3)
+
+
+def probe_two():
+    _faults.fire("fix/two")

@@ -49,7 +49,11 @@ class TestCheckpoint:
             ckpt.restore(str(tmp_path), {})
 
     def test_shape_mismatch_raises(self, key, tmp_path):
+        """A `like` that disagrees with the stored shapes is a caller
+        error (typed CheckpointError), NOT file corruption — the step
+        must not be quarantined."""
         ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
-        with pytest.raises(AssertionError):
+        with pytest.raises(ckpt.CheckpointError, match="shape"):
             ckpt.restore(str(tmp_path), {"w": jax.ShapeDtypeStruct(
                 (5,), jnp.float32)})
+        assert not [f for f in os.listdir(tmp_path) if ".corrupt" in f]

@@ -7,6 +7,7 @@ from repro.data import TokenStreamConfig, batch_at
 from repro.dist.elastic import (StragglerMonitor, choose_grid, ensemble_plan,
                                 retry_loop)
 from repro.optim import AdamW
+from repro.resilience import FaultPlan, FaultSpec, faults
 from repro.train import LoopConfig, train_loop
 
 
@@ -37,7 +38,9 @@ class TestEnsemblePlan:
 
 
 class TestRetryLoop:
-    def test_replays_from_restore_point(self):
+    def test_replays_from_restore_point_and_warns_deprecated(self):
+        """retry_loop still works for one release, but only under its
+        DeprecationWarning pointing at resilience.RetryPolicy."""
         executed = []
         fail_once = {"armed": True}
 
@@ -47,7 +50,8 @@ class TestRetryLoop:
                 raise RuntimeError("injected")
             executed.append(i)
 
-        retry_loop(run, range(6), restore=lambda: 2)
+        with pytest.warns(DeprecationWarning, match="RetryPolicy"):
+            retry_loop(run, range(6), restore=lambda: 2)
         assert executed == [0, 1, 2, 3, 4, 5] or executed == \
             [0, 1, 2, 2, 3, 4, 5]
 
@@ -67,15 +71,17 @@ class TestTrainLoopRestart:
                            save_every=3, seed=0, max_restarts=0)
         _, hist_clean = train_loop(cfg, batch_fn, clean, **loop_kw)
 
-        boom = {"armed": True}
-        def injector(step):
-            if step == 5 and boom["armed"]:
-                boom["armed"] = False
-                raise RuntimeError("chaos")
+        # hit 5 of the train/step seam = step 5's first execution; after
+        # the restore to step 3, the replayed steps are NEW probes (hits
+        # 6, 7, 8), so the fault fires exactly once — the deterministic
+        # FaultPlan replacement for the old failure_injector callable
+        plan = FaultPlan({"train/step": [
+            FaultSpec(kind="raise-transient", at=(5,), message="chaos")]})
         faulty = LoopConfig(steps=8, ckpt_dir=str(tmp_path / "faulty"),
                             save_every=3, seed=0, max_restarts=2)
-        _, hist_fault = train_loop(cfg, batch_fn, faulty,
-                                   failure_injector=injector, **loop_kw)
+        with faults.active(plan):
+            _, hist_fault = train_loop(cfg, batch_fn, faulty, **loop_kw)
+        assert [f["hit"] for f in plan.fired] == [5]
 
         clean_losses = {h["step"]: h["loss"] for h in hist_clean}
         fault_losses = {h["step"]: h["loss"] for h in hist_fault}

@@ -482,11 +482,10 @@ class TestGridSweep:
                            ckpt_dir=d, stop_after_units=1).run(X)
         assert ei.value.executed == 1
 
-        executed = []
-        sched = SweepScheduler(
-            self.CFG, mode="grid", grid_chunk=5, ckpt_dir=d,
-            failure_injector=lambda u, a: executed.append(u.uid))
+        sched = SweepScheduler(self.CFG, mode="grid", grid_chunk=5,
+                               ckpt_dir=d)
         res = sched.run(X)
+        executed = [u.uid for u in sched.report.units if not u.reused]
         assert len(executed) == 2            # 3 chunks, 1 checkpointed
         assert sched.report.n_reused == 1
         fresh = SweepScheduler(self.CFG, mode="grid", grid_chunk=5).run(X)
@@ -586,14 +585,18 @@ class TestSchedulerResume:
             SweepScheduler(self.CFG, ckpt_dir=d, stop_after_units=1).run(X)
         assert ei.value.executed == 1
 
-        executed = []
-        sched = SweepScheduler(
-            self.CFG, ckpt_dir=d,
-            failure_injector=lambda unit, attempt: executed.append(unit.uid))
+        sched = SweepScheduler(self.CFG, ckpt_dir=d)
         res = sched.run(X)
         # 2 units total; the checkpointed one must NOT be recomputed
+        executed = [u.uid for u in sched.report.units if not u.reused]
         assert len(executed) == 1
         assert sched.report.n_reused == 1
+        # resilience accounting: a reused unit ran 0 attempts, a computed
+        # one exactly 1 — the fields check_trace.py cross-checks
+        assert {u.attempts for u in sched.report.units
+                if u.reused} == {0}
+        assert {u.attempts for u in sched.report.units
+                if not u.reused} == {1}
         # resumed result identical to an uncheckpointed run (float32
         # checkpoints round-trip exactly)
         fresh = SweepScheduler(self.CFG).run(X)
@@ -608,11 +611,9 @@ class TestSchedulerResume:
         with pytest.raises(SweepInterrupted):
             SweepScheduler(self.CFG, mode="loop", ckpt_dir=d,
                            stop_after_units=3).run(X)
-        executed = []
-        sched = SweepScheduler(
-            self.CFG, mode="loop", ckpt_dir=d,
-            failure_injector=lambda u, a: executed.append(u.uid))
+        sched = SweepScheduler(self.CFG, mode="loop", ckpt_dir=d)
         sched.run(X)
+        executed = [u.uid for u in sched.report.units if not u.reused]
         assert len(executed) == 4 - 3     # 2 ks x 2 members, 3 done
 
     def test_stop_on_final_unit_completes(self, tmp_path):
@@ -646,35 +647,58 @@ class TestSchedulerResume:
 
 
 class TestRetry:
+    """Unit retry now goes through resilience.RetryPolicy, with faults
+    injected at the `sched/unit` seam of a FaultPlan (the old ad-hoc
+    failure_injector callable is gone)."""
+
     CFG = RescalkConfig(k_min=2, k_max=2, n_perturbations=2,
                         rescal_iters=30, regress_iters=20, seed=1)
 
+    def _policy(self, max_retries):
+        # near-zero backoff: these tests assert behaviour, not pacing
+        from repro.resilience import RetryPolicy
+        return RetryPolicy(max_attempts=max_retries + 1, base_delay=1e-4)
+
     def test_transient_failure_is_retried(self):
+        from repro.resilience import FaultPlan, FaultSpec, faults
         X = small_tensor()
-        boom = {"armed": True}
-
-        def injector(unit, attempt):
-            if boom["armed"]:
-                boom["armed"] = False
-                raise RuntimeError("injected")
-
-        sched = SweepScheduler(self.CFG, max_retries=1,
-                               failure_injector=injector)
-        res = sched.run(X)
-        assert sched.report.units[0].retries == 1
+        plan = FaultPlan({"sched/unit": [
+            FaultSpec(kind="raise-transient", at=(0,))]})
+        sched = SweepScheduler(self.CFG, retry=self._policy(1))
+        with faults.active(plan):
+            res = sched.run(X)
+        unit = sched.report.units[0]
+        assert (unit.retries, unit.attempts) == (1, 2)
+        assert unit.backoff_seconds > 0.0
+        assert plan.hits["sched/unit"] == 2   # failed attempt + replay
         clean = SweepScheduler(self.CFG).run(X)
         np.testing.assert_array_equal(res.per_k[2].member_errors,
                                       clean.per_k[2].member_errors)
 
     def test_budget_exhausted_raises(self):
+        from repro.resilience import FaultPlan, FaultSpec, TransientError
+        from repro.resilience import faults
         X = small_tensor()
+        plan = FaultPlan({"sched/unit": [
+            FaultSpec(kind="raise-transient", always=True,
+                      message="persistent")]})
+        with faults.active(plan):
+            with pytest.raises(TransientError, match="persistent"):
+                SweepScheduler(self.CFG, retry=self._policy(2)).run(X)
+        assert plan.hits["sched/unit"] == 3   # max_attempts, then raise
 
-        def injector(unit, attempt):
-            raise RuntimeError("persistent")
-
-        with pytest.raises(RuntimeError, match="persistent"):
-            SweepScheduler(self.CFG, max_retries=2,
-                           failure_injector=injector).run(X)
+    def test_deterministic_fault_fails_fast(self):
+        """A non-transient error must not burn the retry budget: one
+        attempt, the original exception, no replays."""
+        from repro.resilience import (DeterministicFault, FaultPlan,
+                                      FaultSpec, faults)
+        X = small_tensor()
+        plan = FaultPlan({"sched/unit": [
+            FaultSpec(kind="raise-deterministic", at=(0,))]})
+        with faults.active(plan):
+            with pytest.raises(DeterministicFault):
+                SweepScheduler(self.CFG, retry=self._policy(3)).run(X)
+        assert plan.hits["sched/unit"] == 1
 
 
 class TestReport:

@@ -217,7 +217,8 @@ class TestServeEngine:
         second = engine.query(q)[0]
         assert not first.cached and second.cached
         assert engine.stats() == {"hits": 1, "misses": 1, "evictions": 0,
-                                  "batches": 1, "cache_size": 1}
+                                  "batches": 1, "cache_size": 1,
+                                  "sheds": 0, "reloads": 0}
         np.testing.assert_array_equal(first.scores, second.scores)
 
     def test_lru_eviction_accounted(self):
